@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: solve-and-report across solver modes.
+
+Every table prints CSV to stdout and returns rows so ``benchmarks.run``
+can aggregate into bench_output.txt.  GF/s figures are model-predicted
+throughput (useful FLOPs / plan latency) on the TPU hardware model — the
+analogue of the paper's RTL-simulated GF/s.
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import sys
+import time
+
+from repro.core import (ONE_SLICE, THREE_SLICE, SolverOptions, polybench,
+                        solve)
+from repro.core.resources import ONE_SLICE_60, THREE_SLICE_60
+
+MODES = ("prometheus", "sisyphus", "streamhls", "autodse")
+
+# Hardware per mode for the RTL-sim analogue (Table 6): every framework may
+# use the whole board, but only SLR-aware Prometheus can span multiple
+# slices (the paper: "they are constrained to a single SLR").
+def hw_for(mode: str):
+    return THREE_SLICE if mode == "prometheus" else ONE_SLICE
+
+
+def solve_kernel(name: str, mode: str, *, scale: int = polybench.TPU_SCALE,
+                 budget: float = 12.0, hw=None, seed: int = 0):
+    g = polybench.build(name, scale=scale)
+    opts = SolverOptions(mode=mode, time_budget_s=budget, seed=seed)
+    t0 = time.monotonic()
+    plan = solve(g, hw if hw is not None else hw_for(mode), opts)
+    plan.solver_seconds = time.monotonic() - t0
+    return plan
+
+
+def fmt_row(cells) -> str:
+    return ",".join(str(c) for c in cells)
+
+
+class Table:
+    def __init__(self, title: str, header: list[str]):
+        self.title = title
+        self.header = header
+        self.rows: list[list] = []
+
+    def add(self, *cells):
+        self.rows.append(list(cells))
+
+    def render(self) -> str:
+        out = [f"# {self.title}", fmt_row(self.header)]
+        out += [fmt_row(r) for r in self.rows]
+        return "\n".join(out) + "\n"
+
+    def show(self):
+        print(self.render(), flush=True)
+        return self

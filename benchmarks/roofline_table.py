@@ -1,0 +1,51 @@
+"""Roofline table (deliverable g): per (arch x shape x mesh) three-term
+roofline from the dry-run artifacts in experiments/dryrun/.
+
+Reads the JSON the 512-device dry-run wrote; does not itself need fake
+devices.  Run ``python -m repro.launch.dryrun --all --mesh both`` first.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Table
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> list[dict]:
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if not fn.endswith(f"_{mesh}{('_' + tag) if tag else ''}.json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, fn)) as f:
+            cells.append(json.load(f))
+    return [c for c in cells if not tag or c.get("tag") == tag]
+
+
+def run(mesh: str = "single") -> Table:
+    t = Table(f"Roofline — per (arch x shape), {mesh}-pod mesh "
+              f"({256 if mesh == 'single' else 512} chips)",
+              ["arch", "shape", "t_compute_s", "t_memory_s",
+               "t_collective_s", "bound", "useful_ratio",
+               "roofline_fraction"])
+    cells = load_cells(mesh)
+    if not cells:
+        t.add("(no dry-run artifacts found — run "
+              "python -m repro.launch.dryrun --all --mesh both)", "",
+              "", "", "", "", "", "")
+        return t
+    for c in cells:
+        t.add(c["arch"], c["shape"],
+              f"{c['t_compute_s']:.3e}", f"{c['t_memory_s']:.3e}",
+              f"{c['t_collective_s']:.3e}", c["bound"],
+              f"{c['useful_ratio']:.3f}",
+              f"{c['roofline_fraction']:.4f}")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,54 @@
+"""Table 7 analogue: performance + resource utilisation, Prometheus vs
+Sisyphus-mode.
+
+FPGA resource columns map to the TPU budget terms the NLP constrains:
+  DSP%   -> compute occupancy (padded FLOPs over the plan's compute window)
+  BRAM%  -> peak VMEM occupancy across tasks (buffers x footprints)
+  pad%   -> padded-vs-useful FLOP overhead (padding-for-computation cost)
+Double buffering shows up exactly as the paper observes: Prometheus uses
+MORE on-chip memory (ping-pong buffers) to buy overlap.
+"""
+from __future__ import annotations
+
+from repro.core.resources import VMEM_BYTES
+
+from .common import Table, solve_kernel
+
+KERNELS = ["madd", "2-madd", "3-madd", "2mm", "3mm", "gemm", "gemver",
+           "mvt"]
+
+
+def _resources(plan) -> dict:
+    vmem_peak = max(r.vmem_bytes for r in plan.reports.values())
+    compute_s = sum(r.compute_s for r in plan.reports.values())
+    pad = sum(r.padded_flops for r in plan.reports.values()) / \
+        max(sum(r.useful_flops for r in plan.reports.values()), 1e-9)
+    return {
+        "vmem_pct": 100.0 * vmem_peak / VMEM_BYTES,
+        "compute_occ_pct": 100.0 * compute_s / max(plan.latency_s, 1e-12)
+        / max(len({c.slice_id for c in plan.configs.values()}), 1),
+        "pad_overhead_pct": 100.0 * (pad - 1.0),
+    }
+
+
+def run(budget: float = 12.0) -> Table:
+    t = Table("Table 7 — resources: Prometheus vs Sisyphus-mode",
+              ["kernel",
+               "pro_GF/s", "pro_vmem%", "pro_occ%", "pro_pad%",
+               "sis_GF/s", "sis_vmem%", "sis_occ%", "sis_pad%"])
+    for name in KERNELS:
+        pro = solve_kernel(name, "prometheus", budget=budget)
+        sis = solve_kernel(name, "sisyphus", budget=budget)
+        rp, rs = _resources(pro), _resources(sis)
+        t.add(name,
+              f"{pro.gflops:.1f}", f"{rp['vmem_pct']:.1f}",
+              f"{rp['compute_occ_pct']:.0f}",
+              f"{rp['pad_overhead_pct']:.2f}",
+              f"{sis.gflops:.1f}", f"{rs['vmem_pct']:.1f}",
+              f"{rs['compute_occ_pct']:.0f}",
+              f"{rs['pad_overhead_pct']:.2f}")
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

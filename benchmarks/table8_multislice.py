@@ -1,0 +1,33 @@
+"""Table 8 analogue: on-board 1-slice vs 3-slice evaluation.
+
+The paper's on-board scenario: 60% utilisation per SLR, 1 SLR vs all 3.
+Expected reproduction (paper §6.3): compute-bound 2mm/3mm gain from three
+slices; memory-bound atax/bicg don't (the DRAM system is shared — the
+slice model's bandwidth pool, resources.py).
+"""
+from __future__ import annotations
+
+from repro.core.resources import ONE_SLICE_60, THREE_SLICE_60
+
+from .common import Table, solve_kernel
+
+KERNELS = ["2mm", "3mm", "atax", "bicg"]
+
+
+def run(budget: float = 12.0) -> Table:
+    t = Table("Table 8 — 1-slice vs 3-slice (60% budget per slice)",
+              ["kernel", "1slr_GF/s", "3slr_GF/s", "speedup",
+               "3slr_slices_used"])
+    for name in KERNELS:
+        one = solve_kernel(name, "prometheus", budget=budget,
+                           hw=ONE_SLICE_60)
+        three = solve_kernel(name, "prometheus", budget=budget,
+                             hw=THREE_SLICE_60)
+        used = len({c.slice_id for c in three.configs.values()})
+        t.add(name, f"{one.gflops:.1f}", f"{three.gflops:.1f}",
+              f"{one.latency_s / three.latency_s:.2f}x", used)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,39 @@
+"""Table 9 analogue: the NLP's chosen fusion, loop order and data-tile
+sizes for the on-board kernels (1 slice)."""
+from __future__ import annotations
+
+from repro.core.costmodel import footprint_elems
+from repro.core.fusion import fuse
+from repro.core import polybench
+from repro.core.resources import ONE_SLICE_60
+
+from .common import Table, solve_kernel
+
+KERNELS = ["2mm", "3mm", "atax", "bicg"]
+
+
+def run(budget: float = 12.0) -> Table:
+    t = Table("Table 9 — NLP-chosen plans (fusion / loop order / tiles)",
+              ["kernel", "task", "fused_stmts", "loop_order", "tiles",
+               "data_tiles(elems)"])
+    for name in KERNELS:
+        plan = solve_kernel(name, "prometheus", budget=budget,
+                            hw=ONE_SLICE_60)
+        fg = fuse(polybench.build(name, scale=polybench.TPU_SCALE))
+        for task in fg.tasks:
+            cfg = plan.configs[task.tid]
+            stmts = "+".join(s.name for s in task.statements)
+            order = ">".join(cfg.perm)
+            tiles = " ".join(
+                f"{l}:{ti.tile}" + (f"(pad{ti.pad})" if ti.pad else "")
+                for l, ti in cfg.tiles.items())
+            fps = " ".join(
+                f"{a}:{footprint_elems(cfg, task, a, cfg.placements[a].transfer_level)}"
+                for a in task.read_arrays() + [task.output_array]
+                if a in cfg.placements)
+            t.add(name, f"FT{task.tid}", stmts, order, tiles, fps)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

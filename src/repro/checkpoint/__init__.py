@@ -1,0 +1,4 @@
+from . import io
+from .manager import CheckpointManager
+
+__all__ = ["io", "CheckpointManager"]

@@ -1,0 +1,61 @@
+"""Checkpoint manager: rotation + async save thread.
+
+The async path snapshots leaves to host memory synchronously (cheap —
+device->host copy) and writes files on a daemon thread, so the train loop
+resumes immediately; ``wait()`` joins before exit or before a dependent
+restore.  At scale this is the standard trick to hide multi-GB writes
+behind compute.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+
+from . import io
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._saved: list[int] = []
+        existing = io.latest_step(directory)
+        if existing is not None:
+            self._saved.append(existing)
+
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def _write(self, step: int, host_tree) -> None:
+        io.save(self.directory, step, host_tree)
+        self._saved.append(step)
+        while len(self._saved) > self.keep:
+            io.remove(self.directory, self._saved.pop(0))
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def latest_step(self) -> int | None:
+        self.wait()
+        return io.latest_step(self.directory)
+
+    def restore(self, like, shardings=None, step: int | None = None):
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return io.restore(self.directory, step, like, shardings), step

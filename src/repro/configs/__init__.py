@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (x10) — selectable via --arch <id>."""
+from .base import get_config, list_archs, smoke
+
+__all__ = ["get_config", "list_archs", "smoke"]

@@ -1,0 +1,4 @@
+"""Import every arch module so the registry is populated."""
+from . import (recurrentgemma_9b, qwen3_moe_235b_a22b, mixtral_8x7b,
+               musicgen_medium, qwen1_5_0_5b, yi_34b, qwen1_5_32b,
+               qwen3_0_6b, rwkv6_1_6b, internvl2_76b)  # noqa: F401

@@ -1,0 +1,66 @@
+"""Config registry + smoke-test reduction.
+
+Each assigned architecture lives in its own module defining ``CONFIG``
+(exact published dimensions) — selectable via ``--arch <id>``.  ``smoke()``
+shrinks any config to a CPU-runnable size preserving its family structure
+(pattern, ffn kind, gqa ratio, biases/norms), used by per-arch smoke tests.
+
+Head-count padding entries implement the paper's padding-for-computation
+for tensor-parallel divisibility (DESIGN.md §5); padded heads are real
+parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..models.model import ModelConfig
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    assert cfg.name not in _REGISTRY, cfg.name
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    from . import _load_all      # noqa: F401  (populate registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    from . import _load_all      # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def smoke(cfg: ModelConfig, *, seq_friendly: bool = True) -> ModelConfig:
+    """Reduced config of the same family for CPU smoke tests."""
+    n_pat = len(cfg.pattern)
+    layers = n_pat + (1 if cfg.n_layers % n_pat else 0) + n_pat
+    heads = max(2, min(4, cfg.n_heads))
+    kv = max(1, min(heads, round(heads * cfg.n_kv_heads / cfg.n_heads)))
+    head_dim = 16
+    d_model = 64
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=96,
+        vocab=128,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        window=16 if cfg.window else None,
+        d_rnn=d_model if cfg.d_rnn else 0,
+        attn_chunk=16,
+        loss_chunk=64,
+        pad_heads_to=None,
+        pad_kv_heads_to=None,
+        rope_theta=1e4,
+    )

@@ -1,0 +1,16 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone.
+
+80L d_model=8192 64H (GQA kv=8, head_dim=128) d_ff=28672 vocab=128256
+[arXiv:2404.16821].  Backbone only: the ViT frontend is a STUB —
+input_specs() provides precomputed patch+text embeddings (B, S, d_model).
+kv=8 < 16 -> KV replicated across model shards.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-76b",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=128256,
+    embed_input=False, rope_theta=5e5,
+))

@@ -1,0 +1,16 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8, head_dim=128) d_ff=14336 vocab=32000,
+SWA window 4096 [arXiv:2401.04088].  long_500k runs: the SWA KV cache is
+bounded by the window.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x7b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=32000,
+    pattern=("swa",), window=4096,
+    ffn="moe", n_experts=8, moe_top_k=2, rope_theta=1e6,
+))

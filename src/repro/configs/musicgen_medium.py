@@ -1,0 +1,19 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24, head_dim=64) d_ff=6144 vocab=2048
+[arXiv:2306.05284].  Backbone only: the EnCodec frontend is a STUB —
+input_specs() provides precomputed frame embeddings (B, S, d_model).
+Positional encoding: RoPE substitutes the original sinusoidal embedding
+(TPU-native choice, noted in DESIGN.md).
+TP padding: 24 -> 32 q and kv heads (paper's padding-for-computation).
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-medium",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048,
+    ffn="gelu", embed_input=False, rope_theta=1e4,
+    pad_heads_to=32, pad_kv_heads_to=32,
+))

@@ -1,0 +1,18 @@
+"""qwen1.5-32b [dense] — QKV bias, MHA (assigned kv=40).
+
+64L d_model=5120 40H (kv=40, head_dim=128) d_ff=27392 vocab=152064
+[hf:Qwen/Qwen1.5-32B; assignment specifies kv=40].
+TP padding: 40 -> 48 q and kv heads (48 = 3 x 16).
+HBM note: the MHA KV cache at decode_32k batch 128 does not fit bf16
+(25.8 GB/chip) -> int8 KV cache (12.9 GB) — DESIGN.md §5.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-32b",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, head_dim=128,
+    d_ff=27392, vocab=152064,
+    qkv_bias=True, rope_theta=1e6,
+    pad_heads_to=48, pad_kv_heads_to=48, kv_cache_dtype="int8",
+))

@@ -1,0 +1,14 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA.
+
+28L d_model=1024 16H (GQA kv=8, head_dim=128) d_ff=3072 vocab=151936
+[hf:Qwen/Qwen3-0.6B].
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-0.6b",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=3072, vocab=151936,
+    qk_norm=True, rope_theta=1e6,
+))

@@ -1,0 +1,16 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, qk_norm.
+
+94L d_model=4096 64H (GQA kv=4, head_dim=128) expert d_ff=1536
+vocab=151936 [hf:Qwen/Qwen3-30B-A3B scaled family].
+TP note: experts shard over the model axis (EP=16 -> 8 experts/shard);
+kv=4 < 16 -> KV replicated.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936,
+    ffn="moe", n_experts=128, moe_top_k=8, qk_norm=True, rope_theta=1e6,
+))

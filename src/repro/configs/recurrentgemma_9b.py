@@ -1,0 +1,17 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 1:2 ratio.
+
+38L d_model=4096 16H (MQA kv=1, head_dim=256) d_ff=12288 vocab=256000.
+Pattern (rglru, rglru, swa) x 12 + (rglru, rglru) tail — one local-attention
+(window 2048) layer per two recurrent layers [arXiv:2402.19427].
+TP note: kv=1 < 16 -> KV replicated across model shards (DESIGN.md §5).
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-9b",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12288, vocab=256000,
+    pattern=("rglru", "rglru", "swa"), window=2048, d_rnn=4096,
+    ffn="swiglu", rope_theta=1e4,
+))

@@ -1,0 +1,16 @@
+"""rwkv6-1.6b [ssm] — Finch: attention-free, data-dependent decay.
+
+24L d_model=2048 (32 heads x 64) d_ff=7168 vocab=65536 [arXiv:2404.05892].
+Attention-sharding aspects of the paper's technique are inapplicable
+(attention-free); tiling/fusion/overlap apply to the WKV6 recurrence and
+channel-mix matmuls (DESIGN.md §5).  long_500k runs: state is O(1) in S.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-1.6b",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=7168, vocab=65536,
+    pattern=("rwkv6",), ffn="rwkv_cm",
+))

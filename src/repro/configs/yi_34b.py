@@ -1,0 +1,16 @@
+"""yi-34b [dense] — llama-arch GQA.
+
+60L d_model=7168 56H (GQA kv=8, head_dim=128) d_ff=20480 vocab=64000
+[arXiv:2403.04652].
+TP padding: 56 -> 64 q heads (divisible by model=16); kv=8 < 16 -> KV
+replicated across excess model shards.
+"""
+from ..models.model import ModelConfig
+from .base import register
+
+CONFIG = register(ModelConfig(
+    name="yi-34b",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=20480, vocab=64000,
+    rope_theta=5e6, pad_heads_to=64,
+))

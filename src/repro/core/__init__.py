@@ -1,0 +1,22 @@
+"""Prometheus-JAX core: the paper's holistic NLP optimization engine.
+
+Pipeline (paper Fig. 2): affine task graph -> fusion -> unified design space
+(tiling + permutation + padding + buffering + concurrency + slice placement)
+-> NLP solve -> execution plan -> code generation.
+"""
+from .taskgraph import Access, Array, Statement, TaskGraph
+from .fusion import FusedGraph, FusedTask, fuse
+from .padding import TileOption, tile_options, communication_padding
+from .plan import ArrayPlacement, ExecutionPlan, TaskConfig, TaskReport
+from .resources import Hardware, Slice, ONE_SLICE, THREE_SLICE
+from .solver import SolverOptions, solve
+from . import polybench
+
+__all__ = [
+    "Access", "Array", "Statement", "TaskGraph",
+    "FusedGraph", "FusedTask", "fuse",
+    "TileOption", "tile_options", "communication_padding",
+    "ArrayPlacement", "ExecutionPlan", "TaskConfig", "TaskReport",
+    "Hardware", "Slice", "ONE_SLICE", "THREE_SLICE",
+    "SolverOptions", "solve", "polybench",
+]

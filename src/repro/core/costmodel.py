@@ -1,0 +1,351 @@
+"""Analytic latency model — the paper's NLP objective (Eqs. 12-16), TPU terms.
+
+Structure mirrors the paper exactly:
+
+* Eq. 15 (intra-task base case): one fully-"unrolled" intra-tile executes on
+  the MXU/VPU; latency = issue overhead + FLOP time (de-rated by lane/sublane
+  alignment) + a reduction-tree drain term ``RED_LATENCY * log2(red_elems)``.
+* Eq. 16 (pipelined reduction): inter-tile *reduction* loops revisit the same
+  output tile, pipelined with initiation interval II = steady-state tile time.
+* Eq. 14 (level recursion): every non-reduction inter-tile loop level adds
+  ``trips * max(inner, comm)`` when double/triple-buffered (computation-
+  communication overlap) or ``trips * (inner + comm)`` when not, plus
+  prologue/epilogue fill terms.
+* Eqs. 12-13 (DAG): per-task latencies compose over the fused dataflow graph
+  with producer->consumer ``shift`` terms for streamed (FIFO) edges, a
+  per-slice serialization constraint (a TPU core runs one task at a time —
+  concurrency comes from placing tasks on different slices, the SLR
+  adaptation), and makespan = latest sink finish.
+
+All byte volumes honour padding (padded trip counts cost real compute and
+real transfer bytes) and burst packing (minor-dim alignment de-rates HBM
+bandwidth) — the paper's padding-for-computation / padding-for-communication
+trade-off is therefore visible to the solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+from .fusion import FusedGraph, FusedTask
+from .plan import ArrayPlacement, TaskConfig, TaskReport
+from .resources import (Hardware, STEP_OVERHEAD_S, RED_LATENCY_S, VMEM_BW,
+                        alignment_efficiency, packing_efficiency)
+from .taskgraph import Access
+
+
+# ---------------------------------------------------------------------------
+# Footprints (paper f_{a,l}) and transfer counts
+# ---------------------------------------------------------------------------
+def _access_of(task: FusedTask, array: str) -> Access:
+    for s in task.statements:
+        for acc in tuple(s.reads) + tuple(s.writes):
+            if acc.array == array:
+                return acc
+    raise KeyError(f"array {array!r} not accessed by task {task.name}")
+
+
+def tile_extent(cfg: TaskConfig, task: FusedTask, it: str, level: int) -> int:
+    """Extent along iterator ``it`` of the data-tile transferred at ``level``.
+
+    If the loop carrying ``it`` encloses the transfer (its level < given
+    level) each transfer covers one tile of it; otherwise the transfer must
+    cover all remaining iterations (full padded extent)."""
+    t = cfg.tiles[it]
+    if it in cfg.perm and cfg.level_of(it) <= level:
+        return t.tile
+    return t.padded_tc
+
+
+def footprint_elems(cfg: TaskConfig, task: FusedTask, array: str,
+                    level: int) -> int:
+    acc = _access_of(task, array)
+    n = 1
+    for it in acc.iters:
+        n *= tile_extent(cfg, task, it, level)
+    return n
+
+
+def minor_dim_elems(cfg: TaskConfig, task: FusedTask, array: str,
+                    level: int) -> int:
+    acc = _access_of(task, array)
+    if not acc.iters:
+        return 1
+    return tile_extent(cfg, task, acc.iters[-1], level)
+
+
+def n_transfers(cfg: TaskConfig, task: FusedTask, array: str,
+                placement: ArrayPlacement) -> int:
+    """How many times the data-tile of ``array`` is (re)loaded.
+
+    Product of inter-tile trip counts of loops enclosing the transfer level,
+    *skipping* loops that do not index the array when the buffer is defined
+    at or above that loop (data reuse across that loop — the paper's
+    d_{a,l} mechanism, e.g. array E reused across j0 in Listing 6)."""
+    acc = _access_of(task, array)
+    used = set(acc.iters)
+    total = 1
+    for pos, loop in enumerate(cfg.perm):
+        level_of_loop = pos + 1
+        if level_of_loop > placement.transfer_level:
+            break
+        if loop in used or placement.define_level >= level_of_loop:
+            total *= cfg.tiles[loop].n_tiles
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-task latency (Eqs. 14-16)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StreamRates:
+    """Bandwidths for each array feeding/leaving a task."""
+
+    hbm_bw: float
+    ici_bw: float
+
+
+def task_report(task: FusedTask, cfg: TaskConfig, graph: FusedGraph,
+                hw: Hardware, bw_share: float = 1.0) -> TaskReport:
+    """``bw_share`` divides HBM bandwidth among concurrently-active slices
+    (the DRAM channels are a board-level resource shared by SLR regions —
+    paper §2.2.2 economics: compute scales with slices, bandwidth doesn't).
+    """
+    sl = hw.slices[cfg.slice_id]
+    main = task.main
+    out_arr = task.output_array
+    arrays = graph.graph.arrays
+
+    # ----- intra-tile (Eq. 15) ------------------------------------------
+    red_loops = [l for l in main.loops if l in main.reduction_loops]
+    nonred_loops = [l for l in main.loops if l not in main.reduction_loops]
+    intra_elems = 1.0
+    for l in main.loops:
+        intra_elems *= cfg.tiles[l].tile
+    out_acc = _access_of(task, out_arr)
+    out_block = [cfg.tiles[it].tile for it in out_acc.iters]
+    eff = alignment_efficiency(out_block)
+    flops_tile = intra_elems * main.flops_per_iter * main.density
+    t_mxu = flops_tile / max(sl.flops * eff, 1.0)
+    red_elems = 1
+    for l in red_loops:
+        red_elems *= cfg.tiles[l].tile
+    lat_intra = STEP_OVERHEAD_S + t_mxu \
+        + RED_LATENCY_S * math.log2(max(red_elems, 1) or 1)
+
+    # ----- pipelined inter-tile reduction loops (Eq. 16) ----------------
+    red_trips = 1
+    for l in red_loops:
+        red_trips *= cfg.tiles[l].n_tiles
+    ii = max(t_mxu, RED_LATENCY_S)           # initiation interval, seconds
+    lat_red_chain = lat_intra + ii * (red_trips - 1)
+
+    # Reduction loops sit innermost (paper §3.4); the level recursion below
+    # walks the *non-reduction* inter-tile loops outermost-first.  Arrays
+    # transferred "inside" reduction levels stream per reduction step.
+    red_level_start = len(cfg.perm) - len(red_loops) + 1
+
+    def bw_of(array: str, placement: ArrayPlacement, level: int) -> float:
+        if placement.onchip:
+            return VMEM_BW            # shared-buffer handoff on the same slice
+        if placement.stream:
+            return hw.ici_bw          # FIFO across slices (inter-SLR analogue)
+        pk = packing_efficiency(
+            minor_dim_elems(cfg, task, array, level),
+            arrays[array].dtype_bytes)
+        return sl.hbm_bw * bw_share * pk
+
+    # Total transfer seconds & bytes per array (amortised over reuse).
+    reads = [a for a in task.read_arrays()]
+    load_s_total = 0.0
+    hbm_bytes = 0.0
+    stream_bytes = 0.0
+    per_level_load_s: dict[int, float] = {}
+    for a in reads:
+        pl = cfg.placements[a]
+        tile_b = footprint_elems(cfg, task, a, pl.transfer_level) \
+            * arrays[a].dtype_bytes
+        cnt = n_transfers(cfg, task, a, pl)
+        secs = cnt * tile_b / bw_of(a, pl, pl.transfer_level)
+        load_s_total += secs
+        if pl.stream:
+            stream_bytes += cnt * tile_b
+        else:
+            hbm_bytes += cnt * tile_b
+        per_level_load_s[pl.transfer_level] = \
+            per_level_load_s.get(pl.transfer_level, 0.0) + secs
+
+    # Output: stored (or sent) once per output tile — output-stationary.
+    out_pl = cfg.placements[out_arr]
+    out_tile_b = footprint_elems(cfg, task, out_arr, out_pl.transfer_level) \
+        * arrays[out_arr].dtype_bytes
+    out_cnt = n_transfers(cfg, task, out_arr, out_pl)
+    store_s_total = out_cnt * out_tile_b / bw_of(out_arr, out_pl,
+                                                 out_pl.transfer_level)
+    if out_pl.stream:
+        stream_bytes += out_cnt * out_tile_b
+    else:
+        hbm_bytes += out_cnt * out_tile_b
+
+    # ----- level recursion (Eq. 14) -------------------------------------
+    # Amortised per-execution transfer time at each level; levels are the
+    # non-reduction inter-tile loops in permutation order.
+    nonred_perm = [l for l in cfg.perm if l not in red_loops]
+
+    def execs_of_level(level: int) -> int:
+        n = 1
+        for pos, loop in enumerate(cfg.perm):
+            if pos + 1 > level:
+                break
+            n *= cfg.tiles[loop].n_tiles
+        return n
+
+    def level_lat(idx: int) -> float:
+        """Latency of one execution of the loop at position idx (0-based in
+        nonred_perm) including everything inside it."""
+        if idx >= len(nonred_perm):
+            # Innermost: one pipelined reduction chain plus transfers assigned
+            # inside reduction levels (streamed per reduction step).  One
+            # chain = one execution of the subtree below the last
+            # non-reduction loop; amortise the total red-level transfer time
+            # over the number of chains.
+            n_chains = max(execs_of_level(red_level_start - 1), 1)
+            comm = sum(per_level_load_s.get(lv, 0.0)
+                       for lv in range(red_level_start, len(cfg.perm) + 1)) \
+                / n_chains
+            overlapped = all(cfg.placements[a].buffers >= 2 for a in reads) \
+                if reads else True
+            if overlapped:
+                return max(lat_red_chain, comm) + (comm / max(red_trips, 1))
+            return lat_red_chain + comm
+
+        loop = nonred_perm[idx]
+        level = cfg.perm.index(loop) + 1
+        trips = cfg.tiles[loop].n_tiles
+        inner = level_lat(idx + 1)
+        # per-iteration-of-this-loop amortised transfer time at this level
+        n_iters = max(execs_of_level(level), 1)
+        load_tile = per_level_load_s.get(level, 0.0) / n_iters
+        store_here = store_s_total / n_iters \
+            if out_pl.transfer_level == level else 0.0
+        overlapped = any(cfg.placements[a].buffers >= 2 for a in reads) \
+            or out_pl.buffers >= 2
+        if overlapped:
+            steady = max(inner, load_tile + store_here)
+            # prologue: first load; epilogue: last store (the alpha term)
+            return trips * steady + load_tile + store_here
+        return trips * (inner + load_tile + store_here)
+
+    body = level_lat(0)
+    # Level-0 transfers (before any loop): strictly serial prologue/epilogue.
+    pre = per_level_load_s.get(0, 0.0)
+    post = store_s_total if out_pl.transfer_level == 0 else 0.0
+    latency = pre + body + post
+
+    compute_total = execs_of_level(len(cfg.perm)) / max(red_trips, 1) \
+        * lat_red_chain
+    # Padded vs useful FLOPs: useful uses original trip counts.
+    useful = task.flops
+    padded = useful
+    for l in cfg.perm:
+        t = cfg.tiles[l]
+        if t.ori_tc:
+            padded *= t.padded_tc / t.ori_tc
+
+    # ----- VMEM occupancy (Eq. 7) ----------------------------------------
+    vmem = 0.0
+    for a in reads + [out_arr]:
+        pl = cfg.placements[a]
+        buf = footprint_elems(cfg, task, a, pl.define_level) \
+            * arrays[a].dtype_bytes * pl.buffers
+        vmem += buf
+
+    return TaskReport(
+        latency_s=latency,
+        compute_s=compute_total,
+        load_s=load_s_total,
+        store_s=store_s_total,
+        vmem_bytes=vmem,
+        hbm_bytes=hbm_bytes,
+        stream_bytes=stream_bytes,
+        useful_flops=useful,
+        padded_flops=padded,
+        fill_s=pre + post,
+    )
+
+
+# ---------------------------------------------------------------------------
+# DAG latency (Eqs. 12-13) with slice serialization + streaming shifts
+# ---------------------------------------------------------------------------
+def emission_order(task: FusedTask, cfg: TaskConfig, array: str) \
+        -> tuple[int, ...]:
+    """Order in which array dims are visited (outer->inner) by the task."""
+    acc = _access_of(task, array)
+    order: list[int] = []
+    for loop in cfg.perm:
+        for d, it in enumerate(acc.iters):
+            if it == loop and d not in order:
+                order.append(d)
+    return tuple(order)
+
+
+def edge_order_compatible(fg: FusedGraph, configs: Mapping[int, TaskConfig],
+                          u: int, v: int, arr: str) -> bool:
+    """FIFO legality (paper §6.4): the consumer visits the array's dims in
+    the producer's emission order, or full-buffers it (define level 0)."""
+    pl = configs[v].placements.get(arr)
+    if pl is not None and pl.define_level == 0:
+        return True
+    return emission_order(fg.tasks[u], configs[u], arr) == \
+        emission_order(fg.tasks[v], configs[v], arr)
+
+
+def dag_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
+                reports: Mapping[int, TaskReport]) -> float:
+    start: dict[int, float] = {}
+    finish: dict[int, float] = {}
+    slice_free: dict[int, float] = {}
+    for tid in fg.topo_order():
+        cfg = configs[tid]
+        rep = reports[tid]
+        ready = 0.0
+        for (u, arr) in fg.preds(tid):
+            pl = configs[tid].placements.get(arr)
+            streamed = pl is not None and pl.stream
+            if streamed and edge_order_compatible(fg, configs, u, tid, arr):
+                # Eq. 12 shift: consumer starts once the first tile arrives
+                # through the FIFO...
+                out_tiles = max(_n_out_tiles(fg, u, configs[u]), 1)
+                first_tile = reports[u].latency_s / out_tiles
+                ready = max(ready, start[u] + first_tile)
+                # ...but cannot drain the last tile before the producer
+                # emits it: finish >= producer finish + one tile hop.
+                ready = max(ready, finish[u] + first_tile - rep.latency_s)
+            else:
+                ready = max(ready, finish[u])
+        s0 = max(ready, slice_free.get(cfg.slice_id, 0.0))
+        start[tid] = s0
+        finish[tid] = s0 + rep.latency_s
+        slice_free[cfg.slice_id] = finish[tid]
+    return max(finish[t] for t in fg.sinks())
+
+
+def _n_out_tiles(fg: FusedGraph, tid: int, cfg: TaskConfig) -> int:
+    task = fg.tasks[tid]
+    out = task.output_array
+    acc = _access_of(task, out)
+    n = 1
+    for it in acc.iters:
+        if it in cfg.tiles:
+            n *= cfg.tiles[it].n_tiles
+    return n
+
+
+def plan_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
+                 hw: Hardware) -> tuple[float, dict[int, TaskReport]]:
+    n_active = max(len({c.slice_id for c in configs.values()}), 1)
+    reports = {t.tid: task_report(t, configs[t.tid], fg, hw,
+                                  bw_share=1.0 / n_active)
+               for t in fg.tasks}
+    return dag_latency(fg, configs, reports), reports

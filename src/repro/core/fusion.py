@@ -1,0 +1,173 @@
+"""Output-stationary task fusion (paper §3.1).
+
+"Tasks with identical outputs are then merged (when legal), creating fused
+tasks with output-stationary properties.  This ensures that each tile's
+output is handled (loaded, computed, and either stored or transmitted) only
+once."
+
+Legality here follows the paper's setting: after maximal distribution each
+statement owns one loop body; statements writing the same array (the
+``E=0`` init and the ``E+=...`` accumulation of Listing 4) are fused when the
+producer is the immediately preceding writer of that array and no other
+statement consumes the array in between.  The fused task inherits the union
+of loops; the *shared* non-reduction loops must take identical permutations
+(Eq. 4) — enforced downstream by the solver, which permutes fused tasks as a
+unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .taskgraph import Statement, TaskGraph
+
+
+@dataclasses.dataclass
+class FusedTask:
+    """A dataflow node: one or more statements sharing their output array."""
+
+    tid: int
+    name: str
+    statements: list[Statement]
+
+    @property
+    def output_array(self) -> str:
+        return self.statements[-1].output_arrays()[-1]
+
+    @property
+    def main(self) -> Statement:
+        """The dominant statement (largest domain) — drives tiling choices."""
+        return max(self.statements, key=lambda s: s.domain_size)
+
+    @property
+    def loops(self) -> tuple[str, ...]:
+        """Union of loops, ordered as in the dominant statement then extras."""
+        seen = list(self.main.loops)
+        for s in self.statements:
+            for l in s.loops:
+                if l not in seen:
+                    seen.append(l)
+        return tuple(seen)
+
+    @property
+    def trip_counts(self) -> dict[str, int]:
+        tc: dict[str, int] = {}
+        for s in self.statements:
+            for l, n in s.trip_counts.items():
+                tc[l] = max(tc.get(l, 0), n)
+        return tc
+
+    @property
+    def flops(self) -> float:
+        return sum(s.flops for s in self.statements)
+
+    def read_arrays(self) -> list[str]:
+        out: list[str] = []
+        for s in self.statements:
+            for a in s.reads:
+                # Output-stationary: reads of the own output (accumulator)
+                # stay in registers/VMEM — not a transfer.
+                if a.array != self.output_array and a.array not in out:
+                    out.append(a.array)
+        return out
+
+
+@dataclasses.dataclass
+class FusedGraph:
+    """Dataflow DAG over fused tasks (paper Fig. 3 after fusion)."""
+
+    graph: TaskGraph
+    tasks: list[FusedTask]
+    # (producer_tid, consumer_tid, array)
+    edges: list[tuple[int, int, str]]
+
+    def preds(self, tid: int) -> list[tuple[int, str]]:
+        return [(u, a) for (u, v, a) in self.edges if v == tid]
+
+    def succs(self, tid: int) -> list[tuple[int, str]]:
+        return [(v, a) for (u, v, a) in self.edges if u == tid]
+
+    def sinks(self) -> list[int]:
+        have_succ = {u for (u, _, _) in self.edges}
+        return [t.tid for t in self.tasks if t.tid not in have_succ]
+
+    def topo_order(self) -> list[int]:
+        order: list[int] = []
+        indeg = {t.tid: 0 for t in self.tasks}
+        for (_, v, _) in set((u, v, a) for (u, v, a) in self.edges):
+            pass
+        indeg = {t.tid: len({u for (u, a) in self.preds(t.tid)})
+                 for t in self.tasks}
+        ready = sorted(t for t, d in indeg.items() if d == 0)
+        seen: set[int] = set()
+        while ready:
+            t = ready.pop(0)
+            order.append(t)
+            seen.add(t)
+            for (v, _) in self.succs(t):
+                if v in seen or v in order or v in ready:
+                    continue
+                if all(u in order for (u, _) in self.preds(v)):
+                    ready.append(v)
+            ready.sort()
+        if len(order) != len(self.tasks):
+            raise ValueError("cycle in fused graph")
+        return order
+
+    def intermediate_arrays(self) -> list[str]:
+        return sorted({a for (_, _, a) in self.edges})
+
+    def comm_between_tasks_elems(self) -> float:
+        """Paper Table 5 'Communication Between Tasks' column: data elements
+        flowing across dataflow edges (excluding initial input loading)."""
+        import numpy as np
+        total = 0.0
+        for (_, _, a) in self.edges:
+            arr = self.graph.arrays[a]
+            total += float(np.prod(arr.shape))
+        return total
+
+
+def fuse(graph: TaskGraph) -> FusedGraph:
+    """Merge statements with identical output arrays into fused tasks."""
+    tasks: list[FusedTask] = []
+    owner: dict[str, FusedTask] = {}   # array -> fused task currently writing
+    for s in graph.statements:
+        outs = s.output_arrays()
+        assert len(outs) >= 1, f"statement {s.name} writes nothing"
+        key = outs[-1]
+        task = owner.get(key)
+        # Fusion is legal only if nothing consumed the array since the last
+        # writer; in program order that means the owner is still "open"
+        # (no intervening reader task).  For the affine kernels handled here
+        # init/update pairs are always adjacent in program order.
+        if task is not None and _no_intervening_reader(graph, task, s, key):
+            task.statements.append(s)
+        else:
+            task = FusedTask(tid=len(tasks), name=f"FT{len(tasks)}",
+                             statements=[s])
+            tasks.append(task)
+            owner[key] = task
+
+    # Dataflow edges between fused tasks: RAW on arrays across tasks.
+    stmt_task: dict[str, int] = {}
+    for t in tasks:
+        for s in t.statements:
+            stmt_task[s.name] = t.tid
+    edges: set[tuple[int, int, str]] = set()
+    for (i, j, arr) in graph.edges():
+        u = stmt_task[graph.statements[i].name]
+        v = stmt_task[graph.statements[j].name]
+        if u != v:
+            edges.add((u, v, arr))
+    return FusedGraph(graph=graph, tasks=tasks, edges=sorted(edges))
+
+
+def _no_intervening_reader(graph: TaskGraph, task: FusedTask,
+                           stmt: Statement, array: str) -> bool:
+    names = [s.name for s in graph.statements]
+    last_in_task = names.index(task.statements[-1].name)
+    here = names.index(stmt.name)
+    for s in graph.statements[last_in_task + 1:here]:
+        if array in {a.array for a in s.reads} or array in s.output_arrays():
+            return False
+    return True

@@ -1,0 +1,116 @@
+"""Padding for computation and communication (paper §2.1.6, §3.2, Eqs. 1-3).
+
+*Padding for computation* expands the set of legal tile (unroll) factors: a
+loop of trip count 190 only admits factors {1,2,5,10,19,38,95,190}; padded to
+192 it admits {1,2,3,4,6,8,12,16,...,192} (paper Listing 1).  On TPU this is
+doubly important because the MXU/VPU want the last two block dims to be
+multiples of (8, 128): padding 190 -> 192 makes 8/16/32/64-wide tiles legal,
+and padding head counts (56 -> 64) makes tensor-parallel degrees legal.
+
+*Padding for communication* aligns the minor dimension so HBM DMAs move full
+(8,128) granules — the analogue of the paper's 512-bit burst alignment
+(Fig. 1: J=190 -> 192 lifts the transfer from 64 to 512 bits/cycle).
+
+Eq. 1:  TC_intra % TC_ori == 0  ||  TC_intra % TC_padded == 0
+Eq. 2:  TC_padded = TC_ori + n,  n <= N   (user-bounded padding)
+Eq. 3:  BW_a = max b in B s.t. S_last % b == 0   (burst width selection)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def divisors(n: int) -> tuple[int, ...]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            if d != n // d:
+                out.append(n // d)
+        d += 1
+    return tuple(sorted(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class TileOption:
+    """A legal intra-tile factor together with the padding that enables it."""
+
+    tile: int            # TC_intra
+    padded_tc: int       # TC^l (trip count after padding); == ori if unpadded
+    ori_tc: int          # TC_ori^l
+
+    @property
+    def pad(self) -> int:
+        return self.padded_tc - self.ori_tc
+
+    @property
+    def n_tiles(self) -> int:     # TC_inter
+        return self.padded_tc // self.tile
+
+    @property
+    def waste(self) -> float:
+        """Fraction of iterations that are padding (computed but discarded)."""
+        return self.pad / self.padded_tc
+
+
+def tile_options(ori_tc: int, max_pad: int = 0,
+                 max_tile: int | None = None) -> list[TileOption]:
+    """All (tile, padded_tc) pairs satisfying Eqs. 1-2.
+
+    With ``max_pad == 0`` this is the divisor-only space (the Sisyphus
+    restriction the paper calls out: "their approach avoids padding,
+    limiting the unroll factor to divisors of the loop's trip count").
+    """
+    best: dict[int, TileOption] = {}
+    for pad in range(0, max_pad + 1):
+        tc = ori_tc + pad
+        for d in divisors(tc):
+            if max_tile is not None and d > max_tile:
+                continue
+            cur = best.get(d)
+            # Prefer the smallest padding that legalises this tile size.
+            if cur is None or tc < cur.padded_tc:
+                best[d] = TileOption(tile=d, padded_tc=tc, ori_tc=ori_tc)
+    return sorted(best.values(), key=lambda t: t.tile)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def burst_width(last_dim: int, dtype_bytes: int = 4,
+                widths=(16, 8, 4, 2, 1)) -> int:
+    """Eq. 3: widest vector (elements/transfer) that divides the minor dim.
+
+    ``widths`` defaults to the float32 ladder {16,8,4,2,1} elements, i.e.
+    512..32-bit bursts on the FPGA; on TPU the same ladder expresses how much
+    of a 128-lane DMA granule each row fills.
+    """
+    for b in widths:
+        if last_dim % b == 0:
+            return b
+    return 1
+
+
+def communication_padding(last_dim: int, dtype_bytes: int = 4,
+                          max_pad: int | None = None,
+                          target_elems: int = 16) -> tuple[int, int]:
+    """Choose padding P for the minor dim to widen bursts (paper Fig. 1).
+
+    Returns ``(padded_last_dim, burst_elems)``.  Stops at the smallest pad
+    reaching ``target_elems`` per transfer; bounded by ``max_pad`` (defaults
+    to ``target_elems``)."""
+    if max_pad is None:
+        max_pad = target_elems
+    best = (last_dim, burst_width(last_dim, dtype_bytes))
+    for pad in range(0, max_pad + 1):
+        n = last_dim + pad
+        b = burst_width(n, dtype_bytes)
+        if b > best[1]:
+            best = (n, b)
+        if b >= target_elems:
+            break
+    return best

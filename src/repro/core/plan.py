@@ -1,0 +1,140 @@
+"""Execution-plan datatypes — the NLP solution vector (paper Table 2/4).
+
+A :class:`TaskConfig` is the per-fused-task slice of the paper's design
+variables:
+
+    perm            inter-tile loop order (reduction loops pinned innermost)
+    tiles           TC_intra per loop (with the padding that legalised it)
+    placements      per-array transfer level t_{a,l}, define level d_{a,l},
+                    buffer count N_a, and stream-vs-offchip routing
+    slice_id        slr_t — the slice (SLR analogue) executing the task
+
+:class:`ExecutionPlan` aggregates task configs for a fused graph and is the
+object handed to code generation (`core/apply.py`) and the benchmark tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping
+
+from .padding import TileOption
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayPlacement:
+    """Where an array's tile enters the task and how it is buffered.
+
+    ``transfer_level`` / ``define_level`` index inter-tile loop *levels*:
+    0 = before all inter-tile loops, k = just inside the k-th loop of the
+    chosen permutation.  Eq. 6: define_level <= transfer_level.
+    ``buffers`` is N_a (1 = no overlap, 2 = double, 3 = triple buffering).
+    ``stream`` marks FIFO edges from a producer task instead of HBM loads.
+    """
+
+    transfer_level: int
+    define_level: int
+    buffers: int = 2
+    stream: bool = False     # FIFO over ICI from a producer on another slice
+    onchip: bool = False     # shared VMEM buffer handoff (same-slice edge)
+
+    def __post_init__(self):
+        if self.define_level > self.transfer_level:
+            raise ValueError("Eq. 6 violated: define after transfer")
+
+    def replace(self, **kw) -> "ArrayPlacement":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskConfig:
+    perm: tuple[str, ...]
+    tiles: Mapping[str, TileOption]
+    placements: Mapping[str, ArrayPlacement]
+    slice_id: int = 0
+
+    def tile(self, loop: str) -> TileOption:
+        return self.tiles[loop]
+
+    def level_of(self, loop: str) -> int:
+        """Level index of a loop: position in perm + 1 (level 0 = pre-loop)."""
+        return self.perm.index(loop) + 1
+
+    def to_jsonable(self) -> dict:
+        return {
+            "perm": list(self.perm),
+            "tiles": {l: {"tile": t.tile, "padded_tc": t.padded_tc,
+                          "ori_tc": t.ori_tc}
+                      for l, t in self.tiles.items()},
+            "placements": {a: dataclasses.asdict(p)
+                           for a, p in self.placements.items()},
+            "slice_id": self.slice_id,
+        }
+
+
+@dataclasses.dataclass
+class TaskReport:
+    """Cost-model output for one task under one config."""
+
+    latency_s: float
+    compute_s: float
+    load_s: float
+    store_s: float
+    vmem_bytes: float
+    hbm_bytes: float
+    stream_bytes: float
+    useful_flops: float
+    padded_flops: float
+    fill_s: float = 0.0
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.load_s + self.store_s}
+        return max(terms, key=terms.get)
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    graph_name: str
+    configs: dict[int, TaskConfig]            # tid -> config
+    reports: dict[int, TaskReport]
+    latency_s: float
+    useful_flops: float
+    mode: str = "prometheus"
+    solver_seconds: float = 0.0
+    n_evaluated: int = 0
+    space_size: float = 0.0       # raw product-space size (Table 10 story)
+    timed_out: bool = False       # exhaustive coverage impossible in budget
+
+    @property
+    def gflops(self) -> float:
+        return self.useful_flops / self.latency_s / 1e9 if self.latency_s else 0.0
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({
+            "graph": self.graph_name,
+            "mode": self.mode,
+            "latency_s": self.latency_s,
+            "gflops": self.gflops,
+            "solver_seconds": self.solver_seconds,
+            "n_evaluated": self.n_evaluated,
+            "tasks": {str(t): c.to_jsonable() for t, c in self.configs.items()},
+            **extra,
+        }, indent=2)
+
+    def summary(self) -> str:
+        lines = [f"plan[{self.graph_name}|{self.mode}] "
+                 f"lat={self.latency_s * 1e6:.2f}us "
+                 f"gf={self.gflops:.2f} "
+                 f"(solved in {self.solver_seconds:.2f}s, "
+                 f"{self.n_evaluated} configs)"]
+        for tid, cfg in sorted(self.configs.items()):
+            rep = self.reports[tid]
+            tiles = ",".join(f"{l}:{t.tile}" +
+                             (f"(pad{t.pad})" if t.pad else "")
+                             for l, t in cfg.tiles.items())
+            lines.append(
+                f"  FT{tid} slice={cfg.slice_id} perm={'>'.join(cfg.perm)} "
+                f"tiles[{tiles}] lat={rep.latency_s * 1e6:.2f}us "
+                f"bound={rep.bound} vmem={rep.vmem_bytes / 2**20:.2f}MiB")
+        return "\n".join(lines)

@@ -1,0 +1,633 @@
+"""NLP-based design-space exploration (paper §4) — self-contained solver.
+
+The paper formulates tile sizes, loop orders, transfer levels, buffer counts
+and SLR assignments as one Non-Linear Program and solves it with AMPL+Gurobi.
+This container is offline, so the solver is built here from scratch — which
+is itself faithful to the *shape* of the problem:
+
+* Per-task enumeration with constraint propagation and Pareto pruning
+  (latency vs VMEM) over the factored discrete space
+  (permutation x tiles x placements) — exact for the spaces we generate.
+* A global placement phase (slice assignment = ``slr_t``, Eq. 11; streaming
+  vs shared-buffer routing of dataflow edges) solved exactly for small task
+  counts and by seeded simulated annealing beyond that.
+* The **mode** switch reproduces the paper's comparison frameworks as
+  restrictions of the same space (Table 1):
+
+    ``prometheus``  full space (this work)
+    ``sisyphus``    tiling+permutation, NO padding / dataflow / overlap /
+                    multi-slice; the search is *joint* across tasks (shared
+                    buffers couple them) — reproducing the Table 10 blowup.
+    ``streamhls``   dataflow streaming + permutation, data assumed on-chip
+                    (transfers pinned to level 0), parallelism limited to
+                    FIFO width, no tiling/padding/overlap.
+    ``autodse``     pragma-only: no code transformation; innermost unroll
+                    factors restricted to trip-count divisors; whole arrays
+                    buffered; no dataflow/overlap/multi-slice.
+
+Determinism: all enumeration orders are sorted; annealing uses a fixed seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+import time
+from typing import Iterable, Sequence
+
+from .costmodel import footprint_elems, plan_latency, task_report
+from .fusion import FusedGraph, FusedTask, fuse
+from .padding import TileOption, tile_options
+from .plan import ArrayPlacement, ExecutionPlan, TaskConfig, TaskReport
+from .resources import Hardware
+from .taskgraph import TaskGraph, legal_permutations
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeCaps:
+    tiling: bool
+    permutation: bool
+    padding: bool
+    streaming: bool
+    concurrency: bool
+    overlap: bool
+    multi_slice: bool
+    joint_search: bool = False      # couple tasks in one product space
+
+
+CAPS: dict[str, ModeCaps] = {
+    "prometheus": ModeCaps(True, True, True, True, True, True, True),
+    "sisyphus": ModeCaps(True, True, False, False, False, False, False,
+                         joint_search=True),
+    "streamhls": ModeCaps(False, True, False, True, True, False, False),
+    "autodse": ModeCaps(False, False, False, False, False, False, False),
+}
+
+
+@dataclasses.dataclass
+class SolverOptions:
+    mode: str = "prometheus"
+    max_tile: int = 256
+    tile_menu: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+    max_options_per_loop: int = 6
+    top_k: int = 8
+    time_budget_s: float = 120.0
+    anneal_iters: int = 4000
+    seed: int = 0
+
+    @property
+    def caps(self) -> ModeCaps:
+        return CAPS[self.mode]
+
+
+@dataclasses.dataclass
+class SolveStats:
+    n_evaluated: int = 0
+    timed_out: bool = False
+    space_size: float = 0.0          # estimated raw product-space size
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation
+# ---------------------------------------------------------------------------
+def candidate_tiles(task: FusedTask, opts: SolverOptions) \
+        -> dict[str, list[TileOption]]:
+    """Per-loop tile options under the mode's transformation capabilities."""
+    caps = opts.caps
+    tcs = task.trip_counts
+    out: dict[str, list[TileOption]] = {}
+    main = task.main
+    for loop in task.loops:
+        tc = tcs[loop]
+        if not caps.tiling:
+            if opts.mode == "streamhls":
+                # parallelism only via FIFO width on the innermost loop
+                if loop == main.loops[-1]:
+                    opts_l = [t for t in tile_options(tc, 0, max_tile=16)]
+                else:
+                    opts_l = [TileOption(1, tc, tc)]
+            elif opts.mode == "autodse":
+                # pragma unroll on the innermost loop, divisors only
+                if loop == main.loops[-1]:
+                    opts_l = [t for t in tile_options(tc, 0, max_tile=64)]
+                else:
+                    opts_l = [TileOption(1, tc, tc)]
+            else:
+                opts_l = [TileOption(1, tc, tc)]
+            out[loop] = _prune_tiles(opts_l, tc, opts)
+            continue
+        max_pad = max(16, tc // 8) if caps.padding else 0
+        opts_l = tile_options(tc, max_pad=max_pad, max_tile=opts.max_tile)
+        out[loop] = _prune_tiles(opts_l, tc, opts)
+    return out
+
+
+def _prune_tiles(options: list[TileOption], tc: int,
+                 opts: SolverOptions) -> list[TileOption]:
+    """Keep a small, well-spread menu: tile=1, the full unpadded extent,
+    aligned (8-multiple) sizes from the menu, and the largest plain
+    divisors — the shapes the MXU/VPU and the HBM bursts care about."""
+    by_tile = {}
+    for t in options:
+        cur = by_tile.get(t.tile)
+        if cur is None or t.padded_tc < cur.padded_tc:
+            by_tile[t.tile] = t
+    keep: dict[int, TileOption] = {}
+
+    def add(tile: int) -> None:
+        if tile in by_tile and tile not in keep:
+            keep[tile] = by_tile[tile]
+
+    add(1)
+    add(tc)                                   # full extent, no padding
+    for m in sorted((x for x in opts.tile_menu if x > 1), reverse=True):
+        if len(keep) >= opts.max_options_per_loop:
+            break
+        add(m)
+    # largest plain (unpadded) divisors — the Sisyphus-style choices
+    plain = sorted((t.tile for t in by_tile.values()
+                    if t.pad == 0 and t.tile not in keep), reverse=True)
+    for d in plain[:2]:
+        if len(keep) >= opts.max_options_per_loop + 2:
+            break
+        add(d)
+    return sorted(keep.values(), key=lambda t: t.tile)
+
+
+def candidate_perms(task: FusedTask, opts: SolverOptions) \
+        -> list[tuple[str, ...]]:
+    main = task.main
+    perms = legal_permutations(main)
+    if not opts.caps.permutation:
+        red = [l for l in main.loops if l in main.reduction_loops]
+        par = [l for l in main.loops if l not in red]
+        perms = [tuple(par) + tuple(red)]
+    # Extend with any extra loops from other fused statements (appended at
+    # their natural position: before the reductions).
+    extra = [l for l in task.loops if l not in main.loops]
+    if extra:
+        perms = [p[:len(p) - len(main.reduction_loops)] + tuple(extra)
+                 + p[len(p) - len(main.reduction_loops):] for p in perms]
+    return perms
+
+
+def _placement_options(task: FusedTask, perm: tuple[str, ...],
+                       tiles: dict[str, TileOption], fg: FusedGraph,
+                       hw: Hardware, opts: SolverOptions, array: str,
+                       is_output: bool, overlap: bool = True) \
+        -> list[ArrayPlacement]:
+    """Enumerate (transfer level, define level) for one array under a given
+    buffering regime, pruned to the Pareto frontier of
+    (transfer bytes, buffer bytes).  ``overlap`` sets N_a (paper Table 2):
+    2 for double-buffered streams, 1 otherwise."""
+    caps = opts.caps
+    n_levels = len(perm)
+    main = task.main
+    red = set(main.reduction_loops)
+    n_nonred = len([l for l in perm if l not in red])
+    buffers = 2 if (caps.overlap and overlap) else 1
+    if is_output:
+        # Output-stationary: store once per output tile — at the level just
+        # below the last non-reduction loop, or hoisted fully (level 0).
+        return [ArrayPlacement(transfer_level=lv, define_level=lv,
+                               buffers=buffers)
+                for lv in sorted({0, n_nonred})]
+    if not caps.tiling and opts.mode in ("streamhls", "autodse"):
+        # on-chip / whole-array assumption: everything loaded up front.
+        # When the array does not fit VMEM (TPU-scale data), the
+        # assumption breaks — model the buffer as HBM-resident, re-
+        # streamed per innermost tile (the paper's critique of this
+        # assumption, §2.3: "often results in low QoR on real hardware").
+        cfg0 = TaskConfig(perm=perm, tiles=tiles, placements={}, slice_id=0)
+        whole = footprint_elems(cfg0, task, array, 0) \
+            * fg.graph.arrays[array].dtype_bytes
+        if whole <= hw.vmem:
+            return [ArrayPlacement(0, 0, buffers=1)]
+        return [ArrayPlacement(n_levels, n_levels, buffers=1)]
+    scored: list[tuple[float, float, ArrayPlacement]] = []
+    from .costmodel import n_transfers
+    for lv in range(0, n_levels + 1):
+        for dv in sorted({0, lv}):
+            pl = ArrayPlacement(transfer_level=lv, define_level=dv,
+                                buffers=buffers)
+            cfg = TaskConfig(perm=perm, tiles=tiles,
+                             placements={array: pl}, slice_id=0)
+            tile_b = footprint_elems(cfg, task, array, lv) \
+                * fg.graph.arrays[array].dtype_bytes
+            cnt = n_transfers(cfg, task, array, pl)
+            buf_b = footprint_elems(cfg, task, array, dv) \
+                * fg.graph.arrays[array].dtype_bytes * buffers
+            if buf_b > hw.vmem:
+                continue
+            scored.append((cnt * tile_b, buf_b, pl))
+    # Pareto prune on (transfer bytes, buffer bytes)
+    scored.sort(key=lambda x: (x[0], x[1]))
+    front: list[tuple[float, float, ArrayPlacement]] = []
+    best_buf = float("inf")
+    for tb, bb, pl in scored:
+        if bb < best_buf - 1e-9:
+            front.append((tb, bb, pl))
+            best_buf = bb
+    return [pl for (_, _, pl) in front[:4]] or \
+        [ArrayPlacement(n_levels, n_levels, buffers=buffers)]
+
+
+# ---------------------------------------------------------------------------
+# Per-task enumeration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TaskChoice:
+    cfg: TaskConfig
+    report: TaskReport
+
+
+def enumerate_task(task: FusedTask, fg: FusedGraph, hw: Hardware,
+                   opts: SolverOptions, stats: SolveStats, deadline: float,
+                   per_combo: int = 2, cap: int = 2048) -> list[TaskChoice]:
+    """Candidate configs for one task, sorted by local latency.
+
+    Keeps the ``per_combo`` best placement combos for every (perm, tiles)
+    pair so the global phase (which rewires edges to on-chip buffers or ICI
+    streams and re-costs) can coordinate-descend over a rich list.  Local
+    costs assume off-chip edges — a lower bound refined globally."""
+    sl = hw.slices[0]
+    perms = candidate_perms(task, opts)
+    tiles_menu = candidate_tiles(task, opts)
+    reads = task.read_arrays()
+    out: list[TaskChoice] = []
+
+    loops = list(task.loops)
+    combos = 1
+    for l in loops:
+        combos *= len(tiles_menu[l])
+    stats.space_size += len(perms) * combos
+
+    overlap_opts = (True, False) if opts.caps.overlap else (False,)
+    for perm in perms:
+        for tile_sel in itertools.product(*(tiles_menu[l] for l in loops)):
+            # honour the deadline only once at least one feasible config
+            # exists (under heavy CPU contention the budget can elapse
+            # before the first evaluation — never return empty-handed)
+            if out and time.monotonic() > deadline:
+                stats.timed_out = True
+                return _sorted_choices(out, cap)
+            tiles = dict(zip(loops, tile_sel))
+            local: list[TaskChoice] = []
+            for overlap in overlap_opts:   # N_a: buffering is a variable
+                out_opts = _placement_options(
+                    task, perm, tiles, fg, hw, opts, task.output_array,
+                    is_output=True, overlap=overlap)
+                read_opts = [
+                    _placement_options(task, perm, tiles, fg, hw, opts, a,
+                                       is_output=False, overlap=overlap)
+                    for a in reads]
+                for out_pl in out_opts:
+                    for read_sel in itertools.product(*read_opts) \
+                            if read_opts else [()]:
+                        placements = dict(zip(reads, read_sel))
+                        placements[task.output_array] = out_pl
+                        cfg = TaskConfig(perm=perm, tiles=tiles,
+                                         placements=placements, slice_id=0)
+                        rep = task_report(task, cfg, fg, hw)
+                        stats.n_evaluated += 1
+                        if rep.vmem_bytes > sl.vmem:
+                            continue
+                        local.append(TaskChoice(cfg, rep))
+            local.sort(key=lambda c: c.report.latency_s)
+            out.extend(local[:per_combo])
+    return _sorted_choices(out, cap)
+
+
+def _sorted_choices(choices: list[TaskChoice], cap: int) -> list[TaskChoice]:
+    return sorted(choices, key=lambda c: (c.report.latency_s,
+                                          c.report.vmem_bytes))[:cap]
+
+
+# ---------------------------------------------------------------------------
+# Edge routing: shared on-chip buffer (same slice) vs ICI stream (cross)
+# ---------------------------------------------------------------------------
+def _rewire_edges(fg: FusedGraph, choice: dict[int, TaskChoice],
+                  assign: dict[int, int], hw: Hardware,
+                  opts: SolverOptions) -> dict[int, TaskConfig]:
+    """Route each dataflow edge and rewrite BOTH endpoint placements.
+
+    Routing per edge:
+      same slice  -> shared VMEM buffer handoff when the consumer buffer
+                     fits (``onchip``), else HBM bounce;
+      cross slice -> the bytes traverse ICI either way (distributed
+                     memory), so both endpoints are marked ``stream``;
+                     whether the consumer may *start early* (the paper's
+                     FIFO shift, Eq. 12) is decided in ``dag_latency`` from
+                     emission-order compatibility.
+    A producer feeding several consumers takes the most conservative
+    routing (HBM if any edge bounces, stream if any crosses slices).
+    """
+    caps = opts.caps
+    cfgs: dict[int, TaskConfig] = {}
+    for t in fg.tasks:
+        cfgs[t.tid] = dataclasses.replace(choice[t.tid].cfg,
+                                          slice_id=assign[t.tid])
+    producer_route: dict[int, set[str]] = {t.tid: set() for t in fg.tasks}
+    for (u, v, arr) in fg.edges:
+        ccfg = cfgs[v]
+        if arr not in ccfg.placements:
+            continue
+        pl = ccfg.placements[arr]
+        same = assign[u] == assign[v]
+        if same:
+            consumer = fg.tasks[v]
+            buf = footprint_elems(ccfg, consumer, arr, pl.define_level) \
+                * fg.graph.arrays[arr].dtype_bytes * pl.buffers
+            if buf <= hw.vmem:
+                new = pl.replace(onchip=True, stream=False)
+                producer_route[u].add("onchip")
+            else:
+                new = pl.replace(onchip=False, stream=False)
+                producer_route[u].add("hbm")
+        else:
+            new = pl.replace(stream=True, onchip=False)
+            producer_route[u].add("stream")
+        placements = dict(ccfg.placements)
+        placements[arr] = new
+        cfgs[v] = dataclasses.replace(ccfg, placements=placements)
+    # Producer output placements
+    for (u, v, arr) in fg.edges:
+        ucfg = cfgs[u]
+        out_arr = fg.tasks[u].output_array
+        if out_arr != arr or out_arr not in ucfg.placements:
+            continue
+        routes = producer_route[u]
+        upl = ucfg.placements[out_arr]
+        if "hbm" in routes or not routes:
+            new = upl.replace(stream=False, onchip=False)
+        elif "stream" in routes:
+            new = upl.replace(stream=True, onchip=False)
+        else:
+            new = upl.replace(onchip=True, stream=False)
+        uplace = dict(ucfg.placements)
+        uplace[out_arr] = new
+        cfgs[u] = dataclasses.replace(ucfg, placements=uplace)
+    return cfgs
+
+
+# ---------------------------------------------------------------------------
+# Global phase: slice assignment + config choice
+# ---------------------------------------------------------------------------
+def _evaluate(fg: FusedGraph, choice: dict[int, TaskChoice],
+              assign: dict[int, int], hw: Hardware, opts: SolverOptions) \
+        -> tuple[float, dict[int, TaskConfig], dict[int, TaskReport]]:
+    cfgs = _rewire_edges(fg, choice, assign, hw, opts)
+    lat, reports = plan_latency(fg, cfgs, hw)
+    # VMEM feasibility after rewiring (on-chip buffers count on both sides)
+    for t in fg.tasks:
+        if reports[t.tid].vmem_bytes > hw.slices[assign[t.tid]].vmem:
+            lat = float("inf")
+    return lat, cfgs, reports
+
+
+def solve(graph: TaskGraph, hw: Hardware,
+          opts: SolverOptions | None = None) -> ExecutionPlan:
+    opts = opts or SolverOptions()
+    caps = opts.caps
+    t0 = time.monotonic()
+    deadline = t0 + opts.time_budget_s
+    stats = SolveStats()
+    fg = fuse(graph)
+
+    if caps.joint_search:
+        plan = _solve_joint(fg, hw, opts, stats, deadline)
+    else:
+        plan = _solve_decomposed(fg, hw, opts, stats, deadline)
+    plan.solver_seconds = time.monotonic() - t0
+    plan.n_evaluated = stats.n_evaluated
+    plan.mode = opts.mode
+    plan.space_size = stats.space_size
+    plan.timed_out = stats.timed_out
+    return plan
+
+
+def _solve_decomposed(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
+                      stats: SolveStats, deadline: float) -> ExecutionPlan:
+    """Prometheus decomposition (paper §6.4): dataflow decouples tasks, so
+    the search is per-task candidate lists + a global placement phase
+    (slice assignment x candidate picks) refined by coordinate descent on
+    the true DAG objective.  Effective work is SUM of per-task spaces times
+    a few sweeps — not the PRODUCT the shared-buffer formulation needs."""
+    caps = opts.caps
+    per_task = {t.tid: enumerate_task(t, fg, hw, opts, stats, deadline)
+                for t in fg.tasks}
+    for tid, cands in per_task.items():
+        if not cands:
+            raise RuntimeError(f"no feasible config for task {tid} "
+                               f"(VMEM too small?)")
+    n_slices = hw.n_slices if (caps.concurrency and caps.multi_slice) else 1
+    tids = [t.tid for t in fg.tasks]
+
+    best = (float("inf"), None, None, None)
+    pick = {tid: 0 for tid in tids}
+    assign = {tid: 0 for tid in tids}
+
+    def evaluate(assign_: dict[int, int], pick_: dict[int, int]) -> float:
+        nonlocal best
+        choice = {tid: per_task[tid][pick_[tid]] for tid in tids}
+        lat, cfgs, reports = _evaluate(fg, choice, assign_, hw, opts)
+        stats.n_evaluated += 1
+        if lat < best[0]:
+            best = (lat, dict(assign_), cfgs, reports)
+        return lat
+
+    def assignment_search(pick_: dict[int, int]) -> dict[int, int]:
+        """Exact slice-assignment enumeration (symmetry-broken) for small
+        graphs, greedy + local moves otherwise."""
+        if n_slices == 1:
+            return {tid: 0 for tid in tids}
+        best_a = (float("inf"), {tid: 0 for tid in tids})
+        if len(tids) <= 7:
+            for combo in itertools.product(range(n_slices),
+                                           repeat=len(tids) - 1):
+                a = {tids[0]: 0}
+                for tid, s in zip(tids[1:], combo):
+                    a[tid] = s
+                lat = evaluate(a, pick_)
+                if lat < best_a[0]:
+                    best_a = (lat, dict(a))
+                if time.monotonic() > deadline:
+                    stats.timed_out = True
+                    break
+        else:
+            rng = random.Random(opts.seed)
+            a = {tid: tid % n_slices for tid in tids}
+            cur = evaluate(a, pick_)
+            best_a = (cur, dict(a))
+            for it in range(opts.anneal_iters):
+                if time.monotonic() > deadline:
+                    stats.timed_out = True
+                    break
+                tid = rng.choice(tids)
+                old = a[tid]
+                a[tid] = rng.randrange(n_slices)
+                lat = evaluate(a, pick_)
+                temp = max(1e-12, 1.0 - it / max(opts.anneal_iters, 1))
+                if lat < cur or rng.random() < temp * 0.05:
+                    cur = lat
+                    if lat < best_a[0]:
+                        best_a = (lat, dict(a))
+                else:
+                    a[tid] = old
+        return best_a[1]
+
+    evaluate(assign, pick)
+    assign = assignment_search(pick)
+
+    # Coordinate descent over per-task candidate lists against the global
+    # DAG objective, interleaved with assignment re-search.
+    for _sweep in range(6):
+        improved = False
+        for tid in tids:
+            cur_lat = best[0]
+            cur_k = pick[tid]
+            for k in range(len(per_task[tid])):
+                if time.monotonic() > deadline:
+                    stats.timed_out = True
+                    break
+                if k == cur_k:
+                    continue
+                trial = dict(pick)
+                trial[tid] = k
+                lat = evaluate(assign, trial)
+                if lat < cur_lat:
+                    cur_lat = lat
+                    pick = trial
+                    improved = True
+            if time.monotonic() > deadline:
+                break
+        if improved and n_slices > 1:
+            new_assign = assignment_search(pick)
+            if new_assign != assign:
+                assign = new_assign
+                continue
+        if not improved or time.monotonic() > deadline:
+            break
+
+    lat, assign, cfgs, reports = best
+    if cfgs is None:
+        raise RuntimeError("solver found no feasible plan")
+    useful = sum(t.flops for t in fg.tasks)
+    return ExecutionPlan(graph_name=fg.graph.name, configs=cfgs,
+                         reports=reports, latency_s=lat,
+                         useful_flops=useful)
+
+
+def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
+                 stats: SolveStats, deadline: float) -> ExecutionPlan:
+    """Sisyphus-style shared-buffer formulation: permutations and tiles are
+    coupled across tasks (one product space).  This is the formulation whose
+    size explodes with task count (paper Table 10: 3mm times out at 4 h).
+
+    We record the raw product-space size (the blowup) and, like a good NLP
+    solver under a time budget, navigate it with coordinate descent: sweep
+    tasks, re-optimizing each against the fixed others, until a fixpoint or
+    the deadline.  ``timed_out`` is set when the exhaustive space could not
+    have been covered within the budget (the Table 10 condition)."""
+    tids = [t.tid for t in fg.tasks]
+    spaces: dict[int, list[tuple]] = {}
+    for t in fg.tasks:
+        perms = candidate_perms(t, opts)
+        tiles_menu = candidate_tiles(t, opts)
+        loops = list(t.loops)
+        combos = []
+        for perm in perms:
+            for sel in itertools.product(*(tiles_menu[l] for l in loops)):
+                combos.append((perm, dict(zip(loops, sel))))
+        spaces[t.tid] = combos
+    size = 1.0
+    for tid in tids:
+        size *= len(spaces[tid])
+    stats.space_size = size
+
+    assign = {tid: 0 for tid in tids}
+
+    def make_choice(tid: int, perm, tiles) -> TaskChoice | None:
+        """Min-transfer placements, greedily demoted (next Pareto option:
+        smaller buffer, more transfers) until the joint VMEM budget fits."""
+        task = fg.tasks[tid]
+        reads = task.read_arrays()
+        options: dict[str, list[ArrayPlacement]] = {}
+        for a in reads:
+            options[a] = _placement_options(task, perm, tiles, fg, hw,
+                                            opts, a, is_output=False)
+        out_arr = task.output_array
+        options[out_arr] = _placement_options(task, perm, tiles, fg, hw,
+                                              opts, out_arr, is_output=True)
+        pick = {a: 0 for a in options}
+
+        def buf_bytes(a: str) -> float:
+            pl = options[a][pick[a]]
+            return footprint_elems(
+                TaskConfig(perm=perm, tiles=tiles,
+                           placements={a: pl}, slice_id=0),
+                task, a, pl.define_level) \
+                * fg.graph.arrays[a].dtype_bytes * pl.buffers
+
+        vmem_budget = hw.slices[0].vmem
+        for _ in range(sum(len(v) for v in options.values())):
+            if sum(buf_bytes(a) for a in options) <= vmem_budget:
+                break
+            # demote the biggest buffer that still has a next option
+            cand = sorted(options, key=buf_bytes, reverse=True)
+            for a in cand:
+                if pick[a] + 1 < len(options[a]):
+                    pick[a] += 1
+                    break
+            else:
+                return None
+        placements = {a: options[a][pick[a]] for a in options}
+        cfg = TaskConfig(perm=perm, tiles=tiles, placements=placements,
+                         slice_id=0)
+        rep = task_report(task, cfg, fg, hw)
+        stats.n_evaluated += 1
+        if rep.vmem_bytes > hw.slices[0].vmem:
+            return None
+        return TaskChoice(cfg, rep)
+
+    # init: per-task locally-best feasible config
+    choice: dict[int, TaskChoice] = {}
+    for tid in tids:
+        cands = [make_choice(tid, p, t) for (p, t) in spaces[tid]]
+        cands = [c for c in cands if c is not None]
+        if not cands:
+            raise RuntimeError(f"no feasible sisyphus config for task {tid}")
+        choice[tid] = min(cands, key=lambda c: c.report.latency_s)
+    best = _evaluate(fg, choice, assign, hw, opts)
+
+    improved = True
+    while improved and time.monotonic() < deadline:
+        improved = False
+        for tid in tids:
+            cur = best[0]
+            for (perm, tiles) in spaces[tid]:
+                if time.monotonic() > deadline:
+                    break
+                cand = make_choice(tid, perm, tiles)
+                if cand is None:
+                    continue
+                trial = dict(choice)
+                trial[tid] = cand
+                lat, cfgs, reports = _evaluate(fg, trial, assign, hw, opts)
+                if lat < cur:
+                    cur = lat
+                    choice = trial
+                    best = (lat, cfgs, reports)
+                    improved = True
+    # Exhaustive coverage check: the joint product space vs what the budget
+    # allowed — this is what times out for 3mm in the paper.
+    evals_per_s = max(stats.n_evaluated, 1) / max(
+        time.monotonic() - (deadline - opts.time_budget_s), 1e-6)
+    if size > evals_per_s * opts.time_budget_s:
+        stats.timed_out = True
+
+    lat, cfgs, reports = best
+    useful = sum(t.flops for t in fg.tasks)
+    return ExecutionPlan(graph_name=fg.graph.name, configs=cfgs,
+                         reports=reports, latency_s=lat,
+                         useful_flops=useful)

@@ -1,0 +1,224 @@
+"""Affine task graphs — the paper's dependency-graph IR (§3.1).
+
+The paper starts from affine C code, applies maximal loop distribution so each
+loop body holds one statement, and builds a dependency graph whose nodes are
+tasks and whose edges carry data tiles (PoCC/ISCC provide trip counts,
+schedules and dependences).  This module is the equivalent IR, constructed
+directly in Python: each :class:`Statement` carries its iteration domain
+(ordered loops with trip counts), its array accesses (one iterator per array
+dimension — the affine subset the paper targets), and its reduction loops.
+
+The graph is deliberately *synchronous-dataflow* flavoured: all extents are
+static, so footprints, transfer volumes and FLOP counts are exact — the
+property §3 of the paper relies on ("compile-time awareness enables a precise
+model").
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Array:
+    """A named dense array.  ``offchip`` marks arrays that live in HBM (DDR
+    analogue); intermediates produced and consumed on-chip may still be
+    spilled if the solver decides so."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype_bytes: int = 4
+    offchip: bool = True
+
+    @property
+    def bytes(self) -> int:
+        return int(np.prod(self.shape)) * self.dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    """An affine array access ``A[it_0][it_1]...`` — one iterator per dim.
+
+    ``None`` entries denote broadcast dims (the iterator set does not index
+    that dimension; e.g. ``x[j]`` inside loops (i, j) has dims ("j",)).
+    """
+
+    array: str
+    iters: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Statement:
+    """One fully-distributed loop body (paper Listing 5: S0..S5)."""
+
+    name: str
+    loops: tuple[str, ...]                  # written order, outermost first
+    trip_counts: Mapping[str, int]
+    reads: tuple[Access, ...]
+    writes: tuple[Access, ...]
+    flops_per_iter: float = 2.0             # e.g. 1 mul + 1 add
+    # Fraction of the rectangular domain actually executed (triangular
+    # domains in symm/trmm/syrk are ~0.5); keeps the model affine-exact in
+    # volume terms without full polyhedra.
+    density: float = 1.0
+    # How non-accumulator reads combine: "mul" = product (contracted over
+    # reduction loops), "add" = elementwise sum.  Drives the generic
+    # executor in core/apply.py.
+    op: str = "mul"
+
+    def __post_init__(self):
+        for acc in self.reads + self.writes:
+            for it in acc.iters:
+                if it is not None and it not in self.loops:
+                    raise ValueError(
+                        f"{self.name}: access {acc} uses iterator {it!r} "
+                        f"not in loops {self.loops}")
+
+    @property
+    def reduction_loops(self) -> tuple[str, ...]:
+        """Loops not appearing in any write access — accumulation dims."""
+        written = {it for w in self.writes for it in w.iters if it is not None}
+        return tuple(l for l in self.loops if l not in written)
+
+    @property
+    def domain_size(self) -> float:
+        return float(np.prod([self.trip_counts[l] for l in self.loops])) \
+            * self.density
+
+    @property
+    def flops(self) -> float:
+        return self.domain_size * self.flops_per_iter
+
+    def output_arrays(self) -> tuple[str, ...]:
+        return tuple(dict.fromkeys(w.array for w in self.writes))
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    """Dependency graph over distributed statements.
+
+    Edges are read-after-write array flows: statement ``v`` depends on ``u``
+    if ``v`` reads an array that ``u`` writes and ``u`` precedes ``v`` in
+    program order.  (Program order is the statement list order, as in the
+    paper's sequential affine input.)
+    """
+
+    name: str
+    arrays: dict[str, Array]
+    statements: list[Statement]
+
+    def __post_init__(self):
+        names = [s.name for s in self.statements]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate statement names")
+        for s in self.statements:
+            for acc in s.reads + s.writes:
+                if acc.array not in self.arrays:
+                    raise ValueError(f"{s.name} references unknown array "
+                                     f"{acc.array!r}")
+
+    # -- dependence structure -------------------------------------------------
+    def producer_of(self, array: str, before: int) -> int | None:
+        """Index of the last statement writing ``array`` before position
+        ``before`` in program order (RAW source)."""
+        for i in range(before - 1, -1, -1):
+            if array in self.statements[i].output_arrays():
+                return i
+        return None
+
+    def edges(self) -> list[tuple[int, int, str]]:
+        """(producer_idx, consumer_idx, array) RAW edges."""
+        out = []
+        for j, s in enumerate(self.statements):
+            for acc in s.reads:
+                i = self.producer_of(acc.array, j)
+                if i is not None:
+                    out.append((i, j, acc.array))
+        # WAW edges (init -> accumulate on the same array) — these are what
+        # output-stationary fusion later merges.
+        for j, s in enumerate(self.statements):
+            for arr in s.output_arrays():
+                i = self.producer_of(arr, j)
+                if i is not None:
+                    out.append((i, j, arr))
+        return sorted(set(out))
+
+    def external_inputs(self) -> list[str]:
+        """Arrays read before ever being written (true off-chip inputs)."""
+        written: set[str] = set()
+        inputs: list[str] = []
+        for s in self.statements:
+            for acc in s.reads:
+                if acc.array not in written and acc.array not in inputs:
+                    inputs.append(acc.array)
+            written.update(s.output_arrays())
+        return inputs
+
+    def final_outputs(self) -> list[str]:
+        """Arrays written and not consumed afterwards (results)."""
+        outs: list[str] = []
+        for i, s in enumerate(self.statements):
+            for arr in s.output_arrays():
+                consumed_later = any(
+                    arr in {a.array for a in t.reads}
+                    for t in self.statements[i + 1:])
+                overwritten_later = any(
+                    arr in t.output_arrays() for t in self.statements[i + 1:])
+                if not consumed_later and not overwritten_later \
+                        and arr not in outs:
+                    outs.append(arr)
+        return outs
+
+    def total_flops(self) -> float:
+        return sum(s.flops for s in self.statements)
+
+    def io_bytes(self) -> float:
+        """Minimum off-chip traffic: inputs once in + outputs once out."""
+        ins = sum(self.arrays[a].bytes for a in self.external_inputs())
+        outs = sum(self.arrays[a].bytes for a in self.final_outputs())
+        return float(ins + outs)
+
+
+# ---------------------------------------------------------------------------
+# Convenience builders
+# ---------------------------------------------------------------------------
+def matmul_statements(prefix: str, out: str, lhs: str, rhs: str,
+                      i: str, j: str, k: str,
+                      I: int, J: int, K: int,
+                      init: bool = True) -> list[Statement]:
+    """``out[i][j] (=0); out[i][j] += lhs[i][k] * rhs[k][j]`` — the 3mm/2mm
+    building block (paper Listing 4)."""
+    stmts = []
+    if init:
+        stmts.append(Statement(
+            name=f"{prefix}_init", loops=(i, j),
+            trip_counts={i: I, j: J},
+            reads=(), writes=(Access(out, (i, j)),),
+            flops_per_iter=0.0))
+    stmts.append(Statement(
+        name=f"{prefix}_mac", loops=(i, j, k),
+        trip_counts={i: I, j: J, k: K},
+        reads=(Access(lhs, (i, k)), Access(rhs, (k, j)),
+               Access(out, (i, j))),
+        writes=(Access(out, (i, j)),),
+        flops_per_iter=2.0))
+    return stmts
+
+
+def legal_permutations(stmt: Statement) -> list[tuple[str, ...]]:
+    """All legal inter-tile loop orders for a statement.
+
+    Following the paper (§3.4): reduction loops are pinned innermost (they
+    are pipelined directly above the task, ranked by trip count with the
+    largest innermost), so the NLP only permutes the non-reduction loops.
+    For the affine kernels targeted (fully permutable loop nests after
+    distribution) every order of the non-reduction loops is legal — the
+    ISCC legality check of the paper reduces to this for permutable nests.
+    """
+    red = list(stmt.reduction_loops)
+    red.sort(key=lambda l: stmt.trip_counts[l])  # largest trip count innermost
+    par = [l for l in stmt.loops if l not in red]
+    return [tuple(p) + tuple(red) for p in itertools.permutations(par)]

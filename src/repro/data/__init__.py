@@ -1,0 +1,4 @@
+from .synthetic import DataConfig, SyntheticLM
+from .loader import PrefetchLoader
+
+__all__ = ["DataConfig", "SyntheticLM", "PrefetchLoader"]

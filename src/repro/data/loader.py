@@ -1,0 +1,56 @@
+"""Background-prefetching loader over any ``batch(step)`` source."""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class PrefetchLoader:
+    """Pulls batches on a daemon thread ``depth`` steps ahead.
+
+    Restartable: ``seek(step)`` repositions the stream (used after
+    checkpoint restore / elastic rescale)."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self._source = source
+        self._depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread: threading.Thread | None = None
+        self._start()
+
+    def _start(self):
+        self._stop.clear()
+        self._q = queue.Queue(maxsize=self._depth)
+
+        def work(start: int):
+            s = start
+            while not self._stop.is_set():
+                item = self._source.batch(s)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((s, item), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                s += 1
+
+        self._thread = threading.Thread(target=work, args=(self._step,),
+                                        daemon=True)
+        self._thread.start()
+
+    def next(self):
+        step, item = self._q.get()
+        self._step = step + 1
+        return item
+
+    def seek(self, step: int):
+        self.close()
+        self._step = step
+        self._start()
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

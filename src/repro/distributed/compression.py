@@ -1,0 +1,111 @@
+"""Gradient compression for data-parallel reduction (shard_map layer).
+
+Distributed-optimization tricks for the DP axis:
+
+* ``allreduce_mean_bf16`` — cast to bf16 before the wire (2x bytes saved),
+  fp32 accumulation after.
+* ``allreduce_mean_int8_ef`` — symmetric int8 row quantization (the
+  ``kernels.quant`` scheme, 4x bytes saved) with **error feedback**: the
+  local quantization residual is carried to the next step, so the
+  compression bias telescopes instead of accumulating (Seide et al.;
+  1-bit Adam lineage).
+
+These run inside ``shard_map`` over the DP axes; the sharded pjit trainer
+uses plain fp32 reductions by default (the solver may switch — collective
+bytes are a §Perf lever).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def allreduce_mean(grads: Any, axis) -> Any:
+    return jax.tree.map(
+        lambda g: jax.lax.pmean(g, axis), grads)
+
+
+def allreduce_mean_bf16(grads: Any, axis) -> Any:
+    def one(g):
+        return jax.lax.pmean(g.astype(jnp.bfloat16), axis) \
+            .astype(jnp.float32)
+    return jax.tree.map(one, grads)
+
+
+def _rowwise(x: jax.Array) -> jax.Array:
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    if x.ndim == 1:
+        return x.reshape(1, -1)
+    return x.reshape(x.shape[0], -1)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8; returns (q int8, scale f32)."""
+    r = _rowwise(x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(r), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(r / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    shape: tuple[int, ...]) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def allreduce_mean_int8_ef(grads: Any, errors: Any, axis) \
+        -> tuple[Any, Any]:
+    """Error-feedback int8 compressed mean-all-reduce.
+
+    Returns (averaged fp32 grads, new error state).  ``errors`` is a pytree
+    like ``grads`` (zeros at step 0).
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        r = _rowwise(target)
+        # SHARED per-row scale (pmax over peers; one f32/row on the wire):
+        # the summed int8 payload then dequantizes to exactly the mean of
+        # the peers' local dequantizations, so the only residual is each
+        # peer's own rounding — which error feedback telescopes away.
+        amax = jax.lax.pmax(
+            jnp.max(jnp.abs(r), axis=-1, keepdims=True), axis)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(r / scale), -127, 127).astype(jnp.int8)
+        local_deq = (q.astype(jnp.float32) * scale).reshape(g.shape)
+        new_e = target - local_deq
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        mean = (qsum.astype(jnp.float32) * scale).reshape(g.shape) / n
+        return mean, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    means = treedef.unflatten([m for m, _ in out])
+    new_errors = treedef.unflatten([e for _, e in out])
+    return means, new_errors
+
+
+def zeros_like_errors(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_bytes(grads: Any, scheme: str) -> int:
+    """Wire bytes per step for reporting (fp32 baseline vs compressed)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = int(g.size)
+        rows = _rowwise(g).shape[0]
+        if scheme == "fp32":
+            total += 4 * n
+        elif scheme == "bf16":
+            total += 2 * n
+        elif scheme == "int8":
+            total += n + 4 * rows
+        else:
+            raise ValueError(scheme)
+    return total

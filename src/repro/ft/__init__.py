@@ -1,0 +1,6 @@
+from .straggler import StragglerConfig, StragglerMonitor
+from .supervisor import (FailurePlan, InjectedFailure, RestartStats,
+                         run_with_restarts)
+
+__all__ = ["StragglerConfig", "StragglerMonitor", "FailurePlan",
+           "InjectedFailure", "RestartStats", "run_with_restarts"]

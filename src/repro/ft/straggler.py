@@ -1,0 +1,68 @@
+"""Straggler detection & mitigation policy.
+
+At multi-pod scale individual hosts intermittently run slow (thermal
+throttling, network incast, background daemons).  The monitor keeps an EMA
+of per-host step times; a host exceeding ``threshold x EMA`` for
+``patience`` consecutive steps is flagged.  Mitigation = reassign its data
+shard across the remaining hosts (the synchronous-SGD-safe mitigation:
+identical math, smaller stragglers' share) and optionally trigger an
+elastic rescale if the host stays degraded.
+
+Single-host container: exercised in tests by feeding synthetic timing
+traces; the launcher threads per-host timings through ``observe``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    threshold: float = 1.8       # x EMA to flag
+    patience: int = 3            # consecutive slow steps before action
+    ema: float = 0.9
+    min_steps: int = 5           # warmup before flagging
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, cfg: StragglerConfig | None = None):
+        self.cfg = cfg or StragglerConfig()
+        self.n_hosts = n_hosts
+        self._ema: list[float | None] = [None] * n_hosts
+        self._slow_streak = [0] * n_hosts
+        self._steps = 0
+        self.reassigned: set[int] = set()
+
+    def observe(self, host_times: list[float]) -> list[int]:
+        """Feed one step's per-host wall times; returns hosts to demote."""
+        assert len(host_times) == self.n_hosts
+        self._steps += 1
+        fleet = sorted(t for i, t in enumerate(host_times)
+                       if i not in self.reassigned)
+        median = fleet[len(fleet) // 2] if fleet else 0.0
+        flagged = []
+        for i, t in enumerate(host_times):
+            if i in self.reassigned:
+                continue
+            prev = self._ema[i]
+            self._ema[i] = t if prev is None else \
+                self.cfg.ema * prev + (1 - self.cfg.ema) * t
+            baseline = min(self._ema[i], median) or t
+            if self._steps > self.cfg.min_steps \
+                    and t > self.cfg.threshold * max(median, 1e-9):
+                self._slow_streak[i] += 1
+            else:
+                self._slow_streak[i] = 0
+            if self._slow_streak[i] >= self.cfg.patience:
+                flagged.append(i)
+        return flagged
+
+    def demote(self, host: int) -> dict[int, float]:
+        """Remove a host from the data assignment; returns the new shard
+        fractions per remaining host."""
+        self.reassigned.add(host)
+        alive = [i for i in range(self.n_hosts) if i not in self.reassigned]
+        if not alive:
+            raise RuntimeError("all hosts demoted")
+        share = 1.0 / len(alive)
+        return {i: share for i in alive}

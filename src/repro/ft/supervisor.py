@@ -1,0 +1,85 @@
+"""Fault-tolerance supervisor: checkpoint-restart with failure injection.
+
+``run_with_restarts`` drives a step function under a restart budget: any
+exception (injected or real — preemption, XLA device loss) rolls the run
+back to the newest committed checkpoint and replays.  The data pipeline is
+deterministic per step, so replayed steps reproduce the identical stream.
+This is the single-process skeleton of the multi-pod supervisor: at scale
+the same state machine runs per-host with a coordinator election.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+log = logging.getLogger("repro.ft")
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic failure injection for tests: fail at these steps
+    (each fires once)."""
+    at_steps: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self._pending = set(self.at_steps)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class RestartStats:
+    restarts: int = 0
+    replayed_steps: int = 0
+    failures: list = dataclasses.field(default_factory=list)
+
+
+def run_with_restarts(*, total_steps: int, state, step_fn: Callable,
+                      save_fn: Callable, restore_fn: Callable,
+                      checkpoint_every: int, max_restarts: int = 5,
+                      failure_plan: FailurePlan | None = None
+                      ) -> tuple[object, RestartStats]:
+    """Generic restartable loop.
+
+    step_fn(state, step) -> state      (raises on failure)
+    save_fn(state, step) -> None
+    restore_fn() -> (state, step) | (None, None)
+    """
+    stats = RestartStats()
+    step = 0
+    restored, rstep = restore_fn()
+    if restored is not None:
+        state, step = restored, rstep + 1
+    while step < total_steps:
+        try:
+            if failure_plan is not None:
+                failure_plan.maybe_fail(step)
+            state = step_fn(state, step)
+            if (step + 1) % checkpoint_every == 0 or step + 1 == total_steps:
+                save_fn(state, step)
+            step += 1
+        except Exception as exc:      # noqa: BLE001 — restart on anything
+            stats.restarts += 1
+            stats.failures.append((step, repr(exc)))
+            log.warning("step %d failed (%s); restart %d/%d",
+                        step, exc, stats.restarts, max_restarts)
+            if stats.restarts > max_restarts:
+                raise
+            restored, rstep = restore_fn()
+            if restored is None:
+                stats.replayed_steps += step
+                step = 0
+            else:
+                state = restored
+                stats.replayed_steps += step - (rstep + 1)
+                step = rstep + 1
+    return state, stats

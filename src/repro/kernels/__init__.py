@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with padding + dispatch) and ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; compiled via Mosaic on TPU.
+"""
+from . import dispatch
+from .dispatch import kernel_impl, current_impl
+from .matmul import matmul
+from .flash_attention import flash_attention
+from .rglru import rglru
+from .rwkv6 import rwkv6
+from .quant import quantize, dequantize
+
+__all__ = [
+    "dispatch", "kernel_impl", "current_impl",
+    "matmul", "flash_attention", "rglru", "rwkv6",
+    "quantize", "dequantize",
+]

@@ -1,0 +1,4 @@
+from .ops import flash_attention
+from . import kernel, ops, ref
+
+__all__ = ["flash_attention", "kernel", "ops", "ref"]

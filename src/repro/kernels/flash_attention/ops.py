@@ -1,0 +1,49 @@
+"""Public wrapper: layout handling, GQA, padding, implementation dispatch.
+
+Accepts model-layout tensors q (B, S, H, D), k/v (B, S, Hkv, D); pads the
+sequence to a block multiple (padding keys sit at positions >= S, which the
+causal mask excludes for every real query row — communication padding that
+is exact by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import kernel, ref
+
+
+def _to_bh(x: jax.Array) -> jax.Array:
+    b, s, h, d = x.shape
+    return jnp.transpose(x, (0, 2, 1, 3)).reshape(b * h, s, d)
+
+
+def _from_bh(x: jax.Array, b: int, h: int) -> jax.Array:
+    bh, s, d = x.shape
+    return jnp.transpose(x.reshape(b, h, s, d), (0, 2, 1, 3))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 128,
+                    bk: int = 128, impl: str | None = None) -> jax.Array:
+    impl = impl or dispatch.current_impl()
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    qb, kb, vb = _to_bh(q), _to_bh(k), _to_bh(v)
+    if impl == "xla":
+        out = ref.attention(qb, kb, vb, causal=causal, window=window,
+                            scale=scale)
+        return _from_bh(out, b, h)
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    pad = (-s) % max(bq_, bk_)
+    if pad:
+        qb = jnp.pad(qb, ((0, 0), (0, pad), (0, 0)))
+        kb = jnp.pad(kb, ((0, 0), (0, pad), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pad), (0, 0)))
+    out = kernel.flash_attention(
+        qb, kb, vb, causal=causal, window=window, scale=scale,
+        bq=bq_, bk=bk_, interpret=(impl == "pallas_interpret"))
+    return _from_bh(out[:, :s], b, h)

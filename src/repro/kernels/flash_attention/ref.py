@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: naive masked softmax attention (fp32 accumulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None) -> jax.Array:
+    """q (BH, S, D), k/v (BHkv, S, D) with BH % BHkv == 0."""
+    bh_q, s, d = q.shape
+    bh_kv = k.shape[0]
+    group = bh_q // bh_kv
+    if group != 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import matmul
+from . import kernel, ops, ref
+
+__all__ = ["matmul", "kernel", "ops", "ref"]

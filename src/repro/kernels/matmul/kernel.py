@@ -1,0 +1,64 @@
+"""Block-tiled matmul Pallas kernel — the paper's tiling/unroll analogue.
+
+The (bm, bn, bk) block shape is exactly the solver's intra-tile choice
+(``TC_intra`` in the NLP): each grid step loads one (bm, bk) x (bk, bn)
+VMEM tile pair, feeds the MXU, and accumulates into a float32 VMEM scratch
+(the output-stationary buffer).  The pallas_call grid pipeline provides the
+double-buffered HBM->VMEM overlap the paper implements with ping-pong
+buffers (§2.1.5).
+
+Grid layout: (m-tiles, n-tiles, k-tiles), k innermost — the pipelined
+reduction loop of Eq. 16 (the output tile is revisited across k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = False) -> jax.Array:
+    """``x @ y`` with explicit VMEM tiling.
+
+    Shapes must be multiples of the block shape — callers pad first
+    (``ops.matmul`` applies the paper's computation padding automatically).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (f"unpadded dims {x.shape}x{y.shape} for blocks {(bm, bn, bk)}; "
+         f"use ops.matmul which pads")
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper: dispatch + automatic computation padding.
+
+Applies the paper's padding-for-computation (§2.1.6): dims are padded up to
+block multiples so any (bm, bn, bk) choice from the solver is legal, then the
+result is sliced back.  Zero padding is exact for matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import kernel, ref
+
+
+def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, impl: str | None = None) -> jax.Array:
+    """``x @ y`` under the configured kernel implementation."""
+    impl = impl or dispatch.current_impl()
+    if impl == "xla":
+        return ref.matmul(x, y)
+    m, n = x.shape[0], y.shape[1]
+    bm_, bn_, bk_ = (min(bm, _ceil(x.shape[0])), min(bn, _ceil(y.shape[1])),
+                     min(bk, _ceil(x.shape[1])))
+    xp = _pad_to(x, bm_, bk_)
+    yp = _pad_to(y, bk_, bn_)
+    out = kernel.matmul(xp, yp, bm=bm_, bn=bn_, bk=bk_,
+                        interpret=(impl == "pallas_interpret"))
+    return out[:m, :n]
+
+
+def _ceil(dim: int) -> int:
+    """Largest power-of-two block not exceeding the padded dim."""
+    b = 1
+    while b * 2 <= dim:
+        b *= 2
+    return b

@@ -1,0 +1,4 @@
+from .ops import quantize, dequantize
+from . import kernel, ops, ref
+
+__all__ = ["quantize", "dequantize", "kernel", "ops", "ref"]

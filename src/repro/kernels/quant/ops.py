@@ -1,0 +1,26 @@
+"""Public wrapper for int8 block quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import kernel, ref
+
+dequantize = ref.dequantize
+
+
+def quantize(x: jax.Array, *, bn: int = 256,
+             impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """Row-quantize a 2D array; returns (int8 values, f32 scales)."""
+    impl = impl or dispatch.current_impl()
+    if impl == "xla":
+        return ref.quantize(x)
+    n, d = x.shape
+    bn_ = min(bn, n)
+    pad = (-n) % bn_
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    q, s = kernel.quantize(x, bn=bn_,
+                           interpret=(impl == "pallas_interpret"))
+    return q[:n], s[:n]

@@ -1,0 +1,4 @@
+from .ops import rglru
+from . import kernel, ops, ref
+
+__all__ = ["rglru", "kernel", "ops", "ref"]

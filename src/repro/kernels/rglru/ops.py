@@ -1,0 +1,27 @@
+"""Public wrapper for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import kernel, ref
+
+
+def rglru(a: jax.Array, u: jax.Array, *, bs: int = 256,
+          impl: str | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + u_t over axis 1.  a, u: (B, S, D)."""
+    impl = impl or dispatch.current_impl()
+    if impl == "xla":
+        return ref.rglru(a, u)
+    b, s, d = a.shape
+    bs_ = min(bs, s)
+    pad = (-s) % bs_
+    if pad:
+        # zero-pad decay and input: padded steps hold h constant*0 + 0 — but
+        # a=0 would RESET the state; pad at the END so real steps are done.
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    out = kernel.rglru(a, u, bs=bs_,
+                       interpret=(impl == "pallas_interpret"))
+    return out[:, :s]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru(a: jax.Array, u: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + u_t; a, u (B, S, D)."""
+    def step(h, au):
+        a_t, u_t = au
+        h = a_t * h + u_t
+        return h, h
+
+    a32 = a.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.swapaxes(a32, 0, 1), jnp.swapaxes(u32, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,4 @@
+from .ops import rwkv6
+from . import kernel, ops, ref
+
+__all__ = ["rwkv6", "kernel", "ops", "ref"]

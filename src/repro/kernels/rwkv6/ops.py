@@ -1,0 +1,32 @@
+"""Public wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import kernel, ref
+
+
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+          u: jax.Array, *, bs: int = 128, impl: str | None = None,
+          return_state: bool = False):
+    impl = impl or dispatch.current_impl()
+    if impl == "xla":
+        return ref.rwkv6(r, k, v, w, u, return_state=return_state)
+    bh, s, dk = r.shape
+    bs_ = min(bs, s)
+    pad = (-s) % bs_
+    if pad:
+        pad_spec = ((0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, pad_spec)
+        k = jnp.pad(k, pad_spec)
+        v = jnp.pad(v, pad_spec)
+        # padded steps must leave the state unchanged: w = 1, k = 0
+        w = jnp.pad(w, pad_spec, constant_values=1.0)
+    out, state = kernel.rwkv6(r, k, v, w, u, bs=bs_,
+                              interpret=(impl == "pallas_interpret"))
+    out = out[:, :s]
+    if return_state:
+        return out, state
+    return out

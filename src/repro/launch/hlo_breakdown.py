@@ -1,0 +1,84 @@
+"""HLO byte/instruction breakdown — the dry-run 'profiler' (§Perf).
+
+With no real TPU, the profile is the optimized HLO itself: aggregate the
+RESULT bytes of every instruction by opcode (a proxy for the per-op memory
+traffic XLA's HloCostAnalysis charges) and count instructions.  The §Perf
+hypothesis loop reads this to find which operator class dominates the
+memory term (attention score maps?  loss logits?  optimizer state?).
+
+Usage:
+    from repro.launch import hlo_breakdown
+    top = hlo_breakdown.by_opcode(compiled.as_text())
+    hlo_breakdown.pretty(top)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# "  %name = bf16[8,128]{1,0} opcode(...)"  (also tuple results)
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[a-z0-9]+\[[^A-Z(]*?)\s+"
+    r"([a-z][\w\-]*)\(", re.M)
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def by_opcode(hlo_text: str) -> dict[str, dict]:
+    """opcode -> {'bytes': result bytes, 'count': instructions}."""
+    agg: dict[str, dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for m in _INSTR.finditer(hlo_text):
+        shapes, op = m.groups()
+        agg[op]["bytes"] += _shape_bytes(shapes)
+        agg[op]["count"] += 1
+    return dict(agg)
+
+
+def top_shapes(hlo_text: str, opcode: str, k: int = 10) \
+        -> list[tuple[int, str]]:
+    """The k largest result shapes of one opcode (where the bytes live)."""
+    out: list[tuple[int, str]] = []
+    for m in _INSTR.finditer(hlo_text):
+        shapes, op = m.groups()
+        if op == opcode:
+            out.append((_shape_bytes(shapes), shapes.strip()))
+    out.sort(reverse=True)
+    dedup: list[tuple[int, str]] = []
+    seen = set()
+    for b, s in out:
+        if s not in seen:
+            dedup.append((b, s))
+            seen.add(s)
+        if len(dedup) >= k:
+            break
+    return dedup
+
+
+def pretty(agg: dict[str, dict], k: int = 15) -> str:
+    rows = sorted(agg.items(), key=lambda kv: -kv[1]["bytes"])[:k]
+    total = sum(v["bytes"] for v in agg.values())
+    lines = [f"{'opcode':24s} {'GiB':>9s} {'%':>6s} {'count':>7s}"]
+    for op, v in rows:
+        lines.append(f"{op:24s} {v['bytes'] / 2**30:9.2f} "
+                     f"{100 * v['bytes'] / max(total, 1):6.1f} "
+                     f"{v['count']:7d}")
+    lines.append(f"{'TOTAL':24s} {total / 2**30:9.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,88 @@
+"""Collective-traffic extraction from compiled/lowered HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so the roofline's
+collective term is derived here: sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction in the (post-SPMD) HLO module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# shape tokens like  bf16[8,128]{1,0}  or  f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# instruction lines:  %name = <result shape(s)> <op>(operands), attrs
+# (optimized HLO prints operand NAMES without shapes, so traffic is
+# derived from the result shape + replica-group size)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(([^)]*)\)([^\n]*)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind bytes moved (per participating device), summed over the
+    module.
+
+    result-shape semantics per op:
+      all-gather          result = gathered tensor = bytes received
+      all-reduce          result = reduced tensor  = operand bytes
+      reduce-scatter      result = one shard -> x group_size = input bytes
+      all-to-all          result = exchanged tensor
+      collective-permute  result = forwarded tensor
+    ``-done`` halves of async pairs are skipped so traffic is not
+    double-counted.
+    """
+    out: dict[str, int] = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        result_shapes, op, startdone, _operands, attrs = m.groups()
+        if startdone == "-start":
+            # async pair: the -done half carries the clean result shape
+            continue
+        nbytes = _shape_bytes(result_shapes)
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(attrs)
+            if g:
+                nbytes *= int(g.group(2))
+        out[op] += nbytes
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def collective_summary(hlo_text: str) -> dict:
+    per = collective_bytes(hlo_text)
+    counts = {op: count_ops(hlo_text, op) for op in COLLECTIVE_OPS}
+    return {"bytes_by_op": per,
+            "counts": {k: v for k, v in counts.items() if v},
+            "total_bytes": sum(per.values())}

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the real (single) device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)} — run under dryrun.py which sets "
+            f"--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices[:n])

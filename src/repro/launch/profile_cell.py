@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Profile one dry-run cell: roofline terms + per-opcode HLO breakdown.
+
+    python -m repro.launch.profile_cell --arch yi-34b --shape train_4k \
+        [--attn-impl chunked] [--extra-cfg '{"remat": false}'] [--groups 2]
+
+Profiles the (unrolled, cost-exact) calibration module — the same numbers
+the roofline table is built from — and prints where the bytes live.
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch import hlo_breakdown, hlo_parse
+from repro.launch.dryrun import SHAPES, _measure, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import RooflineReport, model_flops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--extra-cfg", default=None)
+    ap.add_argument("--groups", type=int, default=2,
+                    help="unrolled groups to profile (cost module)")
+    ap.add_argument("--top-op", default=None,
+                    help="also print the largest shapes of this opcode")
+    ap.add_argument("--shard-override", default=None)
+    args = ap.parse_args()
+
+    if args.shard_override:
+        from repro.distributed import sharding as sh
+        sh.set_overrides(json.loads(args.shard_override))
+    cfg = get_config(args.arch)
+    extra = json.loads(args.extra_cfg) if args.extra_cfg else {}
+    if args.attn_impl:
+        extra["attn_impl"] = args.attn_impl
+    n_pat = len(cfg.pattern)
+    cal = dataclasses.replace(
+        cfg, **extra, n_layers=args.groups * n_pat, unroll_layers=True,
+        loss_chunk=1 << 30)
+    mesh = make_production_mesh()
+    lowered, aux = lower_cell(cal, args.shape, mesh)
+    compiled = lowered.compile()
+    m = _measure(compiled)
+    groups_eff = cfg.n_layers / n_pat
+    print(f"== {args.arch} x {args.shape} ({args.groups} unrolled groups; "
+          f"full model = {groups_eff:.1f} groups) ==")
+    print(f"per-chip (this module): flops={m['flops']:.3e} "
+          f"bytes={m['bytes']:.3e} coll={m['coll_bytes']:.3e}")
+    hlo = compiled.as_text()
+    print(hlo_breakdown.pretty(hlo_breakdown.by_opcode(hlo)))
+    print("collectives:", json.dumps(hlo_parse.collective_summary(hlo)
+                                     ["bytes_by_op"]))
+    if args.top_op:
+        print(f"largest {args.top_op} results:")
+        for b, s in hlo_breakdown.top_shapes(hlo, args.top_op):
+            print(f"  {b / 2**20:10.1f} MiB  {s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Three-term roofline analysis from dry-run compile artifacts.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Hardware constants per the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (TPU v5e).  ``cost_analysis()`` of an SPMD-partitioned
+executable reports the per-partition (per-chip) module, so its flops/bytes
+feed the formulas directly (verified in tests/test_dryrun).
+
+MODEL_FLOPS is the analytic useful work (6·N·D dense, 6·N_active·D MoE);
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/attention/padding
+overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.resources import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from ..models.model import ModelConfig
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_total: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: overlapped terms -> the max dominates."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_total = self.flops_per_chip * self.n_chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak the useful model FLOPs achieve at
+        the roofline step time — the §Perf score."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops_total / (t * self.n_chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (experts scaled by top_k/n_experts),
+    embeddings excluded (lookup, not matmul); lm_head included."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hq, hkv, hd = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    per_layer = {}
+    per_layer["attn"] = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+    per_layer["swa"] = per_layer["attn"]
+    dr = cfg.rnn_width
+    per_layer["rglru"] = 2 * d * dr + 2 * dr * dr + dr * d
+    per_layer["rwkv6"] = 5 * d * d + 2 * d * 64 + 2 * d * f + d * d
+    if cfg.ffn == "swiglu":
+        ffn = 3 * d * f
+    elif cfg.ffn == "gelu":
+        ffn = 2 * d * f
+    elif cfg.ffn == "moe":
+        dense_frac = cfg.moe_top_k / max(cfg.n_experts, 1)
+        ffn = 3 * d * f * cfg.n_experts * dense_frac + d * cfg.n_experts
+    else:   # rwkv_cm counted in the mixer entry
+        ffn = 0
+    total = 0.0
+    for i in range(cfg.n_layers):
+        total += per_layer[cfg.mixer_at(i)] + ffn
+    total += d * v          # lm_head
+    return total
+
+
+def model_flops(cfg: ModelConfig, n_tokens: float,
+                kind: str) -> float:
+    """6·N_active·tokens (fwd+bwd) for training, 2·N_active·tokens for
+    inference (fwd only)."""
+    n = active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,10 @@
+"""Model zoo: generic decoder with pluggable mixers/FFNs."""
+from .model import (ModelConfig, init_params, forward, lm_loss, logits_fn,
+                    prefill, decode_step, init_cache, param_count)
+from . import attention, common, ffn, rglru_block, rwkv6_block
+
+__all__ = [
+    "ModelConfig", "init_params", "forward", "lm_loss", "logits_fn",
+    "prefill", "decode_step", "init_cache", "param_count",
+    "attention", "common", "ffn", "rglru_block", "rwkv6_block",
+]

@@ -1,0 +1,337 @@
+"""Attention with selectable implementations (the solver's choice axis).
+
+Implementations (``AttnImpl``):
+
+  ``naive``      full (S,S) masked logits — the oracle; O(S^2) memory.
+  ``chunked``    scan over query chunks against full K/V — O(S*C) memory,
+                 full S^2 FLOPs (masked blocks still computed).  The
+                 paper-faithful tiling baseline: blocking without domain
+                 pruning.
+  ``recursive``  recursive-halving causal attention: the strictly-causal
+                 part decomposes into log2(S/C) levels of *unmasked*
+                 rectangular attention (upper-half Q vs lower-half K/V,
+                 batched across sub-blocks) plus masked diagonal base
+                 blocks.  ~S^2/2 + S*C FLOPs with static shapes — the
+                 XLA-visible analogue of flash-attention block skipping;
+                 a beyond-paper optimization measured in §Perf.
+  ``windowed``   sliding-window attention in O(S*(W+C)) via per-chunk
+                 dynamic KV slices (mixtral SWA, recurrentgemma local).
+  ``pallas``     the flash-attention Pallas kernel (TPU; interpret in
+                 tests).
+
+All paths share fp32 softmax statistics and merge via the online-softmax
+(acc, m, l) triple.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import ops as flash_ops
+
+AttnImpl = Literal["naive", "chunked", "recursive", "windowed", "pallas"]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# online-softmax piece algebra: a piece is (acc, m, l) with
+#   out = acc / l,  acc = sum_j exp(s_j - m) v_j,  l = sum_j exp(s_j - m)
+# ---------------------------------------------------------------------------
+def _piece(q, k, v, *, scale: float, masked: bool = True,
+           row0=0, col0=0, causal: bool = True, window: int | None = None,
+           score_dtype=jnp.float32, gqa_grouped: bool = False):
+    """Attention piece of q (B,Sq,H,D) against k/v (B,Sk,Hkv,D).
+
+    Masking uses absolute positions: row = row0 + r, col = col0 + c;
+    valid iff (col <= row if causal) and (col > row - window) and col >= 0.
+    ``masked=False`` skips masking entirely (unmasked cross blocks in the
+    recursive decomposition).
+
+    §Perf levers (beyond-paper; baseline keeps the faithful defaults):
+      score_dtype=bf16   keeps the O(S^2) score/prob maps in bf16 — the
+                         row statistics (max, sum) stay fp32, which is
+                         what a fused TPU kernel holds in registers;
+      gqa_grouped=True   grouped einsum over (Hkv, G) instead of
+                         materialising repeated KV heads.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    group = h // hkv
+    if group > 1 and not gqa_grouped:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    if group > 1 and gqa_grouped:
+        qg = q.reshape(b, sq, hkv, group, d)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                       preferred_element_type=score_dtype) * scale
+        sm_axes = (0, 1, 2)        # (b, hkv, g) leading axes
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=score_dtype) * scale
+        sm_axes = (0, 1)
+    lead = (1,) * len(sm_axes)
+    if masked:
+        rows = row0 + jnp.arange(sq)[:, None]
+        cols = col0 + jnp.arange(sk)[None, :]
+        valid = cols >= 0
+        if causal:
+            valid &= cols <= rows
+        if window is not None:
+            valid &= cols > rows - window
+        s = jnp.where(valid.reshape(lead + (sq, sk)), s,
+                      jnp.asarray(NEG_INF, s.dtype))
+    m = jnp.max(s, axis=-1, keepdims=True).astype(jnp.float32)
+    p = jnp.exp((s - m.astype(s.dtype)))
+    if masked:
+        p = jnp.where(valid.reshape(lead + (sq, sk)), p,
+                      jnp.asarray(0.0, p.dtype))
+    l = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+    if group > 1 and gqa_grouped:
+        acc = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        acc = acc.reshape(b, sq, h, d)
+        m = jnp.transpose(m, (0, 3, 1, 2, 4)).reshape(b, sq, h, 1)
+        l = jnp.transpose(l, (0, 3, 1, 2, 4)).reshape(b, sq, h, 1)
+    else:
+        acc = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        m = jnp.transpose(m, (0, 2, 1, 3))                      # (B,Sq,H,1)
+        l = jnp.transpose(l, (0, 2, 1, 3))
+    return acc.astype(jnp.float32), m, l
+
+
+def _merge(p1, p2):
+    acc1, m1, l1 = p1
+    acc2, m2, l2 = p2
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return acc1 * c1 + acc2 * c2, m, l1 * c1 + l2 * c2
+
+
+def _finalize(piece, dtype):
+    acc, _, l = piece
+    return (acc / jnp.maximum(l, 1e-30)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              impl: AttnImpl = "chunked", window: int | None = None,
+              chunk: int = 512, scale: float | None = None,
+              unroll: bool = False, score_dtype=jnp.float32,
+              gqa_grouped: bool = False) -> jax.Array:
+    """Causal (optionally sliding-window) self attention.
+
+    q (B,S,H,D); k,v (B,S,Hkv,D) with H % Hkv == 0.  Returns (B,S,H,D).
+    ``window`` counts the current token (window=1 sees only itself).
+    ``unroll`` python-unrolls the chunk maps (dry-run cost fidelity:
+    HloCostAnalysis counts a loop body once; unrolled bodies count fully).
+    """
+    b, s, h, d = q.shape
+    if scale is None:
+        scale = d ** -0.5
+    if impl == "pallas":
+        return flash_ops.flash_attention(q, k, v, causal=True, window=window,
+                                         scale=scale)
+    kw = dict(score_dtype=score_dtype, gqa_grouped=gqa_grouped)
+    if window is not None and impl != "naive":
+        if s > window:
+            return _windowed(q, k, v, window, min(chunk, s), scale, unroll,
+                             **kw)
+        # window covers everything: plain causal
+        window = None
+    if impl == "naive" or s <= chunk:
+        return _finalize(
+            _piece(q, k, v, scale=scale, causal=True, window=window, **kw),
+            q.dtype)
+    if impl == "chunked":
+        return _chunked(q, k, v, chunk, scale, unroll, **kw)
+    if impl == "recursive":
+        return _recursive(q, k, v, chunk, scale, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def _map(fn, args, unroll: bool):
+    """lax.map, or a python loop when ``unroll`` (cost-visible HLO)."""
+    if not unroll:
+        return jax.lax.map(fn, args)
+    n = args[0].shape[0]
+    outs = [fn(tuple(a[i] for a in args)) for i in range(n)]
+    return jnp.stack(outs)
+
+
+def _chunked(q, k, v, chunk, scale, unroll=False, **kw):
+    """Scan over q chunks vs full K/V — bounded memory, full FLOPs."""
+    b, s, h, d = q.shape
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = q.shape[1] // chunk
+    qc = jnp.moveaxis(q.reshape(b, n, chunk, h, d), 1, 0)
+
+    def one(args):
+        i, q_i = args
+        return _finalize(
+            _piece(q_i, k, v, scale=scale, row0=i * chunk, causal=True,
+                   **kw),
+            q.dtype)
+
+    out = _map(one, (jnp.arange(n), qc), unroll)
+    return jnp.moveaxis(out, 0, 1).reshape(b, n * chunk, h, d)[:, :s]
+
+
+def _recursive(q, k, v, base, scale, **kw):
+    """Recursive halving: FLOPs ~ S^2/2 + S*base, static shapes."""
+    b, s, h, d = q.shape
+
+    def rec(q_, k_, v_):
+        bb, ss = q_.shape[0], q_.shape[1]
+        if ss <= base:
+            return _piece(q_, k_, v_, scale=scale, causal=True, **kw)
+        half = ss // 2
+        q1, q2 = q_[:, :half], q_[:, half:]
+        k1, k2 = k_[:, :half], k_[:, half:]
+        v1, v2 = v_[:, :half], v_[:, half:]
+        # both halves recurse together as a doubled batch
+        qs = jnp.concatenate([q1, q2], axis=0)
+        ks = jnp.concatenate([k1, k2], axis=0)
+        vs = jnp.concatenate([v1, v2], axis=0)
+        acc, m, l = rec(qs, ks, vs)
+        piece1 = (acc[:bb], m[:bb], l[:bb])
+        piece2 = (acc[bb:], m[bb:], l[bb:])
+        # upper-half queries also see the whole lower half — unmasked
+        cross = _piece(q2, k1, v1, scale=scale, masked=False, **kw)
+        acc2, m2, l2 = _merge(piece2, cross)
+        return (jnp.concatenate([piece1[0], acc2], axis=1),
+                jnp.concatenate([piece1[1], m2], axis=1),
+                jnp.concatenate([piece1[2], l2], axis=1))
+
+    # pad to a power-of-two multiple of base (computation padding);
+    # padded KEY rows sit at positions >= s, masked by causality for all
+    # real rows; padded QUERY rows are sliced off.
+    target = base
+    while target < s:
+        target *= 2
+    if target != s:
+        pad = target - s
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _finalize(rec(q, k, v), q.dtype)
+    return out[:, :s]
+
+
+def _windowed(q, k, v, window, chunk, scale, unroll=False, **kw):
+    """Sliding window: each q chunk gathers a (window+chunk) KV slice.
+
+    KV is left-padded by ``span`` so slices are fixed-size; masking uses
+    absolute positions so the padding (col < 0) is excluded exactly."""
+    b, s, h, d = q.shape
+    pad_s = (-s) % chunk
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    n = q.shape[1] // chunk
+    span = window + chunk
+    kp = jnp.pad(k, ((0, 0), (span, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (span, 0), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(q.reshape(b, n, chunk, h, d), 1, 0)
+
+    def one(args):
+        i, q_i = args
+        # original-coordinate slice [ (i+1)*chunk - span, (i+1)*chunk )
+        lo = (i + 1) * chunk              # in padded coords (shift +span)
+        k_i = jax.lax.dynamic_slice_in_dim(kp, lo, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, lo, span, axis=1)
+        piece = _piece(q_i, k_i, v_i, scale=scale,
+                       row0=i * chunk, col0=(i + 1) * chunk - span,
+                       causal=True, window=window, **kw)
+        return _finalize(piece, q.dtype)
+
+    out = _map(one, (jnp.arange(n), qc), unroll)
+    return jnp.moveaxis(out, 0, 1).reshape(b, n * chunk, h, d)[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token against a KV cache
+# ---------------------------------------------------------------------------
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length, *, scale: float | None = None) -> jax.Array:
+    """q (B,1,H,D); caches (B,Sc,Hkv,D); ``length`` (B,) or scalar = number
+    of valid cache entries.  For ring-buffer (windowed) caches the caller
+    passes length = cache size once full."""
+    b, _, h, d = q.shape
+    sc = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k_cache, group, axis=2) if group > 1 else k_cache
+    vv = jnp.repeat(v_cache, group, axis=2) if group > 1 else v_cache
+    sct = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                     preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(sc)[None, None, None, :]
+    length = jnp.asarray(length)
+    valid = pos < length.reshape(-1, 1, 1, 1)
+    sct = jnp.where(valid, sct, NEG_INF)
+    p = jax.nn.softmax(sct.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_blocks(q: jax.Array, read_chunk, n_chunks: int,
+                            chunk: int, length, *,
+                            scale: float | None = None,
+                            unroll: bool = False) -> jax.Array:
+    """Sequence-blocked decode attention (paged-attention-lite).
+
+    ``read_chunk(i)`` returns the (k, v) block (B, C, Hkv, D) for chunk i
+    — dequantisation happens per block, so the live working set is one
+    block instead of the whole (possibly int8-packed) cache (the temp
+    that blows HBM for 32k x batch-128 decode cells).  Pieces merge by
+    online softmax; fully-masked chunks contribute l = 0.
+    """
+    b, _, h, d = q.shape
+    if scale is None:
+        scale = d ** -0.5
+
+    def piece_of(i):
+        kk, vv = read_chunk(i)
+        kk = kk.astype(q.dtype)
+        vv = vv.astype(q.dtype)
+        sk = kk.shape[1]
+        hkv = kk.shape[2]
+        group = h // hkv
+        if group > 1:
+            kk = jnp.repeat(kk, group, axis=2)
+            vv = jnp.repeat(vv, group, axis=2)
+        sco = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                         preferred_element_type=jnp.float32) * scale
+        pos = i * chunk + jnp.arange(sk)
+        valid = pos < length
+        sco = jnp.where(valid[None, None, None, :], sco, NEG_INF)
+        m = jnp.max(sco, axis=-1, keepdims=True)
+        p = jnp.where(valid[None, None, None, :], jnp.exp(sco - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        acc = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv,
+                         preferred_element_type=jnp.float32)
+        m = jnp.transpose(m, (0, 2, 1, 3))
+        l = jnp.transpose(l, (0, 2, 1, 3))
+        # fully-masked chunk: force m to NEG_INF so _merge ignores it
+        m = jnp.where(jnp.any(valid), m, NEG_INF)
+        return acc.astype(jnp.float32), m, l
+
+    if unroll:
+        out = piece_of(0)
+        for i in range(1, n_chunks):
+            out = _merge(out, piece_of(jnp.asarray(i)))
+        return _finalize(out, q.dtype)
+    acc, m, l = jax.lax.map(piece_of, jnp.arange(n_chunks))
+    out = (acc[0], m[0], l[0])
+    for i in range(1, n_chunks):
+        out = _merge(out, (acc[i], m[i], l[i]))
+    return _finalize(out, q.dtype)

@@ -1,0 +1,66 @@
+"""Shared model building blocks: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Params in ``param_dtype`` (fp32 master), compute in ``compute_dtype``
+    (bf16 on the MXU), softmax/norm/loss accumulation in fp32."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.compute_dtype)
+
+
+DEFAULT_POLICY = DTypePolicy()
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 -> cos/sin (..., head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B or 1, S, D//2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...],
+               dtype=jnp.float32, fan_in: int | None = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...],
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype) * 0.02
+
+
+def split_keys(key: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))

@@ -1,0 +1,694 @@
+"""Decoder model assembly: config, init, forward / prefill / decode.
+
+Layer stacking uses ``lax.scan`` over *groups* (one group = one repetition
+of the mixer ``pattern``, e.g. RecurrentGemma's (rglru, rglru, attn)), with
+the non-dividing remainder unrolled as ``tail`` layers.  Scan keeps the HLO
+O(1) in depth — required for the 512-device dry-run compiles — and is remat
+boundary.
+
+Mixers: ``attn`` (full causal), ``swa`` (sliding window), ``rglru``
+(RecurrentGemma recurrent block), ``rwkv6`` (Finch time-mix).
+FFNs:   ``swiglu``, ``gelu``, ``moe``, ``rwkv_cm`` (channel-mix).
+
+Head-count padding (``pad_heads_to``/``pad_kv_heads_to``) applies the
+paper's padding-for-computation to tensor-parallel divisibility (yi-34b
+56->64 q heads etc.); the padded heads are real parameters — extra compute
+traded for legal parallelism, exactly the Listing 1 trade.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import rglru_block as rg_mod
+from . import rwkv6_block as rwkv_mod
+from .common import (apply_rope, dense_init, embed_init, rms_norm,
+                     rope_angles, split_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[str, ...] = ("attn",)
+    ffn: str = "swiglu"
+    n_experts: int = 0
+    moe_top_k: int = 0
+    window: int | None = None            # for "swa" mixers
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    embed_input: bool = True             # False: stub frontend feeds embeds
+    attn_impl: str = "recursive"
+    attn_chunk: int = 512
+    loss_chunk: int = 1024
+    capacity_factor: float = 1.25
+    d_rnn: int = 0                       # rglru recurrence width
+    remat: bool = True
+    # Dry-run fidelity: python-unroll the layer/loss scans so XLA's
+    # HloCostAnalysis (which counts while bodies ONCE) sees every layer.
+    unroll_layers: bool = False
+    compute_dtype: str = "bfloat16"      # or "float32" (tests/debug)
+    # Parameter storage dtype.  "bfloat16" stores model weights in bf16
+    # (casts vanish from the forward pass; gradients and their DP
+    # all-reduce go bf16) with an fp32 master copy living in the
+    # optimizer state — the standard mixed-precision recipe.  §Perf lever.
+    param_dtype: str = "float32"
+    kv_cache_dtype: str = "bfloat16"     # or "int8" / "float32"
+    # §Perf levers (beyond-paper; defaults are the faithful baseline):
+    attn_score_dtype: str = "float32"    # "bfloat16": bf16 score maps
+    gqa_grouped: bool = False            # grouped GQA einsum (no KV repeat)
+    ffn_act_f32: bool = True             # False: bf16 FFN activations
+    # Sequence-blocked decode attention (paged-attention-lite): the KV
+    # cache is read/dequantised one block at a time — the live working
+    # set shrinks from the whole cache to one block.  None = unblocked.
+    decode_chunk: int | None = None
+    pad_heads_to: int | None = None      # computation padding for TP
+    pad_kv_heads_to: int | None = None
+
+    @property
+    def q_heads(self) -> int:
+        return self.pad_heads_to or self.n_heads
+
+    @property
+    def kv_heads(self) -> int:
+        return self.pad_kv_heads_to or self.n_kv_heads
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> tuple[str, ...]:
+        return self.pattern[:self.n_layers % len(self.pattern)]
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    def mixer_at(self, layer: int) -> str:
+        return self.pattern[layer % len(self.pattern)]
+
+
+def _cd(cfg: "ModelConfig"):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def _sd(cfg: "ModelConfig"):
+    return jnp.bfloat16 if cfg.attn_score_dtype == "bfloat16" \
+        else jnp.float32
+
+
+def _group_slice(stacked, g: int):
+    return tuple(jax.tree.map(lambda a: a[g], pos) for pos in stacked)
+
+
+def _stack_groups(per_group: list):
+    # list over groups of tuples over positions -> tuple of stacked trees
+    n_pos = len(per_group[0])
+    return tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[per_group[g][p] for g in range(len(per_group))])
+        for p in range(n_pos))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    d, hq, hkv, hd = cfg.d_model, cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks["wq"], (d, hq * hd), dtype),
+        "wk": dense_init(ks["wk"], (d, hkv * hd), dtype),
+        "wv": dense_init(ks["wv"], (d, hkv * hd), dtype),
+        "wo": dense_init(ks["wo"], (hq * hd, d), dtype, fan_in=hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _init_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    if cfg.ffn == "swiglu":
+        return ffn_mod.init_swiglu(key, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.ffn == "gelu":
+        return ffn_mod.init_gelu(key, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.ffn == "moe":
+        return ffn_mod.init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                dtype)
+    if cfg.ffn == "rwkv_cm":
+        return {}                         # lives inside the mixer params
+    raise ValueError(cfg.ffn)
+
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, dtype) -> dict:
+    ks = split_keys(key, ["mix", "ffn"])
+    d = cfg.d_model
+    layer: dict[str, Any] = {
+        "norm1": jnp.zeros((d,), dtype),
+        "norm2": jnp.zeros((d,), dtype),
+    }
+    if mixer in ("attn", "swa"):
+        layer["attn"] = _init_attn(ks["mix"], cfg, dtype)
+    elif mixer == "rglru":
+        layer["rec"] = rg_mod.init_rglru_block(ks["mix"], d, cfg.rnn_width,
+                                               dtype)
+    elif mixer == "rwkv6":
+        layer["rwkv"] = rwkv_mod.init_rwkv6_block(ks["mix"], d, cfg.n_heads,
+                                                  cfg.d_ff, dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.ffn != "rwkv_cm":
+        layer["ffn"] = _init_ffn(ks["ffn"], cfg, dtype)
+    return layer
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=None) -> dict:
+    if dtype is None:
+        dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" \
+            else jnp.float32
+    ks = split_keys(key, ["embed", "layers", "tail", "head"])
+    params: dict[str, Any] = {}
+    if cfg.embed_input:
+        params["embed"] = embed_init(ks["embed"], (cfg.vocab, cfg.d_model),
+                                     dtype)
+    # scanned groups: one stacked pytree per pattern position
+    lkeys = jax.random.split(ks["layers"],
+                             max(cfg.n_groups, 1) * len(cfg.pattern))
+    stacked = []
+    for p, mixer in enumerate(cfg.pattern):
+        per_group = [
+            _init_layer(lkeys[g * len(cfg.pattern) + p], cfg, mixer, dtype)
+            for g in range(cfg.n_groups)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                       if per_group else None)
+    params["layers"] = stacked
+    tkeys = jax.random.split(ks["tail"], max(len(cfg.tail_pattern), 1))
+    params["tail"] = [
+        _init_layer(tkeys[i], cfg, mixer, dtype)
+        for i, mixer in enumerate(cfg.tail_pattern)]
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    params["lm_head"] = dense_init(ks["head"], (cfg.d_model, cfg.vocab),
+                                   dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _attn_apply(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                cos, sin) -> jax.Array:
+    compute_dtype = _cd(cfg)
+    b, s, d = x.shape
+    p = layer["attn"]
+    h = rms_norm(x, layer["norm1"]).astype(compute_dtype)
+    hq, hkv, hd = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    q = h @ p["wq"].astype(compute_dtype)
+    k = h @ p["wk"].astype(compute_dtype)
+    v = h @ p["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    window = cfg.window if mixer == "swa" else None
+    o = attn_mod.attention(q, k, v, impl=cfg.attn_impl, window=window,
+                           chunk=cfg.attn_chunk, unroll=cfg.unroll_layers,
+                           score_dtype=_sd(cfg), gqa_grouped=cfg.gqa_grouped)
+    o = o.reshape(b, s, hq * hd) @ p["wo"].astype(compute_dtype)
+    return x + o.astype(x.dtype)
+
+
+def _ffn_apply(layer: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    compute_dtype = _cd(cfg)
+    if cfg.ffn == "rwkv_cm":
+        h = rms_norm(x, layer["norm2"])
+        return x + rwkv_mod.channel_mix(layer["rwkv"], h, compute_dtype)
+    h = rms_norm(x, layer["norm2"])
+    if cfg.ffn == "swiglu":
+        out = ffn_mod.swiglu(layer["ffn"], h, compute_dtype,
+                             act_f32=cfg.ffn_act_f32)
+    elif cfg.ffn == "gelu":
+        out = ffn_mod.gelu_mlp(layer["ffn"], h, compute_dtype,
+                               act_f32=cfg.ffn_act_f32)
+    elif cfg.ffn == "moe":
+        out = ffn_mod.moe_ffn(layer["ffn"], h, top_k=cfg.moe_top_k,
+                              capacity_factor=cfg.capacity_factor,
+                              compute_dtype=compute_dtype,
+                              act_f32=cfg.ffn_act_f32)
+    else:
+        raise ValueError(cfg.ffn)
+    return x + out
+
+
+def _layer_apply(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                 cos, sin) -> jax.Array:
+    if mixer in ("attn", "swa"):
+        x = _attn_apply(layer, cfg, mixer, x, cos, sin)
+    elif mixer == "rglru":
+        h = rms_norm(x, layer["norm1"])
+        x = x + rg_mod.rglru_block(layer["rec"], h, _cd(cfg))
+    elif mixer == "rwkv6":
+        h = rms_norm(x, layer["norm1"])
+        x = x + rwkv_mod.time_mix(layer["rwkv"], h, cfg.n_heads, _cd(cfg))
+    else:
+        raise ValueError(mixer)
+    return _ffn_apply(layer, cfg, x)
+
+
+def embed_tokens(params: dict, cfg: ModelConfig,
+                 tokens: jax.Array) -> jax.Array:
+    compute_dtype = _cd(cfg)
+    if cfg.embed_input:
+        return params["embed"][tokens].astype(compute_dtype)
+    # stub frontend: tokens already are embeddings (B, S, D)
+    return tokens.astype(compute_dtype)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            positions: jax.Array | None = None) -> jax.Array:
+    """tokens (B,S) int32 (or (B,S,D) embeddings for stub-frontend archs)
+    -> final hidden states (B,S,D) after the last norm."""
+    x = embed_tokens(params, cfg, tokens)
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None]
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    def group_body(carry, group_params):
+        h = carry
+        for p, mixer in enumerate(cfg.pattern):
+            h = _layer_apply(
+                jax.tree.map(lambda a: a, group_params[p]), cfg, mixer, h,
+                cos, sin)
+        return h, None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    if cfg.n_groups > 0:
+        if cfg.unroll_layers:
+            for g in range(cfg.n_groups):
+                x, _ = body(x, _group_slice(tuple(params["layers"]), g))
+        else:
+            x, _ = jax.lax.scan(body, x, tuple(params["layers"]))
+    for i, mixer in enumerate(cfg.tail_pattern):
+        x = _layer_apply(params["tail"][i], cfg, mixer, x, cos, sin)
+    return rms_norm(x, params["final_norm"])
+
+
+def logits_fn(params: dict, cfg: ModelConfig,
+              hidden: jax.Array) -> jax.Array:
+    compute_dtype = _cd(cfg)
+    return (hidden.astype(compute_dtype)
+            @ params["lm_head"].astype(compute_dtype)).astype(jnp.float32)
+
+
+def lm_loss(params: dict, cfg: ModelConfig, hidden: jax.Array,
+            labels: jax.Array) -> jax.Array:
+    """Chunked softmax cross-entropy: logits are never materialised for the
+    whole sequence (vocab 256k x 4k tokens would not fit HBM)."""
+    b, s, d = hidden.shape
+    t = b * s
+    h = hidden.reshape(t, d)
+    y = labels.reshape(t)
+    chunk = min(cfg.loss_chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.concatenate([y, -jnp.ones((pad,), y.dtype)])
+    n = h.shape[0] // chunk
+    h = h.reshape(n, chunk, d)
+    y = y.reshape(n, chunk)
+
+    def chunk_loss(carry, hy):
+        h_c, y_c = hy
+        logits = logits_fn(params, cfg, h_c)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[:, None], axis=-1)[:, 0]
+        valid = (y_c >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    if cfg.unroll_layers:
+        carry = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        for i in range(n):
+            carry, _ = chunk_loss(carry, (h[i], y[i]))
+        total, count = carry
+    else:
+        (total, count), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (h, y))
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+def _cache_len(cfg: ModelConfig, mixer: str, max_len: int) -> int:
+    if mixer == "swa" and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Stacked caches mirroring the scanned/tail param structure."""
+    cache_dtype = {"bfloat16": jnp.bfloat16, "int8": jnp.int8,
+                   "float32": jnp.float32}[cfg.kv_cache_dtype]
+
+    def one(mixer: str) -> dict:
+        if mixer in ("attn", "swa"):
+            sc = _cache_len(cfg, mixer, max_len)
+            c = {"k": jnp.zeros((batch, sc, cfg.kv_heads, cfg.head_dim),
+                                cache_dtype),
+                 "v": jnp.zeros((batch, sc, cfg.kv_heads, cfg.head_dim),
+                                cache_dtype)}
+            if cfg.kv_cache_dtype == "int8":
+                c["k_scale"] = jnp.zeros(
+                    (batch, sc, cfg.kv_heads, 1), jnp.float32)
+                c["v_scale"] = jnp.zeros(
+                    (batch, sc, cfg.kv_heads, 1), jnp.float32)
+            return c
+        if mixer == "rglru":
+            return rg_mod.init_rglru_state(batch, cfg.rnn_width)
+        if mixer == "rwkv6":
+            return rwkv_mod.init_rwkv6_state(batch, cfg.d_model,
+                                             cfg.n_heads)
+        raise ValueError(mixer)
+
+    stacked = []
+    for mixer in cfg.pattern:
+        per_group = [one(mixer) for _ in range(cfg.n_groups)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                       if per_group else None)
+    return {
+        "layers": stacked,
+        "tail": [one(m) for m in cfg.tail_pattern],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _store_kv(cfg: ModelConfig, cache_layer: dict, k, v, idx):
+    """Write k/v (B, S, Hkv, hd) at positions ``idx`` (S,), quantizing for
+    int8 caches."""
+    if cfg.kv_cache_dtype == "int8":
+        def quant(x):
+            amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                           keepdims=True)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int8)
+            return q, scale
+        kq, ks = quant(k)
+        vq, vs = quant(v)
+        return {
+            "k": cache_layer["k"].at[:, idx].set(kq),
+            "v": cache_layer["v"].at[:, idx].set(vq),
+            "k_scale": cache_layer["k_scale"].at[:, idx].set(ks),
+            "v_scale": cache_layer["v_scale"].at[:, idx].set(vs),
+        }
+    return {
+        "k": cache_layer["k"].at[:, idx].set(k.astype(cache_layer["k"].dtype)),
+        "v": cache_layer["v"].at[:, idx].set(v.astype(cache_layer["v"].dtype)),
+    }
+
+
+def _read_kv(cfg: ModelConfig, cache_layer: dict):
+    if cfg.kv_cache_dtype == "int8":
+        k = cache_layer["k"].astype(jnp.float32) * cache_layer["k_scale"]
+        v = cache_layer["v"].astype(jnp.float32) * cache_layer["v_scale"]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache_layer["k"], cache_layer["v"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _attn_decode(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                 cache_layer: dict, pos: jax.Array):
+    compute_dtype = _cd(cfg)
+    b = x.shape[0]
+    p = layer["attn"]
+    h = rms_norm(x, layer["norm1"]).astype(compute_dtype)
+    hq, hkv, hd = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    q = h @ p["wq"].astype(compute_dtype)
+    k = h @ p["wk"].astype(compute_dtype)
+    v = h @ p["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(pos[None, None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    sc = cache_layer["k"].shape[1]
+    idx = (pos % sc)[None]
+    new_cache = {**cache_layer, **_store_kv(cfg, cache_layer, k, v, idx)}
+    length = jnp.minimum(pos + 1, sc)
+    if cfg.decode_chunk and sc > cfg.decode_chunk:
+        chunk = cfg.decode_chunk
+        n_chunks = sc // chunk
+
+        def read_chunk(i):
+            lay = {kk: jax.lax.dynamic_slice_in_dim(
+                new_cache[kk], i * chunk, chunk, axis=1)
+                for kk in new_cache}
+            return _read_kv(cfg, lay)
+
+        o = attn_mod.decode_attention_blocks(
+            q.astype(compute_dtype), read_chunk, n_chunks, chunk, length,
+            unroll=cfg.unroll_layers)
+    else:
+        kk, vv = _read_kv(cfg, new_cache)
+        o = attn_mod.decode_attention(q, kk, vv, length)
+    o = o.reshape(b, 1, hq * hd) @ p["wo"].astype(compute_dtype)
+    return x + o.astype(x.dtype), new_cache
+
+
+def _layer_decode(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                  cache_layer: dict, pos: jax.Array):
+    if mixer in ("attn", "swa"):
+        x, new_cache = _attn_decode(layer, cfg, mixer, x, cache_layer, pos)
+    elif mixer == "rglru":
+        h = rms_norm(x, layer["norm1"])
+        out, new_cache = rg_mod.rglru_block_decode(
+            layer["rec"], h, cache_layer, _cd(cfg))
+        x = x + out
+    elif mixer == "rwkv6":
+        h = rms_norm(x, layer["norm1"])
+        out, new_cache = rwkv_mod.time_mix_decode(
+            layer["rwkv"], h, cache_layer, cfg.n_heads, _cd(cfg))
+        x = x + out
+    else:
+        raise ValueError(mixer)
+    if cfg.ffn == "rwkv_cm":
+        h = rms_norm(x, layer["norm2"])
+        out, new_cache = rwkv_mod.channel_mix_decode(
+            layer["rwkv"], h, new_cache, _cd(cfg))
+        x = x + out
+    else:
+        x = _ffn_apply(layer, cfg, x)
+    return x, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    """One decoding step.  tokens (B,) int32 (or (B,D) embeddings for stub
+    archs) -> (logits (B,V), new cache)."""
+    pos = cache["pos"]
+    if cfg.embed_input:
+        x = params["embed"][tokens][:, None].astype(_cd(cfg))
+    else:
+        x = tokens[:, None].astype(_cd(cfg))
+
+    def group_body(carry, scanned):
+        h = carry
+        group_params, group_cache = scanned
+        new_caches = []
+        for p, mixer in enumerate(cfg.pattern):
+            h, nc = _layer_decode(group_params[p], cfg, mixer, h,
+                                  group_cache[p], pos)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    new_cache: dict[str, Any] = {"pos": pos + 1}
+    if cfg.n_groups > 0:
+        if cfg.unroll_layers:
+            collected = []
+            for g in range(cfg.n_groups):
+                x, ncg = group_body(
+                    x, (_group_slice(tuple(params["layers"]), g),
+                        _group_slice(tuple(cache["layers"]), g)))
+                collected.append(ncg)
+            new_cache["layers"] = list(_stack_groups(collected))
+        else:
+            x, ncl = jax.lax.scan(group_body, x,
+                                  (tuple(params["layers"]),
+                                   tuple(cache["layers"])))
+            new_cache["layers"] = list(ncl)
+    else:
+        new_cache["layers"] = cache["layers"]
+    new_tail = []
+    for i, mixer in enumerate(cfg.tail_pattern):
+        x, nc = _layer_decode(params["tail"][i], cfg, mixer, x,
+                              cache["tail"][i], pos)
+        new_tail.append(nc)
+    new_cache["tail"] = new_tail
+    h = rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: parallel forward that also fills caches / recurrent states
+# ---------------------------------------------------------------------------
+def _attn_prefill(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                  cos, sin, cache_layer: dict):
+    compute_dtype = _cd(cfg)
+    """Full attention layer computing q/k/v once: returns (x', cache')."""
+    b, s, d = x.shape
+    p = layer["attn"]
+    h = rms_norm(x, layer["norm1"]).astype(compute_dtype)
+    hq, hkv, hd = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    q = h @ p["wq"].astype(compute_dtype)
+    k = h @ p["wk"].astype(compute_dtype)
+    v = h @ p["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    sc = cache_layer["k"].shape[1]
+    if sc < s:   # ring buffer: only the last sc positions survive
+        idx = jnp.arange(s - sc, s) % sc
+        nc = {**cache_layer,
+              **_store_kv(cfg, cache_layer, k[:, -sc:], v[:, -sc:], idx)}
+    else:
+        nc = {**cache_layer,
+              **_store_kv(cfg, cache_layer, k, v, jnp.arange(s))}
+    window = cfg.window if mixer == "swa" else None
+    o = attn_mod.attention(q, k, v, impl=cfg.attn_impl, window=window,
+                           chunk=cfg.attn_chunk, unroll=cfg.unroll_layers,
+                           score_dtype=_sd(cfg), gqa_grouped=cfg.gqa_grouped)
+    o = o.reshape(b, s, hq * hd) @ p["wo"].astype(compute_dtype)
+    return x + o.astype(x.dtype), nc
+
+
+def _layer_prefill(layer: dict, cfg: ModelConfig, mixer: str, x: jax.Array,
+                   cos, sin, cache_layer: dict):
+    if mixer in ("attn", "swa"):
+        x, nc = _attn_prefill(layer, cfg, mixer, x, cos, sin, cache_layer)
+    elif mixer == "rglru":
+        h = rms_norm(x, layer["norm1"])
+        out, nc = rg_mod.rglru_block_with_state(layer["rec"], h, _cd(cfg))
+        x = x + out
+    elif mixer == "rwkv6":
+        h = rms_norm(x, layer["norm1"])
+        out, tm_state = rwkv_mod.time_mix_with_state(
+            layer["rwkv"], h, cfg.n_heads, _cd(cfg))
+        x = x + out
+        nc = {**cache_layer, **tm_state}
+    else:
+        raise ValueError(mixer)
+    if cfg.ffn == "rwkv_cm":
+        h = rms_norm(x, layer["norm2"])
+        nc = {**nc, "cm_last": h.astype(jnp.float32)[:, -1:]}
+        x = x + rwkv_mod.channel_mix(layer["rwkv"], h, _cd(cfg))
+    else:
+        x = _ffn_apply(layer, cfg, x)
+    return x, nc
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Run the prompt in parallel, returning (last-position logits (B,V),
+    filled cache).  Recurrent mixers return their final states from the
+    scan kernels; attention mixers bulk-write (ring-buffered) KV caches."""
+    x = embed_tokens(params, cfg, tokens)
+    b, s = x.shape[0], x.shape[1]
+    max_len = max_len or s
+    cache = init_cache(cfg, b, max_len)
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    def group_body(carry, scanned):
+        h = carry
+        group_params, group_cache = scanned
+        new_caches = []
+        for p, mixer in enumerate(cfg.pattern):
+            h, nc = _layer_prefill(group_params[p], cfg, mixer, h,
+                                   cos, sin, group_cache[p])
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    new_cache: dict[str, Any] = {"pos": jnp.asarray(s, jnp.int32)}
+    if cfg.n_groups > 0:
+        if cfg.unroll_layers:
+            collected = []
+            for g in range(cfg.n_groups):
+                x, ncg = body(
+                    x, (_group_slice(tuple(params["layers"]), g),
+                        _group_slice(tuple(cache["layers"]), g)))
+                collected.append(ncg)
+            new_cache["layers"] = list(_stack_groups(collected))
+        else:
+            x, ncl = jax.lax.scan(body, x,
+                                  (tuple(params["layers"]),
+                                   tuple(cache["layers"])))
+            new_cache["layers"] = list(ncl)
+    else:
+        new_cache["layers"] = cache["layers"]
+    new_tail = []
+    for i, mixer in enumerate(cfg.tail_pattern):
+        x, nc = _layer_prefill(params["tail"][i], cfg, mixer, x, cos, sin,
+                               cache["tail"][i])
+        new_tail.append(nc)
+    new_cache["tail"] = new_tail
+    h = rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, h[:, -1:])[:, 0]
+    return logits, new_cache

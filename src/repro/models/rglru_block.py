@@ -1,0 +1,126 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU + causal conv1d).
+
+    y   = norm(x)
+    gate = gelu(y @ W_gate)                    (D -> Dr)
+    u0   = y @ W_in                            (D -> Dr)
+    c    = causal_conv1d(u0, width=4, depthwise)
+    r    = sigmoid(c @ W_a + b_a)              recurrence gate
+    i    = sigmoid(c @ W_x + b_x)              input gate
+    a    = exp(-8 * softplus(Lambda) * r)      data-dependent decay
+    h_t  = a_t h_{t-1} + sqrt(1 - a_t^2) * (i * c)      <- Pallas kernel
+    out  = (gate * h) @ W_out                  (Dr -> D)
+
+The sequential hot loop is ``kernels.rglru``; everything else is dense
+matmul the solver tiles like any other task.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import rglru as rglru_op
+from .common import dense_init, split_keys
+
+CONV_WIDTH = 4
+C_SCALE = 8.0
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int,
+                     dtype=jnp.float32) -> dict:
+    ks = split_keys(key, ["w_gate", "w_in", "conv", "w_a", "w_x", "lam",
+                          "w_out"])
+    return {
+        "w_gate": dense_init(ks["w_gate"], (d_model, d_rnn), dtype),
+        "w_in": dense_init(ks["w_in"], (d_model, d_rnn), dtype),
+        "conv_w": dense_init(ks["conv"], (CONV_WIDTH, d_rnn), dtype,
+                             fan_in=CONV_WIDTH),
+        "w_a": dense_init(ks["w_a"], (d_rnn, d_rnn), dtype),
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": dense_init(ks["w_x"], (d_rnn, d_rnn), dtype),
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        # Lambda init so a^8·softplus spans slow/fast decays (Griffin A.2)
+        "lam": jnp.linspace(-2.0, 2.0, d_rnn).astype(dtype),
+        "w_out": dense_init(ks["w_out"], (d_rnn, d_model), dtype,
+                            fan_in=d_rnn),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv along seq; u (B,S,Dr), w (W,Dr).
+
+    ``state`` (B, W-1, Dr) prepends history (decode); else zero history."""
+    b, s, dr = u.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, width - 1, dr), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + ext[:, i:i + s, :] * w[width - 1 - i][None, None, :]
+    return out
+
+
+def _gates(params, c):
+    r = jax.nn.sigmoid((c @ params["w_a"] + params["b_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid((c @ params["w_x"] + params["b_x"])
+                       .astype(jnp.float32))
+    log_a = -C_SCALE * jax.nn.softplus(
+        params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * c.astype(jnp.float32))
+    return a, u
+
+
+def rglru_block(params: dict, x: jax.Array,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    out, _ = rglru_block_with_state(params, x, compute_dtype)
+    return out
+
+
+def rglru_block_with_state(params: dict, x: jax.Array,
+                           compute_dtype=jnp.bfloat16) \
+        -> tuple[jax.Array, dict]:
+    """Parallel (prefill) form that also returns the recurrent state."""
+    xc = x.astype(compute_dtype)
+    gate = jax.nn.gelu(
+        (xc @ params["w_gate"].astype(compute_dtype)).astype(jnp.float32))
+    u0 = xc @ params["w_in"].astype(compute_dtype)
+    c = _causal_conv(u0, params["conv_w"].astype(compute_dtype))
+    a, u = _gates(params, c)
+    h = rglru_op(a.astype(jnp.float32), u)            # (B,S,Dr) fp32
+    out = (gate * h).astype(compute_dtype) \
+        @ params["w_out"].astype(compute_dtype)
+    state = {
+        "h": h[:, -1].astype(jnp.float32),
+        "conv": u0[:, -(CONV_WIDTH - 1):].astype(jnp.float32),
+    }
+    return out.astype(x.dtype), state
+
+
+def init_rglru_state(batch: int, d_rnn: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), jnp.float32),
+    }
+
+
+def rglru_block_decode(params: dict, x: jax.Array, state: dict,
+                       compute_dtype=jnp.bfloat16) \
+        -> tuple[jax.Array, dict]:
+    """Single-token step. x (B,1,D); state {h (B,Dr), conv (B,W-1,Dr)}."""
+    xc = x.astype(compute_dtype)
+    gate = jax.nn.gelu(
+        (xc @ params["w_gate"].astype(compute_dtype)).astype(jnp.float32))
+    u0 = xc @ params["w_in"].astype(compute_dtype)
+    conv_state = state["conv"].astype(compute_dtype)
+    c = _causal_conv(u0, params["conv_w"].astype(compute_dtype),
+                     state=conv_state)
+    new_conv = jnp.concatenate([conv_state[:, 1:], u0], axis=1)
+    a, u = _gates(params, c)
+    h = a[:, 0] * state["h"] + u[:, 0]                 # (B, Dr)
+    out = (gate[:, 0] * h).astype(compute_dtype) \
+        @ params["w_out"].astype(compute_dtype)
+    return out[:, None].astype(x.dtype), \
+        {"h": h, "conv": new_conv.astype(jnp.float32)}

@@ -1,0 +1,185 @@
+"""RWKV-6 "Finch" block: time-mix (WKV6 recurrence, data-dependent decay)
++ channel-mix, with token-shift interpolation.
+
+Time-mix (per head, dk = dv = head_dim):
+    xs        = token_shift(x)                      (x_{t-1})
+    xk,xv,... = lerp(x, xs, mu_*)                   per-channel mixing
+    r,k,v,g   = projections;  g gated with silu
+    w_t       = exp(-exp(w0 + tanh(xw @ A) @ B))    low-rank dynamic decay
+    y         = WKV6(r,k,v,w,u)                     <- Pallas kernel
+    out       = (groupnorm(y) * g) @ W_o
+
+Channel-mix:
+    k   = relu(lerp(x, xs, mu_k) @ W_k)^2
+    out = sigmoid(lerp(x, xs, mu_r) @ W_r) * (k @ W_v)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import rwkv6 as wkv6_op
+from .common import dense_init, rms_norm, split_keys
+
+DECAY_RANK = 64
+
+
+def init_rwkv6_block(key, d_model: int, n_heads: int, d_ff: int | None = None,
+                     dtype=jnp.float32) -> dict:
+    d_ff = d_ff or 4 * d_model
+    ks = split_keys(key, ["wr", "wk", "wv", "wg", "wo", "wd1", "wd2",
+                          "cm_r", "cm_k", "cm_v"])
+    zeros = lambda *shape: jnp.zeros(shape, dtype)
+    return {
+        "mu": zeros(5, d_model) + 0.5,       # r,k,v,g,w mixing coefficients
+        "wr": dense_init(ks["wr"], (d_model, d_model), dtype),
+        "wk": dense_init(ks["wk"], (d_model, d_model), dtype),
+        "wv": dense_init(ks["wv"], (d_model, d_model), dtype),
+        "wg": dense_init(ks["wg"], (d_model, d_model), dtype),
+        "wo": dense_init(ks["wo"], (d_model, d_model), dtype),
+        "w0": zeros(d_model) - 1.0,          # base decay ~ exp(-exp(-1))
+        "wd1": dense_init(ks["wd1"], (d_model, DECAY_RANK), dtype),
+        "wd2": dense_init(ks["wd2"], (DECAY_RANK, d_model), dtype,
+                          fan_in=DECAY_RANK),
+        "u": zeros(d_model) + 0.1,           # per-channel bonus
+        "ln_y": zeros(d_model),              # groupnorm scale
+        "cm_mu": zeros(2, d_model) + 0.5,
+        "cm_r": dense_init(ks["cm_r"], (d_model, d_model), dtype),
+        "cm_k": dense_init(ks["cm_k"], (d_model, d_ff), dtype),
+        "cm_v": dense_init(ks["cm_v"], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} along seq; ``last`` (B,1,D) supplies history for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    return jnp.transpose(x.reshape(b, s, n_heads, d // n_heads),
+                         (0, 2, 1, 3)).reshape(b * n_heads, s,
+                                               d // n_heads)
+
+
+def _unheads(x: jax.Array, b: int, n_heads: int) -> jax.Array:
+    bh, s, hd = x.shape
+    return jnp.transpose(x.reshape(b, n_heads, s, hd),
+                         (0, 2, 1, 3)).reshape(b, s, n_heads * hd)
+
+
+def _tm_projections(params, x, xs, compute_dtype):
+    mu = params["mu"].astype(jnp.float32)
+    mix = lambda i: (x * (1 - mu[i]) + xs * mu[i]).astype(compute_dtype)
+    r = mix(0) @ params["wr"].astype(compute_dtype)
+    k = mix(1) @ params["wk"].astype(compute_dtype)
+    v = mix(2) @ params["wv"].astype(compute_dtype)
+    g = jax.nn.silu((mix(3) @ params["wg"].astype(compute_dtype))
+                    .astype(jnp.float32))
+    xw = mix(4)
+    dyn = jnp.tanh((xw @ params["wd1"].astype(compute_dtype))
+                   .astype(jnp.float32))
+    dyn = dyn.astype(compute_dtype) @ params["wd2"].astype(compute_dtype)
+    logw = params["w0"].astype(jnp.float32) + dyn.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                       # decay in (0,1)
+    return r, k, v, g, w
+
+
+def time_mix(params: dict, x: jax.Array, n_heads: int,
+             compute_dtype=jnp.bfloat16) -> jax.Array:
+    out, _ = time_mix_with_state(params, x, n_heads, compute_dtype)
+    return out
+
+
+def time_mix_with_state(params: dict, x: jax.Array, n_heads: int,
+                        compute_dtype=jnp.bfloat16) \
+        -> tuple[jax.Array, dict]:
+    """Parallel (prefill) form that also returns tm_last + wkv state."""
+    b, s, d = x.shape
+    x32 = x.astype(jnp.float32)
+    xs = _token_shift(x32)
+    r, k, v, g, w = _tm_projections(params, x32, xs, compute_dtype)
+    hd = d // n_heads
+    u = jnp.broadcast_to(
+        params["u"].astype(jnp.float32).reshape(n_heads, hd)[None],
+        (b, n_heads, hd)).reshape(b * n_heads, hd)
+    y, wkv_state = wkv6_op(_heads(r.astype(jnp.float32), n_heads),
+                           _heads(k.astype(jnp.float32), n_heads),
+                           _heads(v.astype(jnp.float32), n_heads),
+                           _heads(w, n_heads), u, return_state=True)
+    y = _unheads(y, b, n_heads)
+    y = rms_norm(y, params["ln_y"])
+    out = (y * g).astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    state = {"tm_last": x32[:, -1:], "wkv": wkv_state}
+    return out.astype(x.dtype), state
+
+
+def channel_mix(params: dict, x: jax.Array,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    xs = _token_shift(x32)
+    mu = params["cm_mu"].astype(jnp.float32)
+    xr = (x32 * (1 - mu[0]) + xs * mu[0]).astype(compute_dtype)
+    xk = (x32 * (1 - mu[1]) + xs * mu[1]).astype(compute_dtype)
+    k = jnp.square(jax.nn.relu(
+        (xk @ params["cm_k"].astype(compute_dtype)).astype(jnp.float32)))
+    r = jax.nn.sigmoid(
+        (xr @ params["cm_r"].astype(compute_dtype)).astype(jnp.float32))
+    out = r * (k.astype(compute_dtype)
+               @ params["cm_v"].astype(compute_dtype)).astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, carried state)
+# ---------------------------------------------------------------------------
+def init_rwkv6_state(batch: int, d_model: int, n_heads: int) -> dict:
+    hd = d_model // n_heads
+    return {
+        "tm_last": jnp.zeros((batch, 1, d_model), jnp.float32),
+        "cm_last": jnp.zeros((batch, 1, d_model), jnp.float32),
+        "wkv": jnp.zeros((batch * n_heads, hd, hd), jnp.float32),
+    }
+
+
+def time_mix_decode(params: dict, x: jax.Array, state: dict, n_heads: int,
+                    compute_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    hd = d // n_heads
+    x32 = x.astype(jnp.float32)
+    xs = state["tm_last"]
+    r, k, v, g, w = _tm_projections(params, x32, xs, compute_dtype)
+    rh = _heads(r.astype(jnp.float32), n_heads)[:, 0]     # (BH, hd)
+    kh = _heads(k.astype(jnp.float32), n_heads)[:, 0]
+    vh = _heads(v.astype(jnp.float32), n_heads)[:, 0]
+    wh = _heads(w, n_heads)[:, 0]
+    u = jnp.broadcast_to(
+        params["u"].astype(jnp.float32).reshape(n_heads, hd)[None],
+        (b, n_heads, hd)).reshape(b * n_heads, hd)
+    S = state["wkv"]
+    kv = kh[:, :, None] * vh[:, None, :]
+    y = jnp.einsum("bk,bkv->bv", rh, S + u[:, :, None] * kv)
+    S = wh[:, :, None] * S + kv
+    y = _unheads(y[:, None], b, n_heads)
+    y = rms_norm(y, params["ln_y"])
+    out = (y * g).astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), \
+        {**state, "tm_last": x32, "wkv": S}
+
+
+def channel_mix_decode(params: dict, x: jax.Array, state: dict,
+                       compute_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    x32 = x.astype(jnp.float32)
+    xs = state["cm_last"]
+    mu = params["cm_mu"].astype(jnp.float32)
+    xr = (x32 * (1 - mu[0]) + xs * mu[0]).astype(compute_dtype)
+    xk = (x32 * (1 - mu[1]) + xs * mu[1]).astype(compute_dtype)
+    k = jnp.square(jax.nn.relu(
+        (xk @ params["cm_k"].astype(compute_dtype)).astype(jnp.float32)))
+    r = jax.nn.sigmoid(
+        (xr @ params["cm_r"].astype(compute_dtype)).astype(jnp.float32))
+    out = r * (k.astype(compute_dtype)
+               @ params["cm_v"].astype(compute_dtype)).astype(jnp.float32)
+    return out.astype(x.dtype), {**state, "cm_last": x32}

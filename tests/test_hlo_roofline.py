@@ -1,0 +1,92 @@
+"""Unit tests: HLO collective parsing + roofline arithmetic (launch/)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import get_config
+from repro.launch import hlo_parse
+from repro.launch.roofline import RooflineReport, active_params, model_flops
+from repro.core.resources import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[512,256]{1,0} all-gather(%p0), replica_groups=[4,4], dimensions={0}
+  %ar = bf16[128,256]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[32,256]{1,0} reduce-scatter(%p0), replica_groups=[2,4], dimensions={0}
+  %aa = f32[128,256]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = bf16[64,64]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ags = (f32[128],f32[256]) all-gather-start(%z), dimensions={0}
+  %agd = f32[256]{0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_bytes_by_op():
+    per = hlo_parse.collective_bytes(HLO)
+    assert per["all-gather"] == 512 * 256 * 4 + 256 * 4   # incl. async -done
+    assert per["all-reduce"] == 128 * 256 * 2
+    # reduce-scatter: shard result x group size = input bytes
+    assert per["reduce-scatter"] == 32 * 256 * 4 * 4
+    assert per["all-to-all"] == 128 * 256 * 4
+    assert per["collective-permute"] == 64 * 64 * 2
+
+
+def test_async_start_not_double_counted():
+    per = hlo_parse.collective_bytes(HLO)
+    # the -start op contributes nothing; only the -done result counts
+    assert per["all-gather"] - (512 * 256 * 4) == 256 * 4
+
+
+def test_no_collectives_in_plain_hlo():
+    assert hlo_parse.total_collective_bytes(
+        "%m = f32[8,8] multiply(%a, %b)") == 0
+
+
+def test_roofline_terms_and_bound():
+    rep = RooflineReport(
+        arch="x", shape="train_4k", mesh="single", n_chips=256,
+        flops_per_chip=PEAK_FLOPS_BF16,          # 1 s of compute
+        hbm_bytes_per_chip=HBM_BW * 2,           # 2 s of memory
+        coll_bytes_per_chip=ICI_BW * 0.5,        # 0.5 s of collectives
+        model_flops_total=PEAK_FLOPS_BF16 * 256 * 0.5)
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.t_collective == pytest.approx(0.5)
+    assert rep.bound == "memory"
+    assert rep.step_time == pytest.approx(2.0)
+    assert rep.useful_ratio == pytest.approx(0.5)
+    # useful flops at the roofline step time over the fleet peak
+    assert rep.roofline_fraction == pytest.approx(0.25)
+
+
+def test_active_params_moe_scaling():
+    moe = get_config("mixtral-8x7b")
+    n_act = active_params(moe)
+    dense_equiv = active_params(
+        __import__("dataclasses").replace(moe, ffn="swiglu"))
+    # top-2 of 8 experts: ffn part is 2x one expert = 2x the dense ffn
+    assert n_act > dense_equiv
+    # mixtral: ~13B active of 47B total
+    assert 10e9 < n_act < 16e9
+
+
+def test_model_flops_train_vs_serve():
+    cfg = get_config("qwen3-0.6b")
+    t = model_flops(cfg, 1000, "train")
+    s = model_flops(cfg, 1000, "prefill")
+    assert t == pytest.approx(3 * s)
+
+
+def test_active_params_magnitudes():
+    """Sanity-check N_active against the published model sizes."""
+    # qwen3-moe-235b: 22B active
+    n = active_params(get_config("qwen3-moe-235b-a22b"))
+    assert 15e9 < n < 30e9
+    # yi-34b dense
+    n = active_params(get_config("yi-34b"))
+    assert 28e9 < n < 40e9
+    # qwen1.5-0.5b: lm_head makes small models top-heavy
+    n = active_params(get_config("qwen1.5-0.5b"))
+    assert 0.3e9 < n < 0.8e9

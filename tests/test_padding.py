@@ -1,0 +1,96 @@
+"""Unit + property tests: padding (core/padding.py) — paper §2.1.6, Eqs. 1-3."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.padding import (TileOption, burst_width,
+                                communication_padding, divisors,
+                                pad_to_multiple, tile_options)
+
+
+def test_divisors():
+    assert divisors(12) == (1, 2, 3, 4, 6, 12)
+    assert divisors(1) == (1,)
+    assert divisors(190) == (1, 2, 5, 10, 19, 38, 95, 190)
+
+
+def test_paper_listing1_unroll_factors():
+    """Trip count 190 -> {1,2,5,10,19,38,95,190}; padded to 192 ->
+    {1,2,3,4,6,8,12,16,24,32,48,64,96,192} become available."""
+    no_pad = {t.tile for t in tile_options(190, max_pad=0)}
+    assert no_pad == {1, 2, 5, 10, 19, 38, 95, 190}
+    padded = {t.tile for t in tile_options(190, max_pad=2)}
+    for f in (3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 192):
+        assert f in padded, f
+    # the pad=2 option for tile 8 pads exactly to 192
+    opt8 = next(t for t in tile_options(190, max_pad=2) if t.tile == 8)
+    assert opt8.padded_tc == 192 and opt8.pad == 2 and opt8.n_tiles == 24
+
+
+def test_tile_option_properties():
+    t = TileOption(tile=8, padded_tc=192, ori_tc=190)
+    assert t.pad == 2
+    assert t.n_tiles == 24
+    assert 0 < t.waste < 0.02
+
+
+@settings(max_examples=200, deadline=None)
+@given(tc=st.integers(1, 2048), max_pad=st.integers(0, 64))
+def test_tile_options_satisfy_eq1_eq2(tc, max_pad):
+    """Eq. 1: tile divides the (possibly padded) trip count;
+    Eq. 2: padding bounded by max_pad; minimal pad per tile size."""
+    opts = tile_options(tc, max_pad=max_pad, max_tile=256)
+    assert opts, "at least tile=1 must exist"
+    seen = set()
+    for t in opts:
+        assert t.padded_tc % t.tile == 0            # Eq. 1
+        assert 0 <= t.pad <= max_pad                # Eq. 2
+        assert t.ori_tc == tc
+        assert t.tile not in seen                   # unique per tile size
+        seen.add(t.tile)
+        # minimality: no smaller pad in range legalises this tile
+        for pad in range(0, t.pad):
+            assert (tc + pad) % t.tile != 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(tc=st.integers(1, 512))
+def test_no_padding_is_divisor_space(tc):
+    opts = tile_options(tc, max_pad=0)
+    assert {t.tile for t in opts} == set(divisors(tc))
+    assert all(t.pad == 0 for t in opts)
+
+
+def test_burst_width_eq3():
+    """Paper Fig. 1 example: row of 190 floats -> 2-wide (64-bit) bursts;
+    192 -> 16-wide (512-bit)."""
+    assert burst_width(190) == 2
+    assert burst_width(192) == 16
+    assert burst_width(191) == 1
+    assert burst_width(32) == 16
+
+
+def test_communication_padding_fig1():
+    padded, b = communication_padding(190)
+    assert (padded, b) == (192, 16)
+    padded, b = communication_padding(192)
+    assert (padded, b) == (192, 16)
+    # bounded padding cannot reach 16 -> best effort
+    padded, b = communication_padding(191, max_pad=0)
+    assert (padded, b) == (191, 1)
+
+
+def test_pad_to_multiple():
+    assert pad_to_multiple(190, 128) == 256
+    assert pad_to_multiple(256, 128) == 256
+    assert pad_to_multiple(1, 8) == 8
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(1, 4096))
+def test_communication_padding_monotone(n):
+    padded, b = communication_padding(n)
+    assert padded >= n
+    assert padded % b == 0
+    assert b >= burst_width(n)

@@ -1,0 +1,96 @@
+"""Unit tests: affine task-graph IR (core/taskgraph.py) + PolyBench builders."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import polybench
+from repro.core.taskgraph import (Access, Array, Statement, TaskGraph,
+                                  legal_permutations)
+
+
+def test_statement_rejects_unknown_iterator():
+    with pytest.raises(ValueError):
+        Statement("s", ("i",), {"i": 4},
+                  (Access("A", ("j",)),), (Access("B", ("i",)),))
+
+
+def test_reduction_loops_are_unwritten_loops():
+    s = Statement("mac", ("i", "j", "k"), {"i": 2, "j": 3, "k": 4},
+                  (Access("A", ("i", "k")), Access("B", ("k", "j"))),
+                  (Access("C", ("i", "j")),))
+    assert s.reduction_loops == ("k",)
+    assert s.domain_size == 24
+    assert s.flops == 48
+
+
+def test_graph_rejects_unknown_array():
+    with pytest.raises(ValueError):
+        TaskGraph("g", {"A": Array("A", (4,))},
+                  [Statement("s", ("i",), {"i": 4},
+                             (Access("Zed", ("i",)),),
+                             (Access("A", ("i",)),))])
+
+
+def test_3mm_structure_matches_paper():
+    """Paper Listing 4/5: 6 statements, E/F feed G, A-D external."""
+    g = polybench.build("3mm")
+    assert len(g.statements) == 6
+    assert sorted(g.external_inputs()) == ["A", "B", "C", "D"]
+    assert g.final_outputs() == ["G"]
+    # RAW edges: E_mac -> G_mac, F_mac -> G_mac
+    names = [s.name for s in g.statements]
+    raw = {(names[i], names[j], a) for (i, j, a) in g.edges()}
+    assert ("E_mac", "G_mac", "E") in raw
+    assert ("F_mac", "G_mac", "F") in raw
+
+
+def test_3mm_flops_match_closed_form():
+    g = polybench.build("3mm")
+    NI, NJ, NK, NL, NM = 180, 190, 200, 210, 220
+    expect = 2 * (NI * NJ * NK + NJ * NL * NM + NI * NL * NJ)
+    assert g.total_flops() == expect
+
+
+@pytest.mark.parametrize("name", sorted(polybench.BUILDERS))
+def test_every_builder_is_well_formed(name):
+    g = polybench.build(name)
+    assert g.statements, name
+    assert g.external_inputs(), name
+    assert g.final_outputs(), name
+    assert g.total_flops() > 0
+    # every edge references a valid statement pair in program order
+    for (i, j, arr) in g.edges():
+        assert 0 <= i < j < len(g.statements)
+        assert arr in g.arrays
+
+
+def test_io_bytes_counts_inputs_and_outputs_once():
+    g = polybench.build("gemm")
+    NI, NJ, NK = 200, 220, 240
+    expect = 4 * (NI * NK + NK * NJ + NI * NJ)
+    assert g.io_bytes() == expect
+
+
+def test_legal_permutations_pin_reductions_innermost():
+    g = polybench.build("gemm")
+    mac = next(s for s in g.statements if s.name.endswith("mac"))
+    perms = legal_permutations(mac)
+    # 2 non-reduction loops -> 2 permutations, k always last
+    assert len(perms) == 2
+    for p in perms:
+        assert p[-1] == "k0"
+    assert {p[:2] for p in perms} == {("i0", "j0"), ("j0", "i0")}
+
+
+def test_paper_table5_comm_between_tasks():
+    """Table 5: 3mm moves 2*N^2 elements between tasks, bicg moves 0,
+    atax moves N (tmp vector)."""
+    from repro.core.fusion import fuse
+    g3 = fuse(polybench.build("3mm"))
+    # E (180x190) + F (190x210) flow between fused tasks
+    assert g3.comm_between_tasks_elems() == 180 * 190 + 190 * 210
+    gb = fuse(polybench.build("bicg"))
+    assert gb.comm_between_tasks_elems() == 0
+    ga = fuse(polybench.build("atax"))
+    assert ga.comm_between_tasks_elems() == 390  # tmp (M,)
