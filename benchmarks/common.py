@@ -35,6 +35,38 @@ def solve_kernel(name: str, mode: str, *, scale: int = polybench.TPU_SCALE,
     return plan
 
 
+def measure_plan(name: str, plan, *, scale: int = 1, impl: str | None = None,
+                 repeats: int = 3, validate: bool = True):
+    """Execute a plan through the codegen subsystem and time it.
+
+    Returns ``(seconds, gflops, validated)`` — the measured counterpart of
+    the model-predicted GF/s, using the plan-lowered executor (one fused
+    kernel per task, slice-aware dispatch).  Triangular-density kernels are
+    not executable; callers should catch ``NotImplementedError``.
+    """
+    from repro.codegen import (allclose, plan_executor, random_inputs,
+                               reference_executor)
+    g = polybench.build(name, scale=scale)
+    exe = plan_executor(g, plan, impl=impl)
+    ins = random_inputs(g, seed=0)
+    out = exe(ins)                              # compile + warm up
+    for v in out.values():
+        v.block_until_ready()                   # drain async dispatch
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        out = exe(ins)
+        for v in out.values():
+            v.block_until_ready()
+        best = min(best, time.monotonic() - t0)
+    ok = True
+    if validate:
+        ref = reference_executor(g)(ins)
+        ok = all(allclose(out[k], ref[k]) for k in ref)
+    gflops = g.total_flops() / best / 1e9 if best else 0.0
+    return best, gflops, ok
+
+
 def fmt_row(cells) -> str:
     return ",".join(str(c) for c in cells)
 

@@ -12,28 +12,44 @@ Expected qualitative reproduction:
 """
 from __future__ import annotations
 
-from .common import MODES, Table, solve_kernel
+from .common import MODES, Table, measure_plan, solve_kernel
 
 KERNELS = ["2mm", "3mm", "atax", "bicg", "gemm", "gesummv", "mvt",
            "symm", "syr2k", "syrk", "trmm"]
 
 
-def run(scale: int | None = None, budget: float = 12.0) -> Table:
+def run(scale: int | None = None, budget: float = 12.0,
+        measure: bool = False) -> Table:
     from repro.core.polybench import TPU_SCALE
     scale = scale or TPU_SCALE
+    header = ["kernel"] + list(MODES) + ["PI_vs_sisyphus"]
+    if measure:
+        header += ["measured_GF/s", "measured_ok"]
     t = Table(f"Table 6 — PolyBench GF/s by solver mode (scale x{scale})",
-              ["kernel"] + list(MODES) + ["PI_vs_sisyphus"])
+              header)
     gmean_ratio = []
     for name in KERNELS:
         row = [name]
         gf = {}
+        plans = {}
         for mode in MODES:
             plan = solve_kernel(name, mode, scale=scale, budget=budget)
             gf[mode] = plan.gflops
+            plans[mode] = plan
             row.append(f"{plan.gflops:.1f}")
         pi = gf["prometheus"] / max(gf["sisyphus"], 1e-9)
         gmean_ratio.append(pi)
         row.append(f"{pi:.2f}x")
+        if measure:
+            # Wall-clock execution of the prometheus plan through codegen —
+            # the "real hardware" counterpart of the model prediction.
+            try:
+                _, mgf, ok = measure_plan(name, plans["prometheus"],
+                                          scale=scale,
+                                          validate=(scale == 1))
+                row += [f"{mgf:.1f}", str(ok) if scale == 1 else "-"]
+            except NotImplementedError:
+                row += ["-", "-"]       # triangular-density: model-only
         t.add(*row)
     g = 1.0
     for r in gmean_ratio:
@@ -44,4 +60,14 @@ def run(scale: int | None = None, budget: float = 12.0) -> Table:
 
 
 if __name__ == "__main__":
-    run().show()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--medium", action="store_true",
+                    help="paper-exact medium sizes (scale=1)")
+    ap.add_argument("--measure", action="store_true",
+                    help="also execute the prometheus plan and report "
+                         "measured GF/s (use with --medium on CPU)")
+    ap.add_argument("--budget", type=float, default=12.0)
+    args = ap.parse_args()
+    run(scale=1 if args.medium else None, budget=args.budget,
+        measure=args.measure).show()

@@ -1,17 +1,17 @@
 """Optimize + execute the full executable PolyBench suite.
 
-    PYTHONPATH=src python examples/polybench_suite.py [--scale N]
+    PYTHONPATH=src python examples/polybench_suite.py [--scale N] [--impl I]
 
-For each kernel: solve the Prometheus NLP, generate the tiled JAX
-executable, validate against the reference, and report model GF/s.
+For each kernel: solve the Prometheus NLP, lower the plan through the
+codegen subsystem (one fused Pallas kernel per task), validate against the
+reference oracle, and report model GF/s plus measured wall time.
 """
 import argparse
+import time
 
-import numpy as np
-
+from repro.codegen import (allclose, plan_executor, random_inputs,
+                           reference_executor)
 from repro.core import THREE_SLICE, SolverOptions, polybench, solve
-from repro.core.apply import (plan_executor, random_inputs,
-                              reference_executor)
 
 EXECUTABLE = ["3mm", "2mm", "gemm", "atax", "bicg", "mvt", "gesummv",
               "gemver", "madd", "2-madd", "3-madd"]
@@ -22,23 +22,36 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=1,
                     help="dataset scale (1 = paper medium)")
     ap.add_argument("--budget", type=float, default=10.0)
+    ap.add_argument("--impl", default=None,
+                    choices=("xla", "pallas_interpret", "pallas"),
+                    help="kernel implementation (default: auto)")
     args = ap.parse_args()
 
     print(f"{'kernel':10s} {'GF/s(model)':>12s} {'solver_s':>9s} "
-          f"{'validated':>9s}")
+          f"{'exec_ms':>8s} {'lowered':>12s} {'validated':>9s}")
     for name in EXECUTABLE:
         g = polybench.build(name, scale=args.scale)
         plan = solve(g, THREE_SLICE,
                      SolverOptions(time_budget_s=args.budget))
+        exe = plan_executor(g, plan, impl=args.impl)
+        ins = random_inputs(g, seed=0)
+        out = exe(ins)                          # compile + warm up
+        for v in out.values():
+            v.block_until_ready()               # drain async dispatch
+        t0 = time.monotonic()
+        out = exe(ins)
+        for v in out.values():
+            v.block_until_ready()
+        exec_ms = (time.monotonic() - t0) * 1e3
+        kinds = {lw.kind for lw in exe.lowerings().values()}
+        lowered = "+".join(sorted(kinds))
         ok = "-"
         if args.scale == 1:          # numeric validation at medium sizes
-            ins = random_inputs(g, seed=0)
             ref = reference_executor(g)(ins)
-            out = plan_executor(g, plan)(ins)
-            ok = all(np.allclose(np.asarray(out[k]), np.asarray(ref[k]),
-                                 rtol=2e-4, atol=2e-4) for k in ref)
+            ok = all(allclose(out[k], ref[k]) for k in ref)
         print(f"{name:10s} {plan.gflops:12.1f} "
-              f"{plan.solver_seconds:9.2f} {str(ok):>9s}")
+              f"{plan.solver_seconds:9.2f} {exec_ms:8.2f} {lowered:>12s} "
+              f"{str(ok):>9s}")
 
 
 if __name__ == "__main__":

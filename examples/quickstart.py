@@ -9,12 +9,10 @@
 4. Generate JAX code from the winning plan and validate it bit-for-bit
    against the naive reference executor.
 """
-import numpy as np
-
+from repro.codegen import (allclose, plan_executor, random_inputs,
+                           reference_executor)
 from repro.core import (ONE_SLICE, THREE_SLICE, SolverOptions, polybench,
                         solve)
-from repro.core.apply import (plan_executor, random_inputs,
-                              reference_executor)
 from repro.core.fusion import fuse
 
 
@@ -50,12 +48,16 @@ def main() -> None:
 
     print("\n== codegen + validation (paper-exact medium sizes) ==")
     plan_m = solve(g, THREE_SLICE, SolverOptions(time_budget_s=10))
+    exe = plan_executor(g, plan_m)
+    for tid, lw in sorted(exe.lowerings("xla").items()):
+        print(f"  {lw.name}: kind={lw.kind} grid={lw.grid} "
+              f"slice={lw.slice_id} inputs={list(lw.in_arrays)} "
+              f"-> {lw.out_array}")
     ins = random_inputs(g, seed=0)
     ref = reference_executor(g)(ins)
-    out = plan_executor(g, plan_m)(ins)
+    out = exe(ins)
     for k in ref:
-        ok = np.allclose(np.asarray(out[k]), np.asarray(ref[k]),
-                         rtol=2e-4, atol=2e-4)
+        ok = allclose(out[k], ref[k])
         print(f"  {k}: allclose={ok}")
         assert ok
     print("quickstart OK")

@@ -1,0 +1,29 @@
+"""Code generation subsystem: ExecutionPlan -> plan-faithful executables.
+
+The paper (§5) emits HLS-C++ + OpenCL host code from the NLP solution; here
+the same lowering targets JAX/Pallas:
+
+* ``lower.py``      per-fused-task lowering: statements -> ContractionSpecs
+                    (grid = plan permutation, blocks = plan tiles, fused
+                    init+accumulate, buffering semantics), one jitted
+                    callable per task;
+* ``executor.py``   dataflow executor: topo order + slice-aware dispatch
+                    (shared-buffer handoff vs device transfer);
+* ``reference.py``  naive statement-order einsum oracle for bit-level
+                    validation (run the executable under
+                    ``kernel_impl("pallas_interpret")`` to validate the
+                    actual kernel bodies against it).
+
+``repro.core.apply`` remains as a deprecation shim over this package.
+"""
+from .executor import PlanExecutable, plan_executor
+from .lower import LoweredUnit, TaskLowering, lower_task
+from .reference import (allclose, assert_close, eval_statement,
+                        random_inputs, reference_executor)
+
+__all__ = [
+    "PlanExecutable", "plan_executor",
+    "LoweredUnit", "TaskLowering", "lower_task",
+    "allclose", "assert_close", "eval_statement",
+    "random_inputs", "reference_executor",
+]

@@ -1,0 +1,297 @@
+"""Lowering pass: one fused task + its TaskConfig -> one jitted callable.
+
+This is the paper's §5 code generation, per fused task:
+
+* the task's statements are grouped into *units*: an init statement followed
+  by an accumulating contraction collapses into ONE kernel invocation (the
+  init value seeds the accumulator on the first reduction step) — fusion
+  decisions become real kernel fusion, not just shared scheduling;
+* each unit becomes a :class:`ContractionSpec` — grid order from the plan's
+  loop permutation (``TaskConfig.perm``, reduction loops innermost), block
+  shapes from the plan's tile sizes (``TaskConfig.tiles``, with the
+  computation padding applied by the kernel wrapper and sliced back), and
+  pipelining semantics from the placement's buffer counts;
+* statements outside the affine-contraction subset fall back to the
+  statement-level einsum evaluator (identical semantics, no plan tiling);
+* the whole task body — all units in order — is wrapped in a single
+  ``jax.jit`` so XLA sees one fused computation per task.
+
+Tile sizes for loops the plan left unspecified are clamped to the loop's
+(padded) extent instead of a blanket 128 so small graphs are not over-padded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from ..core.fusion import FusedGraph, FusedTask
+from ..core.padding import pad_to_multiple
+from ..core.plan import TaskConfig
+from ..core.taskgraph import Statement
+from ..kernels.contraction import ContractionSpec, LoopDim, Operand
+from ..kernels.contraction import ops as contraction_ops
+from .reference import eval_statement
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredUnit:
+    """One kernel invocation inside a task body."""
+
+    kind: str                           # "contraction" | "einsum"
+    spec: ContractionSpec | None        # set when kind == "contraction"
+    statements: tuple[Statement, ...]   # source statements (1 or 2)
+    operands: tuple[str, ...]           # env arrays, spec operand order
+    out_array: str
+
+
+@dataclasses.dataclass
+class TaskLowering:
+    """A fused task lowered against one plan config + kernel impl."""
+
+    tid: int
+    name: str
+    units: tuple[LoweredUnit, ...]
+    in_arrays: tuple[str, ...]          # env arrays the task consumes
+    out_array: str
+    slice_id: int
+    fn: Callable[..., jax.Array]        # jitted: (*in_arrays) -> out array
+
+    @property
+    def kind(self) -> str:
+        kinds = {u.kind for u in self.units}
+        return "contraction" if kinds == {"contraction"} else "einsum"
+
+    @property
+    def grid(self) -> tuple[int, ...] | None:
+        """Pallas grid of the dominant (largest-domain) contraction unit."""
+        specs = [u.spec for u in self.units if u.spec is not None]
+        if not specs:
+            return None
+        return max(specs, key=lambda s: len(s.loops)).grid
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+def _loop_dim(cfg: TaskConfig, loop: str, tc: int) -> LoopDim:
+    opt = cfg.tiles.get(loop)
+    if opt is not None and opt.ori_tc == tc:
+        return LoopDim(loop, opt.tile, opt.padded_tc, tc)
+    # Plan did not tile this loop (or tiled a different extent): clamp the
+    # block to the loop extent rather than defaulting to 128 and over-padding.
+    tile = min(128, tc)
+    return LoopDim(loop, tile, pad_to_multiple(tc, tile), tc)
+
+
+def _affine(stmt: Statement) -> bool:
+    """Within the kernel's subset: dense, unique non-None iters per access."""
+    if stmt.density != 1.0:
+        return False
+    if stmt.op not in ("mul", "add"):
+        return False
+    for acc in tuple(stmt.reads) + tuple(stmt.writes):
+        if any(it is None for it in acc.iters):
+            return False
+        if len(set(acc.iters)) != len(acc.iters):
+            return False
+    return True
+
+
+def _acc_reads(stmt: Statement):
+    out = stmt.writes[0]
+    return [a for a in stmt.reads if a.array == out.array]
+
+
+def _is_plain_accumulation(stmt: Statement) -> bool:
+    """Reads its own output exactly at the write's iterators (``+=``)."""
+    out = stmt.writes[0]
+    accs = _acc_reads(stmt)
+    return bool(accs) and all(tuple(a.iters) == tuple(out.iters)
+                              for a in accs)
+
+
+def _is_pointwise_def(stmt: Statement) -> bool:
+    """A definition with no reduction and no self-read — fusable as init."""
+    return not _acc_reads(stmt) and not stmt.reduction_loops
+
+
+def _ordered_loops(cfg: TaskConfig, used: set[str], red: set[str],
+                   tcs: dict[str, int]) -> list[str]:
+    """Grid order: the plan permutation restricted to the unit's loops, with
+    reduction loops kept innermost (the solver pins them there; enforce it
+    for robustness)."""
+    in_perm = [l for l in cfg.perm if l in used]
+    extra = [l for l in tcs if l in used and l not in cfg.perm]
+    seq = in_perm + extra
+    return [l for l in seq if l not in red] + [l for l in seq if l in red]
+
+
+def _unit_spec(cfg: TaskConfig, main: Statement,
+               init: Statement | None, prior: bool) -> ContractionSpec:
+    out = main.writes[0]
+    reads = [a for a in main.reads if a.array != out.array]
+    init_reads: list = []
+    init_op = "mul"
+    if init is not None:
+        init_reads = list(init.reads)
+        init_op = init.op
+    elif prior:
+        init_reads = [out]          # previous value of the output array
+        init_op = "mul"
+
+    tcs = dict(main.trip_counts)
+    if init is not None:
+        for l, n in init.trip_counts.items():
+            tcs.setdefault(l, n)
+    # Grid loops = loops some operand or the output actually indexes.  A
+    # reduction loop touched by no access contributes nothing in the
+    # reference einsum semantics, so it must not enter the grid either.
+    used = {it for a in reads + init_reads + [out] for it in a.iters}
+    red = set(main.reduction_loops) & used
+    loops = _ordered_loops(cfg, used, red, tcs)
+
+    overlapped = all(
+        cfg.placements[a.array].buffers >= 2
+        for a in reads if a.array in cfg.placements) if reads else True
+    return ContractionSpec(
+        loops=tuple(_loop_dim(cfg, l, tcs[l]) for l in loops),
+        reduction=tuple(l for l in loops if l in red),
+        op=main.op,
+        reads=tuple(Operand(a.array, tuple(a.iters)) for a in reads),
+        out_iters=tuple(out.iters),
+        init_reads=tuple(Operand(a.array, tuple(a.iters))
+                         for a in init_reads),
+        init_op=init_op,
+        buffers=2 if overlapped else 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Task lowering
+# ---------------------------------------------------------------------------
+def _build_units(fg: FusedGraph, task: FusedTask,
+                 cfg: TaskConfig) -> list[LoweredUnit]:
+    g = fg.graph
+    names = [s.name for s in g.statements]
+    units: list[LoweredUnit] = []
+    pending_init: Statement | None = None
+    produced = False       # the task has already written its output array
+
+    def flush_init() -> None:
+        nonlocal pending_init, produced
+        if pending_init is not None:
+            units.append(_make_unit(cfg, pending_init, None, prior=False))
+            pending_init = None
+            produced = True
+
+    for stmt in task.statements:
+        if stmt.density != 1.0:
+            raise NotImplementedError(
+                f"{stmt.name}: triangular-density statements are "
+                "cost-modeled only (rectangular execution would compute a "
+                "different function)")
+        if not _affine(stmt):
+            # outside the kernel subset: einsum fallback, one statement
+            flush_init()
+            srcs = tuple(dict.fromkeys(a.array for a in stmt.reads))
+            units.append(LoweredUnit(kind="einsum", spec=None,
+                                     statements=(stmt,), operands=srcs,
+                                     out_array=stmt.writes[0].array))
+            produced = True
+            continue
+        if _acc_reads(stmt) and not _is_plain_accumulation(stmt):
+            # A self-read at iterators other than the write's (e.g. a
+            # transposed in-place update) carries a loop-borne dependence
+            # neither the kernel nor the reference executes faithfully —
+            # refuse loudly rather than mis-lower.
+            raise NotImplementedError(
+                f"{stmt.name}: reads its own output at non-write "
+                "iterators; only plain '+=' accumulation is executable")
+        if _is_plain_accumulation(stmt):
+            fusable = pending_init is not None and \
+                tuple(pending_init.writes[0].iters) == \
+                tuple(stmt.writes[0].iters)
+            if fusable:
+                # init + accumulate -> ONE kernel (the fusion payoff)
+                units.append(_make_unit(cfg, stmt, pending_init,
+                                        prior=False))
+                pending_init = None
+                produced = True
+                continue
+            flush_init()
+            # Accumulation with no in-task init: seed from the array's prior
+            # value when one exists (earlier task / external input) —
+            # matching the reference, which only adds env values it finds.
+            out = stmt.writes[0].array
+            idx = names.index(stmt.name)
+            prior = produced or g.producer_of(out, idx) is not None \
+                or out in g.external_inputs()
+            units.append(_make_unit(cfg, stmt, None, prior=prior))
+            produced = True
+            continue
+        if _is_pointwise_def(stmt):
+            # hold: it may seed the accumulator of the next statement
+            flush_init()
+            pending_init = stmt
+            continue
+        # a non-accumulating contraction definition (e.g. gesummv y_sum)
+        flush_init()
+        units.append(_make_unit(cfg, stmt, None, prior=False))
+        produced = True
+    flush_init()
+    return units
+
+
+def _make_unit(cfg: TaskConfig, main: Statement, init: Statement | None,
+               prior: bool) -> LoweredUnit:
+    spec = _unit_spec(cfg, main, init, prior)
+    out = main.writes[0].array
+    operands = tuple(o.array for o in spec.reads + spec.init_reads)
+    stmts = (init, main) if init is not None else (main,)
+    return LoweredUnit(kind="contraction", spec=spec, statements=stmts,
+                       operands=operands, out_array=out)
+
+
+def lower_task(fg: FusedGraph, task: FusedTask, cfg: TaskConfig,
+               impl: str) -> TaskLowering:
+    """Lower one fused task to a single jitted callable honouring the plan."""
+    units = _build_units(fg, task, cfg)
+    out_array = task.output_array
+
+    # Environment arrays consumed (external to the task body): everything an
+    # einsum unit reads plus every contraction operand, minus arrays the
+    # task itself produced before that unit runs.
+    in_arrays: list[str] = []
+    written: set[str] = set()
+    for u in units:
+        srcs = u.operands if u.kind == "contraction" else tuple(
+            dict.fromkeys([a.array for s in u.statements for a in s.reads]))
+        for a in srcs:
+            if a not in written and a not in in_arrays:
+                in_arrays.append(a)
+        written.add(u.out_array)
+
+    def body(*arrays: jax.Array) -> jax.Array:
+        env = dict(zip(in_arrays, arrays))
+        val = None
+        for u in units:
+            if u.kind == "contraction":
+                operands = [env[a] for a in u.operands]
+                val = contraction_ops.contract(u.spec, *operands, impl=impl)
+            else:
+                for s in u.statements:
+                    val = eval_statement(s, env)
+            env[u.out_array] = val
+        return env[out_array]
+
+    return TaskLowering(
+        tid=task.tid,
+        name=task.name,
+        units=tuple(units),
+        in_arrays=tuple(in_arrays),
+        out_array=out_array,
+        slice_id=cfg.slice_id,
+        fn=jax.jit(body),
+    )

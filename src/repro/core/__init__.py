@@ -2,7 +2,7 @@
 
 Pipeline (paper Fig. 2): affine task graph -> fusion -> unified design space
 (tiling + permutation + padding + buffering + concurrency + slice placement)
--> NLP solve -> execution plan -> code generation.
+-> NLP solve -> execution plan -> code generation (`repro.codegen`).
 """
 from .taskgraph import Access, Array, Statement, TaskGraph
 from .fusion import FusedGraph, FusedTask, fuse
@@ -12,6 +12,19 @@ from .resources import Hardware, Slice, ONE_SLICE, THREE_SLICE
 from .solver import SolverOptions, solve
 from . import polybench
 
+# Codegen is layered above core (it consumes plans).  Resolved lazily
+# (PEP 562) so `import repro.codegen` -> `repro.core` -> back into the
+# partially-initialised codegen package cannot deadlock the import.
+_CODEGEN_NAMES = ("plan_executor", "random_inputs", "reference_executor")
+
+
+def __getattr__(name):
+    if name in _CODEGEN_NAMES:
+        from .. import codegen
+        return getattr(codegen, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "Access", "Array", "Statement", "TaskGraph",
     "FusedGraph", "FusedTask", "fuse",
@@ -19,4 +32,5 @@ __all__ = [
     "ArrayPlacement", "ExecutionPlan", "TaskConfig", "TaskReport",
     "Hardware", "Slice", "ONE_SLICE", "THREE_SLICE",
     "SolverOptions", "solve", "polybench",
+    "plan_executor", "random_inputs", "reference_executor",
 ]

@@ -1,146 +1,28 @@
-"""Code generation: ExecutionPlan -> executable JAX (paper §5).
+"""DEPRECATED shim — code generation moved to :mod:`repro.codegen`.
 
-The paper emits HLS-C++ + OpenCL host code from the NLP solution; the TPU
-analogue emits a jitted JAX callable per fused task, honouring the plan:
-
-* tile sizes  -> Pallas matmul block shapes (bm, bn, bk) for contraction
-  tasks (with the plan's computation padding applied, then sliced back);
-* fusion      -> init+accumulate pairs become one einsum/kernel call;
-* dataflow    -> tasks execute in topological order, intermediates handed
-  off in memory (the single-host analogue of FIFO/shared-buffer edges);
-* everything else (buffer levels, overlap) is performance-only and has no
-  numerical effect — validated by equivalence with the naive reference.
-
-The generic executor supports the affine statement classes in the paper's
-benchmark suite: products contracted over reduction loops ("mul", einsum)
-and elementwise sums ("add").  Triangular-density kernels (symm/trmm/...)
-are cost-modeled but not executed (their rectangular einsum is not the
-same function); the executor raises for them.
+``core/apply.py`` used to hold a statement-at-a-time executor that honoured
+tile sizes only for the one ``(i,k)x(k,j)`` matmul pattern.  The plan-faithful
+lowering (arbitrary N-D contractions, plan permutations, fused
+init+accumulate kernels, slice-aware dataflow execution) lives in
+``repro.codegen``; this module re-exports the public names so existing
+imports keep working.
 """
 from __future__ import annotations
 
-import string
-from typing import Callable
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..codegen import (PlanExecutable, allclose, assert_close,  # noqa: F401
+                       eval_statement, plan_executor, random_inputs,
+                       reference_executor)
 
-from .fusion import FusedGraph, fuse
-from .plan import ExecutionPlan
-from .taskgraph import Statement, TaskGraph
-from ..kernels import matmul as tiled_matmul
+warnings.warn(
+    "repro.core.apply is deprecated; import from repro.codegen instead",
+    DeprecationWarning, stacklevel=2)
 
+# Old private name, kept for any straggler callers.
+_eval_statement = eval_statement
 
-def reference_executor(graph: TaskGraph) -> Callable[..., dict]:
-    """Naive executor: statements in program order via einsum (oracle)."""
-
-    def run(inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
-        env = dict(inputs)
-        for stmt in graph.statements:
-            env[stmt.writes[0].array] = _eval_statement(stmt, env)
-        return {a: env[a] for a in graph.final_outputs()}
-
-    return run
-
-
-def plan_executor(graph: TaskGraph, plan: ExecutionPlan) \
-        -> Callable[..., dict]:
-    """Executor honouring the plan's tiling (Pallas blocked matmul for 2D
-    contractions, with the plan's padding), fused tasks in topo order."""
-    fg = fuse(graph)
-    order = fg.topo_order()
-
-    def run(inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
-        env = dict(inputs)
-        for tid in order:
-            task = fg.tasks[tid]
-            cfg = plan.configs[tid]
-            for stmt in task.statements:
-                if _is_blocked_matmul(stmt):
-                    env[stmt.writes[0].array] = _eval_matmul_tiled(
-                        stmt, env, cfg)
-                else:
-                    env[stmt.writes[0].array] = _eval_statement(stmt, env)
-        return {a: env[a] for a in graph.final_outputs()}
-
-    return run
-
-
-# ---------------------------------------------------------------------------
-def _eval_statement(stmt: Statement, env: dict) -> jax.Array:
-    if stmt.density != 1.0:
-        raise NotImplementedError(
-            f"{stmt.name}: triangular-density statements are cost-modeled "
-            "only (rectangular execution would compute a different function)")
-    out_acc = stmt.writes[0]
-    reads = [a for a in stmt.reads if a.array != out_acc.array]
-    accumulate = any(a.array == out_acc.array for a in stmt.reads)
-    out_shape = tuple(stmt.trip_counts[it] for it in out_acc.iters)
-
-    if not reads:
-        val = jnp.zeros(out_shape, jnp.float32)
-    elif stmt.op == "add":
-        letters = {it: string.ascii_letters[i]
-                   for i, it in enumerate(stmt.loops)}
-        val = None
-        for acc in reads:
-            spec = "".join(letters[i] for i in acc.iters) + "->" + \
-                "".join(letters[i] for i in out_acc.iters)
-            term = jnp.einsum(spec, env[acc.array])
-            val = term if val is None else val + term
-    else:  # "mul": product of reads contracted over reduction loops
-        letters = {it: string.ascii_letters[i]
-                   for i, it in enumerate(stmt.loops)}
-        in_specs = ",".join("".join(letters[i] for i in acc.iters)
-                            for acc in reads)
-        out_spec = "".join(letters[i] for i in out_acc.iters)
-        val = jnp.einsum(f"{in_specs}->{out_spec}",
-                         *[env[acc.array] for acc in reads])
-    if accumulate and out_acc.array in env:
-        val = env[out_acc.array] + val
-    return val
-
-
-def _is_blocked_matmul(stmt: Statement) -> bool:
-    """out[i,j] += lhs[i,k] * rhs[k,j] pattern (possibly transposed reads)."""
-    if stmt.op != "mul" or stmt.density != 1.0:
-        return False
-    out = stmt.writes[0]
-    reads = [a for a in stmt.reads if a.array != out.array]
-    if len(reads) != 2 or len(out.iters) != 2:
-        return False
-    red = set(stmt.reduction_loops)
-    if len(red) != 1:
-        return False
-    (i, j) = out.iters
-    k = next(iter(red))
-    pats = {tuple(reads[0].iters), tuple(reads[1].iters)}
-    return pats == {(i, k), (k, j)}
-
-
-def _eval_matmul_tiled(stmt: Statement, env: dict, cfg) -> jax.Array:
-    out = stmt.writes[0]
-    reads = [a for a in stmt.reads if a.array != out.array]
-    (i, j) = out.iters
-    k = next(iter(set(stmt.reduction_loops)))
-    lhs = next(a for a in reads if tuple(a.iters) == (i, k))
-    rhs = next(a for a in reads if tuple(a.iters) == (k, j))
-    x, y = env[lhs.array], env[rhs.array]
-    bm = cfg.tiles[i].tile if i in cfg.tiles else 128
-    bn = cfg.tiles[j].tile if j in cfg.tiles else 128
-    bk = cfg.tiles[k].tile if k in cfg.tiles else 128
-    val = tiled_matmul(x, y, bm=bm, bn=bn, bk=bk)
-    if any(a.array == out.array for a in stmt.reads) and out.array in env:
-        val = env[out.array] + val
-    return val
-
-
-def random_inputs(graph: TaskGraph, seed: int = 0) -> dict[str, jax.Array]:
-    rng = np.random.default_rng(seed)
-    out = {}
-    for name in graph.external_inputs():
-        arr = graph.arrays[name]
-        out[name] = jnp.asarray(
-            rng.normal(size=arr.shape).astype(np.float32))
-    return out
+__all__ = [
+    "PlanExecutable", "plan_executor", "reference_executor",
+    "random_inputs", "allclose", "assert_close", "eval_statement",
+]

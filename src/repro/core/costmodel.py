@@ -39,11 +39,26 @@ from .taskgraph import Access
 # Footprints (paper f_{a,l}) and transfer counts
 # ---------------------------------------------------------------------------
 def _access_of(task: FusedTask, array: str) -> Access:
-    for s in task.statements:
-        for acc in tuple(s.reads) + tuple(s.writes):
-            if acc.array == array:
-                return acc
-    raise KeyError(f"array {array!r} not accessed by task {task.name}")
+    """First access of ``array`` in the task, memoized per task.
+
+    This sits in the solver's innermost enumeration loop (every footprint /
+    transfer-count query lands here); a linear rescan of all statements per
+    call dominated solve time.  The cache lives on the task object and is
+    rebuilt if fusion appends statements after a lookup.
+    """
+    cache = getattr(task, "_access_cache", None)
+    if cache is None or cache[0] != len(task.statements):
+        mapping: dict[str, Access] = {}
+        for s in task.statements:
+            for acc in tuple(s.reads) + tuple(s.writes):
+                mapping.setdefault(acc.array, acc)
+        cache = (len(task.statements), mapping)
+        task._access_cache = cache
+    try:
+        return cache[1][array]
+    except KeyError:
+        raise KeyError(f"array {array!r} not accessed by task {task.name}") \
+            from None
 
 
 def tile_extent(cfg: TaskConfig, task: FusedTask, it: str, level: int) -> int:

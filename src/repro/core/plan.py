@@ -10,7 +10,7 @@ variables:
     slice_id        slr_t — the slice (SLR analogue) executing the task
 
 :class:`ExecutionPlan` aggregates task configs for a fused graph and is the
-object handed to code generation (`core/apply.py`) and the benchmark tables.
+object handed to code generation (`repro.codegen`) and the benchmark tables.
 """
 from __future__ import annotations
 

@@ -65,8 +65,8 @@ class Statement:
     # volume terms without full polyhedra.
     density: float = 1.0
     # How non-accumulator reads combine: "mul" = product (contracted over
-    # reduction loops), "add" = elementwise sum.  Drives the generic
-    # executor in core/apply.py.
+    # reduction loops), "add" = elementwise sum.  Drives the codegen
+    # lowering (repro.codegen) and the reference oracle.
     op: str = "mul"
 
     def __post_init__(self):

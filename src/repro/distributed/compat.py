@@ -1,0 +1,19 @@
+"""jax-version compatibility helpers for the distribution layer."""
+from __future__ import annotations
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: new top-level ``jax.shard_map``
+    (``check_vma``) vs the older ``jax.experimental.shard_map.shard_map``
+    (``check_rep``)."""
+    import jax
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

@@ -18,7 +18,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from .compat import shard_map_compat
 
 
 def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,
@@ -70,8 +71,8 @@ def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,
         return outs
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
-    return shard_map(per_stage, mesh=mesh, in_specs=in_specs,
-                     out_specs=P(), check_rep=False)(stage_params, x_micro)
+    return shard_map_compat(per_stage, mesh=mesh, in_specs=in_specs,
+                            out_specs=P())(stage_params, x_micro)
 
 
 def stage_assignment_cost(n_stages: int, n_micro: int,

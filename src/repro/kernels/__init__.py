@@ -7,6 +7,7 @@ Validated in interpret mode on CPU; compiled via Mosaic on TPU.
 from . import dispatch
 from .dispatch import kernel_impl, current_impl
 from .matmul import matmul
+from .contraction import ContractionSpec, LoopDim, Operand, contract
 from .flash_attention import flash_attention
 from .rglru import rglru
 from .rwkv6 import rwkv6
@@ -14,6 +15,7 @@ from .quant import quantize, dequantize
 
 __all__ = [
     "dispatch", "kernel_impl", "current_impl",
-    "matmul", "flash_attention", "rglru", "rwkv6",
+    "matmul", "ContractionSpec", "LoopDim", "Operand", "contract",
+    "flash_attention", "rglru", "rwkv6",
     "quantize", "dequantize",
 ]

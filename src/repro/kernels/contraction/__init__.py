@@ -1,0 +1,12 @@
+"""Generalized tiled N-D contraction kernel (plan-faithful codegen target).
+
+``spec.py``    the static IR (ContractionSpec) the lowering pass emits;
+``kernel.py``  pallas_call generated from a spec (grid = plan permutation,
+               BlockSpecs = plan tiles, init fusion, overlap semantics);
+``ops.py``     jit'd wrapper with padding + impl dispatch;
+``ref.py``     pure-einsum oracle (the ``xla`` impl).
+"""
+from .spec import ContractionSpec, LoopDim, Operand
+from .ops import contract
+
+__all__ = ["ContractionSpec", "LoopDim", "Operand", "contract"]

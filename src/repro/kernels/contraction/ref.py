@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for :class:`ContractionSpec` — the ``xla`` impl path.
+
+Evaluates the spec's semantics directly with einsum on the *unpadded*
+operands; numerically identical (up to f32 association order) to the Pallas
+kernel, and to the statement-level reference executor.
+
+``combine_terms`` is the single definition of the op semantics ("mul" =
+joint product contraction, "add" = sum of per-operand projections); the
+Pallas kernel body reuses it on VMEM blocks so oracle and kernel cannot
+drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ContractionSpec, Operand
+
+
+def combine_terms(subs: list[str], out_sub: str, op: str,
+                  vals: list[jax.Array],
+                  zero_shape: tuple[int, ...]) -> jax.Array:
+    """Combine operands per the op semantics (shared by oracle + kernel)."""
+    if not vals:
+        return jnp.zeros(zero_shape, jnp.float32)
+    if op == "mul":
+        return jnp.einsum(f"{','.join(subs)}->{out_sub}", *vals,
+                          preferred_element_type=jnp.float32)
+    total = None
+    for sub, v in zip(subs, vals):
+        term = jnp.einsum(f"{sub}->{out_sub}", v,
+                          preferred_element_type=jnp.float32)
+        total = term if total is None else total + term
+    return total
+
+
+def _combine(spec: ContractionSpec, operands: tuple[Operand, ...],
+             vals: list[jax.Array], op: str) -> jax.Array:
+    return combine_terms(spec.einsum_inputs(operands), spec.out_subscript,
+                         op, vals, spec.out_ori)
+
+
+def contract(spec: ContractionSpec, *operands: jax.Array) -> jax.Array:
+    """Reference evaluation.  ``operands`` = spec.reads then spec.init_reads,
+    each with the spec's *original* (unpadded) shape."""
+    n = len(spec.reads)
+    reads, init_reads = list(operands[:n]), list(operands[n:])
+    val = _combine(spec, spec.reads, reads, spec.op)
+    if spec.init_reads:
+        val = val + _combine(spec, spec.init_reads, init_reads, spec.init_op)
+    return val

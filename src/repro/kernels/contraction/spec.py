@@ -1,0 +1,147 @@
+"""Static description of one tiled affine contraction — the codegen IR.
+
+A :class:`ContractionSpec` is the bridge between the solver's
+:class:`~repro.core.plan.TaskConfig` and an executable kernel: it freezes the
+plan decisions that have a structural effect on the generated code (loop
+order, tile sizes, padding, buffering) together with the statement's access
+functions.  It is hashable so it can serve as a ``jax.jit`` static argument
+and as a cache key for built ``pallas_call`` closures.
+
+Semantics (matching the reference oracle in ``repro.codegen.reference``):
+
+    out[out_iters]  =  init  (+)=  contribution per grid step
+
+* ``op == "mul"``: the contribution is the product of all read operands,
+  contracted over the reduction loops (an einsum).
+* ``op == "add"``: the contribution is the sum of the read operands, each
+  projected onto the output iterators (sum of single-operand einsums).
+* ``init_reads`` is the fused init statement's operand list (empty tuple
+  means "initialise to zeros"); ``init_op`` combines them like ``op`` does.
+  The init value is materialised on the *first* visit to an output tile —
+  this is what makes init+accumulate fusion a single kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import string
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopDim:
+    """One loop of the nest, in grid (permutation) order."""
+
+    name: str
+    tile: int          # TC_intra — block extent along this loop
+    padded: int        # trip count after computation padding (tile divides it)
+    ori: int           # original trip count (slice back to this)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.padded // self.tile
+
+    def __post_init__(self):
+        if self.padded % self.tile:
+            raise ValueError(
+                f"loop {self.name}: tile {self.tile} does not divide padded "
+                f"trip count {self.padded}")
+        if self.padded < self.ori:
+            raise ValueError(f"loop {self.name}: padded {self.padded} < "
+                             f"original {self.ori}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Operand:
+    """An affine read: ``array[iters]`` (one loop iterator per dimension)."""
+
+    array: str
+    iters: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionSpec:
+    loops: tuple[LoopDim, ...]        # grid order; reduction loops innermost
+    reduction: tuple[str, ...]        # names of contracted loops
+    op: str                           # "mul" | "add"
+    reads: tuple[Operand, ...]        # contribution operands (no accumulator)
+    out_iters: tuple[str, ...]
+    init_reads: tuple[Operand, ...] = ()
+    init_op: str = "mul"
+    buffers: int = 2                  # N_a: >=2 enables pipelined overlap
+
+    def __post_init__(self):
+        names = {l.name for l in self.loops}
+        for opnd in self.reads + self.init_reads:
+            missing = [it for it in opnd.iters if it not in names]
+            if missing:
+                raise ValueError(f"operand {opnd} uses unknown loops "
+                                 f"{missing}")
+            if len(set(opnd.iters)) != len(opnd.iters):
+                raise ValueError(f"operand {opnd} repeats an iterator "
+                                 "(non-affine access)")
+        if self.op not in ("mul", "add") or self.init_op not in ("mul", "add"):
+            raise ValueError(f"bad op {self.op!r}/{self.init_op!r}")
+        # The kernel's single accumulator requires the reduction grid dims
+        # to iterate fastest per output tile: reductions must form the
+        # innermost suffix of the loop order (the solver pins them there).
+        red = set(self.reduction)
+        if not red <= names:
+            raise ValueError(f"reduction {self.reduction} not in loops")
+        tail = tuple(l.name for l in self.loops[len(self.loops) - len(red):])
+        if red and set(tail) != red:
+            raise ValueError(
+                f"reduction loops {sorted(red)} must be innermost "
+                f"(loop order is {[l.name for l in self.loops]})")
+
+    # -- derived views ------------------------------------------------------
+    @property
+    def loop_names(self) -> tuple[str, ...]:
+        return tuple(l.name for l in self.loops)
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return tuple(l.n_tiles for l in self.loops)
+
+    @property
+    def reduction_dims(self) -> tuple[int, ...]:
+        names = self.loop_names
+        return tuple(names.index(r) for r in self.reduction)
+
+    def dim(self, name: str) -> LoopDim:
+        for l in self.loops:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def block_shape(self, opnd: Operand) -> tuple[int, ...]:
+        return tuple(self.dim(it).tile for it in opnd.iters)
+
+    def padded_shape(self, opnd: Operand) -> tuple[int, ...]:
+        return tuple(self.dim(it).padded for it in opnd.iters)
+
+    def ori_shape(self, opnd: Operand) -> tuple[int, ...]:
+        return tuple(self.dim(it).ori for it in opnd.iters)
+
+    @property
+    def out_block(self) -> tuple[int, ...]:
+        return tuple(self.dim(it).tile for it in self.out_iters)
+
+    @property
+    def out_padded(self) -> tuple[int, ...]:
+        return tuple(self.dim(it).padded for it in self.out_iters)
+
+    @property
+    def out_ori(self) -> tuple[int, ...]:
+        return tuple(self.dim(it).ori for it in self.out_iters)
+
+    def letters(self) -> dict[str, str]:
+        return {l.name: string.ascii_letters[i]
+                for i, l in enumerate(self.loops)}
+
+    def einsum_inputs(self, operands: tuple[Operand, ...]) -> list[str]:
+        lt = self.letters()
+        return ["".join(lt[it] for it in o.iters) for o in operands]
+
+    @property
+    def out_subscript(self) -> str:
+        lt = self.letters()
+        return "".join(lt[it] for it in self.out_iters)

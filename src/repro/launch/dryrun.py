@@ -138,9 +138,18 @@ def lower_cell(cfg, shape: str, mesh, attn_impl: str | None = None,
                      "microbatches": microbatches}
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize ``cost_analysis()`` across jax versions: newer releases
+    return one dict, older ones a list with one dict per partition."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _measure(compiled) -> dict[str, float]:
     """flops / bytes / collective bytes of one compiled executable."""
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_analysis(compiled)
     coll = hlo_parse.total_collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -189,7 +198,7 @@ def calibrated_cost(cfg, shape: str, mesh) -> dict[str, float]:
 def analyze(lowered, compiled, *, arch: str, shape: str, mesh_name: str,
             n_chips: int, cfg, n_tokens: float, kind: str,
             corrected: dict[str, float] | None = None) -> dict:
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     try:

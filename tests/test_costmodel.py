@@ -4,7 +4,7 @@ from __future__ import annotations
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import polybench
 from repro.core.costmodel import (dag_latency, footprint_elems, n_transfers,
