@@ -12,23 +12,26 @@ Expected qualitative reproduction:
 """
 from __future__ import annotations
 
-from .common import MODES, Table, measure_plan, solve_kernel
+from .common import MODES, Table, build_graph, measure_plan, solve_kernel
 
 KERNELS = ["2mm", "3mm", "atax", "bicg", "gemm", "gesummv", "mvt",
            "symm", "syr2k", "syrk", "trmm"]
 
 
 def run(scale: int | None = None, budget: float = 12.0,
-        measure: bool = False) -> Table:
+        measure: bool = False, kernels: list[str] | None = None,
+        bench_out: str | None = None) -> Table:
     from repro.core.polybench import TPU_SCALE
     scale = scale or TPU_SCALE
+    kernels = kernels or KERNELS
     header = ["kernel"] + list(MODES) + ["PI_vs_sisyphus"]
     if measure:
         header += ["measured_GF/s", "measured_ok"]
     t = Table(f"Table 6 — PolyBench GF/s by solver mode (scale x{scale})",
               header)
     gmean_ratio = []
-    for name in KERNELS:
+    prometheus_plans = {}
+    for name in kernels:
         row = [name]
         gf = {}
         plans = {}
@@ -40,11 +43,14 @@ def run(scale: int | None = None, budget: float = 12.0,
         pi = gf["prometheus"] / max(gf["sisyphus"], 1e-9)
         gmean_ratio.append(pi)
         row.append(f"{pi:.2f}x")
+        prometheus_plans[name] = plans["prometheus"]
         if measure:
-            # Wall-clock execution of the prometheus plan through codegen —
-            # the "real hardware" counterpart of the model prediction.
+            # Wall-clock execution of the prometheus plan through the
+            # whole-plan compiled program — the "real hardware" counterpart
+            # of the model prediction.
             try:
                 _, mgf, ok = measure_plan(name, plans["prometheus"],
+                                          graph=build_graph(name, scale),
                                           scale=scale,
                                           validate=(scale == 1))
                 row += [f"{mgf:.1f}", str(ok) if scale == 1 else "-"]
@@ -56,6 +62,12 @@ def run(scale: int | None = None, budget: float = 12.0,
         g *= r
     g **= 1.0 / len(gmean_ratio)
     t.add("gmean_PI", "", "", "", "", f"{g:.2f}x")
+    if bench_out:
+        # Steady-state program-vs-per-task dispatch benchmark on the same
+        # prometheus plans (no re-solving) -> BENCH_codegen.json
+        from .bench_codegen import emit
+        emit(bench_out, kernels=tuple(kernels), scale=scale, budget=budget,
+             plans=prometheus_plans)
     return t
 
 
@@ -68,6 +80,12 @@ if __name__ == "__main__":
                     help="also execute the prometheus plan and report "
                          "measured GF/s (use with --medium on CPU)")
     ap.add_argument("--budget", type=float, default=12.0)
+    ap.add_argument("--kernels", nargs="+", default=None,
+                    help="kernel subset (default: all 11)")
+    ap.add_argument("--bench-out", default=None,
+                    help="also emit the steady-state dispatch benchmark "
+                         "(BENCH_codegen.json) for the measured kernels")
     args = ap.parse_args()
     run(scale=1 if args.medium else None, budget=args.budget,
-        measure=args.measure).show()
+        measure=args.measure, kernels=args.kernels,
+        bench_out=args.bench_out).show()

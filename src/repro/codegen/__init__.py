@@ -5,10 +5,16 @@ the same lowering targets JAX/Pallas:
 
 * ``lower.py``      per-fused-task lowering: statements -> ContractionSpecs
                     (grid = plan permutation, blocks = plan tiles, fused
-                    init+accumulate, buffering semantics), one jitted
-                    callable per task;
-* ``executor.py``   dataflow executor: topo order + slice-aware dispatch
-                    (shared-buffer handoff vs device transfer);
+                    init+accumulate, buffering semantics), one raw traceable
+                    body per task;
+* ``schedule.py``   wave schedule: topological levels x slice assignment,
+                    cross-slice transfer timing, buffer liveness/donation;
+* ``program.py``    whole-plan engine: the entire fused DAG in ONE
+                    ``jax.jit`` program per impl, with a process-wide cache
+                    keyed by (graph fingerprint, plan fingerprint, impl);
+* ``executor.py``   ``PlanExecutable``: program mode (default, fused) and
+                    per-task mode (debug/validation, overlap- and
+                    donation-aware host dispatch);
 * ``reference.py``  naive statement-order einsum oracle for bit-level
                     validation (run the executable under
                     ``kernel_impl("pallas_interpret")`` to validate the
@@ -18,12 +24,18 @@ the same lowering targets JAX/Pallas:
 """
 from .executor import PlanExecutable, plan_executor
 from .lower import LoweredUnit, TaskLowering, lower_task
+from .program import (PlanProgram, cache_stats, clear_program_cache,
+                      compiled_program, graph_fingerprint, plan_fingerprint)
 from .reference import (allclose, assert_close, eval_statement,
                         random_inputs, reference_executor)
+from .schedule import Transfer, WaveSchedule, wave_schedule
 
 __all__ = [
     "PlanExecutable", "plan_executor",
     "LoweredUnit", "TaskLowering", "lower_task",
+    "PlanProgram", "compiled_program", "cache_stats",
+    "clear_program_cache", "graph_fingerprint", "plan_fingerprint",
+    "Transfer", "WaveSchedule", "wave_schedule",
     "allclose", "assert_close", "eval_statement",
     "random_inputs", "reference_executor",
 ]

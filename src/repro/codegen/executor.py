@@ -1,18 +1,31 @@
-"""Dataflow graph executor: lowered tasks in topo order, slice-aware.
+"""Plan executables: whole-program fused path + per-task debug path.
 
-The single-host analogue of the paper's generated host code: fused tasks run
-in topological order over the dataflow DAG; each task executes on the JAX
-device standing in for its plan slice (``TaskConfig.slice_id``).
+``PlanExecutable`` is the callable handed out by :func:`plan_executor`.  It
+executes a graph as lowered from a plan in one of two modes:
 
-* same-slice edge   -> the producer's output is already resident on the
-                       consumer's device: shared-buffer handoff, no copy;
-* cross-slice edge  -> when several JAX devices exist the operand is moved
-                       with ``jax.device_put`` (the ICI transfer analogue);
-* single device     -> sequential fallback, all placement is a no-op.
+* ``mode="program"`` (default) — the whole fused DAG is compiled into ONE
+  ``jax.jit`` program per kernel impl (:mod:`repro.codegen.program`): XLA
+  sees every task kernel at once, schedules independent same-wave tasks
+  concurrently, elides host round-trips on inter-task edges, and cross-slice
+  transfers are emitted at the producer's wave so they overlap the next
+  wave's compute.  Programs come from a process-wide cache keyed by
+  (graph fingerprint, plan fingerprint, impl) — repeated construction and
+  repeated calls with identical shapes re-lower and re-trace nothing.
+
+* ``mode="per_task"`` — the PR-1 style host loop, kept as the
+  debug/validation mode: one jitted callable per task, dispatched wave by
+  wave.  Unlike PR 1 it is overlap-aware (cross-slice edges are issued the
+  moment the producing wave is dispatched, riding under the next wave's
+  compute thanks to JAX's async dispatch, instead of blocking at consume
+  time) and donation-aware (an intermediate buffer dying at its last
+  consumer is donated to that consumer's kernel when shapes allow reuse).
+
+Device handles and impl resolution are cached at construction — no
+``jax.devices()`` query per call.
 """
 from __future__ import annotations
 
-from typing import Callable
+import os
 
 import jax
 
@@ -21,52 +34,150 @@ from ..core.plan import ExecutionPlan
 from ..core.taskgraph import TaskGraph
 from ..kernels import dispatch
 from .lower import TaskLowering, lower_task
+from .program import PlanProgram, compiled_program
+from .schedule import WaveSchedule, wave_schedule
+
+MODES = ("program", "per_task")
 
 
 class PlanExecutable:
     """Callable executing ``graph`` as lowered from ``plan``.
 
-    Lowerings are built lazily per kernel impl (``xla`` /
+    Lowerings/programs are built lazily per kernel impl (``xla`` /
     ``pallas_interpret`` / ``pallas``) so the same executable can be
     validated in interpret mode and deployed compiled.
     """
 
     def __init__(self, graph: TaskGraph, plan: ExecutionPlan,
-                 impl: str | None = None):
+                 impl: str | None = None, mode: str = "program"):
+        if mode not in MODES:
+            raise ValueError(f"bad mode {mode!r}; want one of {MODES}")
         self.graph = graph
         self.plan = plan
+        self.mode = mode
         self.fg = fuse(graph)
-        self.order = self.fg.topo_order()
+        self.schedule: WaveSchedule = wave_schedule(self.fg, plan)
+        self.order = self.schedule.order
         self._impl = impl
+        # cached once: device handles and the never-donated arrays
+        self._devices = tuple(jax.devices())
+        self._multi = len(self._devices) > 1 and self.schedule.multi_slice
+        self._protected = frozenset(graph.external_inputs()) \
+            | frozenset(graph.final_outputs())
         self._lowered: dict[str, dict[int, TaskLowering]] = {}
+        self._task_fns: dict[str, dict[int, object]] = {}
+        self._programs: dict[str, PlanProgram] = {}
 
     # -- lowering ----------------------------------------------------------
     def _resolve_impl(self, impl: str | None = None) -> str:
+        # the explicit impl (argument or constructor) is already resolved;
+        # only the contextual default (`kernel_impl` scope / env var) needs
+        # a dispatch query, and that must stay per-call to honour scoping
         return impl or self._impl or dispatch.current_impl()
+
+    def program(self, impl: str | None = None) -> PlanProgram:
+        """The whole-plan compiled program for ``impl`` (cached)."""
+        impl = self._resolve_impl(impl)
+        if impl not in self._programs:
+            self._programs[impl] = compiled_program(
+                self.graph, self.plan, impl,
+                fg=self.fg, schedule=self.schedule)
+        return self._programs[impl]
 
     def lowerings(self, impl: str | None = None) -> dict[int, TaskLowering]:
         impl = self._resolve_impl(impl)
         if impl not in self._lowered:
-            self._lowered[impl] = {
-                t.tid: lower_task(self.fg, t, self.plan.configs[t.tid], impl)
-                for t in self.fg.tasks
-            }
+            if self.mode == "program":
+                # share the program's lowerings instead of re-lowering
+                self._lowered[impl] = self.program(impl).lowered
+            else:
+                self._lowered[impl] = {
+                    t.tid: lower_task(self.fg, t, self.plan.configs[t.tid],
+                                      impl)
+                    for t in self.fg.tasks
+                }
         return self._lowered[impl]
+
+    def _donating_fns(self, impl: str) -> dict[int, object]:
+        """Per-task jitted fns, donating dying intermediate buffers whose
+        shape matches the task output (predictable in-place reuse).
+
+        The CPU runtime declines these donations with a warning, so
+        donation is applied only where the backend honours it (TPU/GPU),
+        or when forced via ``REPRO_DONATE=1``.
+        """
+        if impl in self._task_fns:
+            return self._task_fns[impl]
+        fns: dict[int, object] = {}
+        arrays = self.graph.arrays
+        supported = jax.default_backend() in ("tpu", "gpu") \
+            or os.environ.get("REPRO_DONATE") == "1"
+        for tid, lw in self.lowerings(impl).items():
+            out_shape = arrays[lw.out_array].shape
+            donate = tuple(
+                i for i in self.schedule.donatable(tid, lw.in_arrays,
+                                                   self._protected)
+                if arrays[lw.in_arrays[i]].shape == out_shape) \
+                if supported else ()
+            fns[tid] = jax.jit(lw.body, donate_argnums=donate) if donate \
+                else lw.fn
+        self._task_fns[impl] = fns
+        return fns
 
     # -- execution ---------------------------------------------------------
     def __call__(self, inputs: dict[str, jax.Array],
                  impl: str | None = None) -> dict[str, jax.Array]:
+        if self.mode == "program":
+            return self.program(impl)(inputs)
+        return self._run_per_task(inputs, impl)
+
+    def _run_per_task(self, inputs: dict[str, jax.Array],
+                      impl: str | None) -> dict[str, jax.Array]:
+        impl = self._resolve_impl(impl)
         lowered = self.lowerings(impl)
-        devices = jax.devices()
-        multi = len(devices) > 1
+        fns = self._donating_fns(impl)
+        devices = self._devices
+        ndev = len(devices)
+        multi = self._multi
         env = dict(inputs)
-        for tid in self.order:
-            lw = lowered[tid]
-            args = [env[a] for a in lw.in_arrays]
+        placed: dict[tuple[str, int], jax.Array] = {}
+        for wi, wave in enumerate(self.schedule.waves):
+            for tid in wave:
+                lw = lowered[tid]
+                if multi:
+                    d = lw.slice_id % ndev
+                    args = []
+                    for a in lw.in_arrays:
+                        v = placed.get((a, d))
+                        if v is None:
+                            # cache the placement: shared operands are
+                            # copied once per device, not once per consumer
+                            v = placed[(a, d)] = _place(env[a], devices[d])
+                        args.append(v)
+                else:
+                    args = [env[a] for a in lw.in_arrays]
+                out = fns[tid](*args)
+                if multi:
+                    for key in [k for k in placed if k[0] == lw.out_array]:
+                        del placed[key]
+                env[lw.out_array] = out
+                # drop buffers that died at this task (their last consumer)
+                for a in self.schedule.dead_after.get(tid, ()):
+                    if a not in self._protected and a != lw.out_array:
+                        env.pop(a, None)
+                        for key in [k for k in placed if k[0] == a]:
+                            del placed[key]
             if multi:
-                dev = devices[lw.slice_id % len(devices)]
-                args = [_place(x, dev) for x in args]
-            env[lw.out_array] = lw.fn(*args)
+                # overlap-aware dispatch: enqueue cross-slice transfers as
+                # soon as the producing wave is in flight — async dispatch
+                # lets them ride under wave wi+1's compute
+                for tr in self.schedule.transfers:
+                    if tr.ready_wave == wi:
+                        d = tr.dst_slice % ndev
+                        if (tr.array, d) not in placed \
+                                and tr.array in env:
+                            placed[(tr.array, d)] = jax.device_put(
+                                env[tr.array], devices[d])
         outs = {a: env[a] for a in self.graph.final_outputs()}
         if multi:
             outs = {a: _place(v, devices[0]) for a, v in outs.items()}
@@ -84,6 +195,12 @@ def _place(x: jax.Array, dev) -> jax.Array:
 
 
 def plan_executor(graph: TaskGraph, plan: ExecutionPlan,
-                  impl: str | None = None) -> Callable[..., dict]:
-    """Lower ``plan`` for ``graph`` into a plan-faithful executable."""
-    return PlanExecutable(graph, plan, impl=impl)
+                  impl: str | None = None,
+                  mode: str = "program") -> PlanExecutable:
+    """Lower ``plan`` for ``graph`` into a plan-faithful executable.
+
+    ``mode="program"`` (default) compiles the whole DAG into one program per
+    impl; ``mode="per_task"`` keeps the host-driven per-task dispatch as a
+    debug/validation path.
+    """
+    return PlanExecutable(graph, plan, impl=impl, mode=mode)

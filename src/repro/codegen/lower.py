@@ -13,8 +13,10 @@ This is the paper's §5 code generation, per fused task:
   pipelining semantics from the placement's buffer counts;
 * statements outside the affine-contraction subset fall back to the
   statement-level einsum evaluator (identical semantics, no plan tiling);
-* the whole task body — all units in order — is wrapped in a single
-  ``jax.jit`` so XLA sees one fused computation per task.
+* the whole task body — all units in order — is exposed as one raw
+  traceable callable; the whole-plan engine inlines every task body into a
+  single program-wide ``jax.jit`` (``repro.codegen.program``), while the
+  per-task debug executor jits each body on its own.
 
 Tile sizes for loops the plan left unspecified are clamped to the loop's
 (padded) extent instead of a blanket 128 so small graphs are not over-padded.
@@ -48,7 +50,14 @@ class LoweredUnit:
 
 @dataclasses.dataclass
 class TaskLowering:
-    """A fused task lowered against one plan config + kernel impl."""
+    """A fused task lowered against one plan config + kernel impl.
+
+    ``body`` is the raw traceable callable — the whole-plan engine
+    (:mod:`repro.codegen.program`) inlines it into one program-wide
+    ``jax.jit`` so XLA sees every task kernel at once.  ``fn`` wraps the
+    same body in a per-task ``jax.jit`` for the debug/validation executor;
+    it is built lazily so the fused path never pays for it.
+    """
 
     tid: int
     name: str
@@ -56,7 +65,16 @@ class TaskLowering:
     in_arrays: tuple[str, ...]          # env arrays the task consumes
     out_array: str
     slice_id: int
-    fn: Callable[..., jax.Array]        # jitted: (*in_arrays) -> out array
+    body: Callable[..., jax.Array]      # raw: (*in_arrays) -> out array
+    _fn: Callable[..., jax.Array] | None = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def fn(self) -> Callable[..., jax.Array]:
+        """Per-task jitted entry point (debug/per-task executor path)."""
+        if self._fn is None:
+            self._fn = jax.jit(self.body)
+        return self._fn
 
     @property
     def kind(self) -> str:
@@ -293,5 +311,5 @@ def lower_task(fg: FusedGraph, task: FusedTask, cfg: TaskConfig,
         in_arrays=tuple(in_arrays),
         out_array=out_array,
         slice_id=cfg.slice_id,
-        fn=jax.jit(body),
+        body=body,
     )

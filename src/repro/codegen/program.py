@@ -1,0 +1,188 @@
+"""Whole-plan compiled programs: the entire fused DAG in ONE ``jax.jit``.
+
+PR 1's executor walked the DAG in a Python loop — one ``jax.jit`` call per
+task, blocking placement between slices — so independent tasks serialized on
+the host dispatch path and every inter-task edge round-tripped through HBM.
+Here the *whole* dataflow program is lowered into a single jitted callable:
+
+* task bodies are inlined wave by wave (:mod:`repro.codegen.schedule`), so
+  XLA sees every kernel at once, schedules same-wave tasks concurrently and
+  elides host round-trips between producers and consumers;
+* with several devices, each task's operands are committed to its slice's
+  device with ``jax.device_put`` *inside* the traced program, and cross-slice
+  edges are issued at the producer's wave (not the consumer's) so the
+  transfer overlaps the next wave's compute;
+* intermediate buffers are internal to the one XLA program — liveness-based
+  reuse is the compiler's job here, while the per-task debug path donates
+  dying buffers explicitly (see ``executor.py``).
+
+Programs are cached process-wide, keyed by (graph fingerprint, plan
+fingerprint, kernel impl); the input shapes/dtypes dimension of the key is
+carried by ``jax.jit``'s own aval cache underneath, so a repeated call with
+identical shapes re-traces nothing — that is what makes the serving path
+(`repro.serve.PlanEngine`) zero-overhead after the first request.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+from ..core.fusion import FusedGraph, fuse
+from ..core.plan import ExecutionPlan
+from ..core.taskgraph import TaskGraph
+from .lower import TaskLowering, lower_task
+from .schedule import WaveSchedule, wave_schedule
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints (cache keys)
+# ---------------------------------------------------------------------------
+def graph_fingerprint(graph: TaskGraph) -> str:
+    """Stable content hash of a task graph (structure, shapes, semantics)."""
+    items = (
+        graph.name,
+        tuple(sorted((a.name, a.shape, a.dtype_bytes, a.offchip)
+                     for a in graph.arrays.values())),
+        tuple(s.content_key() for s in graph.statements),
+    )
+    return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+def plan_fingerprint(plan: ExecutionPlan) -> str:
+    """Stable content hash of the plan decisions codegen consumes."""
+    items = (plan.graph_name,
+             tuple(sorted((tid, repr(cfg.to_jsonable()))
+                          for tid, cfg in plan.configs.items())))
+    return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# The compiled program
+# ---------------------------------------------------------------------------
+class PlanProgram:
+    """One plan, one impl, ONE compiled program over the whole DAG."""
+
+    def __init__(self, graph: TaskGraph, plan: ExecutionPlan, impl: str,
+                 fg: FusedGraph | None = None,
+                 schedule: WaveSchedule | None = None):
+        self.graph = graph
+        self.plan = plan
+        self.impl = impl
+        self.fg = fg if fg is not None else fuse(graph)
+        self.schedule = schedule if schedule is not None \
+            else wave_schedule(self.fg, plan)
+        self.lowered: dict[int, TaskLowering] = {
+            t.tid: lower_task(self.fg, t, plan.configs[t.tid], impl)
+            for t in self.fg.tasks
+        }
+        self.in_names = tuple(graph.external_inputs())
+        self.out_names = tuple(graph.final_outputs())
+        # Task outputs feeding >= 2 consumer tasks are pinned behind an
+        # optimization barrier: XLA CPU otherwise *clones* the producer
+        # computation into every consumer fusion (observed on gemver — Ah
+        # recomputed per consumer), turning the fusion win into a loss.
+        consumers: dict[str, set[int]] = {}
+        for (_, v, a) in self.fg.edges:
+            consumers.setdefault(a, set()).add(v)
+        self._materialize = frozenset(
+            a for a, vs in consumers.items() if len(vs) >= 2)
+        self._devices = tuple(jax.devices())
+        self._multi = len(self._devices) > 1 and self.schedule.multi_slice
+        self._traces = 0
+        self._jit = jax.jit(self._body)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """How many times the program body has been (re-)traced."""
+        return self._traces
+
+    def _dev(self, slice_id: int) -> int:
+        return slice_id % len(self._devices)
+
+    # -- traced body ------------------------------------------------------
+    def _body(self, *flat: jax.Array):
+        self._traces += 1
+        env: dict[str, jax.Array] = dict(zip(self.in_names, flat))
+        placed: dict[tuple[str, int], jax.Array] = {}
+
+        def on_device(array: str, d: int) -> jax.Array:
+            key = (array, d)
+            if key not in placed:
+                placed[key] = jax.device_put(env[array], self._devices[d])
+            return placed[key]
+
+        for wi, wave in enumerate(self.schedule.waves):
+            for tid in wave:
+                lw = self.lowered[tid]
+                if self._multi:
+                    d = self._dev(self.schedule.slice_of[tid])
+                    args = [on_device(a, d) for a in lw.in_arrays]
+                else:
+                    args = [env[a] for a in lw.in_arrays]
+                out = lw.body(*args)
+                if lw.out_array in self._materialize:
+                    out = jax.lax.optimization_barrier(out)
+                if self._multi:
+                    # the array has a new version: stale placements die
+                    for key in [k for k in placed if k[0] == lw.out_array]:
+                        del placed[key]
+                env[lw.out_array] = out
+            if self._multi:
+                # Overlap-aware dispatch: cross-slice edges are issued the
+                # moment their producing wave is emitted, so the transfer
+                # rides under wave wi+1's compute instead of stalling the
+                # consumer at use time.
+                for tr in self.schedule.transfers:
+                    if tr.ready_wave == wi:
+                        on_device(tr.array, self._dev(tr.dst_slice))
+        outs = [env[a] for a in self.out_names]
+        if self._multi:
+            outs = [jax.device_put(v, self._devices[0]) for v in outs]
+        return tuple(outs)
+
+    # -- execution --------------------------------------------------------
+    def __call__(self, inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        outs = self._jit(*[inputs[a] for a in self.in_names])
+        return dict(zip(self.out_names, outs))
+
+
+# ---------------------------------------------------------------------------
+# Process-wide program cache
+# ---------------------------------------------------------------------------
+_CACHE: dict[tuple[str, str, str], PlanProgram] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def compiled_program(graph: TaskGraph, plan: ExecutionPlan, impl: str,
+                     fg: FusedGraph | None = None,
+                     schedule: WaveSchedule | None = None) -> PlanProgram:
+    """Cache lookup/build: same (graph, plan, impl) -> same PlanProgram.
+
+    A hit re-uses the program's lowerings AND its ``jax.jit`` trace cache, so
+    a repeated call with identical input shapes/dtypes re-lowers and
+    re-traces nothing.
+    """
+    global _HITS, _MISSES
+    key = (graph_fingerprint(graph), plan_fingerprint(plan), impl)
+    prog = _CACHE.get(key)
+    if prog is not None:
+        _HITS += 1
+        return prog
+    _MISSES += 1
+    prog = PlanProgram(graph, plan, impl, fg=fg, schedule=schedule)
+    _CACHE[key] = prog
+    return prog
+
+
+def cache_stats() -> dict:
+    return {"hits": _HITS, "misses": _MISSES, "size": len(_CACHE)}
+
+
+def clear_program_cache() -> None:
+    global _HITS, _MISSES
+    _CACHE.clear()
+    _HITS = 0
+    _MISSES = 0

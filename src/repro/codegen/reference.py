@@ -76,15 +76,19 @@ def allclose(out, ref, rtol: float = 2e-4) -> bool:
     """
     o = np.asarray(out, dtype=np.float64)
     r = np.asarray(ref, dtype=np.float64)
-    atol = rtol * max(1.0, float(np.abs(r).max()) if r.size else 1.0)
-    return np.allclose(o, r, rtol=rtol, atol=atol)
+    return np.allclose(o, r, rtol=rtol, atol=_scale_atol(r, rtol))
+
+
+def _scale_atol(r: np.ndarray, rtol: float) -> float:
+    """The oracle tolerance contract: absolute noise proportional to the
+    output scale (shared by allclose and assert_close — one definition)."""
+    return rtol * max(1.0, float(np.abs(r).max()) if r.size else 1.0)
 
 
 def assert_close(out, ref, rtol: float = 2e-4, name: str = "") -> None:
     o = np.asarray(out, dtype=np.float64)
     r = np.asarray(ref, dtype=np.float64)
-    atol = rtol * max(1.0, float(np.abs(r).max()) if r.size else 1.0)
-    np.testing.assert_allclose(o, r, rtol=rtol, atol=atol,
+    np.testing.assert_allclose(o, r, rtol=rtol, atol=_scale_atol(r, rtol),
                                err_msg=f"{name}: mismatch vs oracle")
 
 

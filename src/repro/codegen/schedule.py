@@ -1,0 +1,147 @@
+"""Wave schedule: topological levels x slice assignment for a plan.
+
+The paper's generated host code launches independent tasks concurrently and
+overlaps inter-task communication with compute (§5, "concurrent task
+execution" + "computation-communication overlap").  This module derives the
+static schedule that makes both explicit for a (fused graph, execution plan)
+pair:
+
+* **waves** — topological levels of the dataflow DAG.  Every task in wave
+  ``w`` has all producers in waves ``< w``, so same-wave tasks are mutually
+  independent; tasks of one wave assigned to *different* slices are the
+  concurrency the plan paid for.
+* **transfers** — cross-slice dataflow edges, annotated with the wave after
+  which the producer's output is ready and the wave at which the consumer
+  needs it.  Issuing the transfer at ``ready_wave`` (production time) instead
+  of ``need_wave`` (consumption time) is what lets it ride under the next
+  wave's compute — the overlap-aware dispatch the executors implement.
+* **liveness** — the last consumer of every intermediate array.  A buffer
+  that dies at its last consumer can be *donated* to that consumer's kernel
+  (the accumulate-in-place / buffer-reuse payoff); external inputs and final
+  outputs are never donatable (the caller owns them).
+
+Everything here is derived from static graph structure + the plan's
+``slice_id`` assignment — no JAX, no devices — so it is unit-testable and
+shared by both the whole-program path and the per-task debug path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.fusion import FusedGraph
+from ..core.plan import ExecutionPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One cross-slice dataflow edge, scheduled for overlapped dispatch."""
+
+    array: str
+    src: int            # producer tid
+    dst: int            # consumer tid
+    src_slice: int
+    dst_slice: int
+    ready_wave: int     # producer's wave — issue the transfer right after it
+    need_wave: int      # consumer's wave — must have landed by then
+
+    @property
+    def overlap_waves(self) -> int:
+        """Waves of compute the transfer can hide under (>= 1 by topology)."""
+        return self.need_wave - self.ready_wave
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSchedule:
+    """Static execution schedule for one (fused graph, plan) pair."""
+
+    waves: tuple[tuple[int, ...], ...]      # wave -> tids (sorted)
+    wave_of: dict[int, int]                 # tid -> wave index
+    slice_of: dict[int, int]                # tid -> plan slice id
+    transfers: tuple[Transfer, ...]         # cross-slice edges, by ready_wave
+    last_reader: dict[str, int]             # array -> tid of last consumer
+    dead_after: dict[int, tuple[str, ...]]  # tid -> arrays dying at this task
+
+    @property
+    def order(self) -> list[int]:
+        """Wave-major execution order (a valid topological order)."""
+        return [tid for wave in self.waves for tid in wave]
+
+    @property
+    def multi_slice(self) -> bool:
+        """Whether the plan actually spans slices — the shared gate for
+        device placement in both executor modes (single-slice plans must
+        not pay per-argument device_put even on multi-device hosts)."""
+        return len(set(self.slice_of.values())) > 1
+
+    @property
+    def max_width(self) -> int:
+        return max(len(w) for w in self.waves) if self.waves else 0
+
+    def concurrent_groups(self, wave: int) -> dict[int, tuple[int, ...]]:
+        """Tasks of ``wave`` keyed by slice — distinct keys run concurrently."""
+        out: dict[int, list[int]] = {}
+        for tid in self.waves[wave]:
+            out.setdefault(self.slice_of[tid], []).append(tid)
+        return {s: tuple(ts) for s, ts in sorted(out.items())}
+
+    def donatable(self, tid: int, in_arrays: tuple[str, ...],
+                  protected: frozenset[str]) -> tuple[int, ...]:
+        """Argument positions of ``in_arrays`` whose buffers die at ``tid``.
+
+        ``protected`` holds arrays the caller still owns (external inputs,
+        final outputs) — never donated.
+        """
+        dead = set(self.dead_after.get(tid, ()))
+        return tuple(i for i, a in enumerate(in_arrays)
+                     if a in dead and a not in protected)
+
+
+def wave_schedule(fg: FusedGraph, plan: ExecutionPlan) -> WaveSchedule:
+    """Derive the wave schedule of ``plan`` over the fused DAG ``fg``."""
+    preds = {t.tid: [u for (u, _) in fg.preds(t.tid)] for t in fg.tasks}
+    wave_of: dict[int, int] = {}
+    for tid in fg.topo_order():
+        wave_of[tid] = 1 + max((wave_of[u] for u in preds[tid]), default=-1)
+    n_waves = 1 + max(wave_of.values()) if wave_of else 0
+    waves = tuple(tuple(sorted(t for t, w in wave_of.items() if w == wi))
+                  for wi in range(n_waves))
+
+    slice_of = {t.tid: plan.configs[t.tid].slice_id for t in fg.tasks}
+
+    transfers = tuple(sorted(
+        (Transfer(array=a, src=u, dst=v,
+                  src_slice=slice_of[u], dst_slice=slice_of[v],
+                  ready_wave=wave_of[u], need_wave=wave_of[v])
+         for (u, v, a) in fg.edges if slice_of[u] != slice_of[v]),
+        key=lambda tr: (tr.ready_wave, tr.array, tr.dst)))
+
+    # Liveness over the wave-major order: the last task reading an array is
+    # where its buffer dies (external inputs / final outputs are excluded at
+    # donation time, not here — the schedule records pure graph liveness).
+    order = [tid for wave in waves for tid in wave]
+    pos = {tid: i for i, tid in enumerate(order)}
+    last_reader: dict[str, int] = {}
+    for t in fg.tasks:
+        consumed = set(t.read_arrays())
+        # incoming edges also cover the prior version of the task's own
+        # output array (a cross-task accumulation seed), which
+        # read_arrays() deliberately excludes
+        for (_, v, a) in fg.edges:
+            if v == t.tid:
+                consumed.add(a)
+        for a in consumed:
+            cur = last_reader.get(a)
+            if cur is None or pos[t.tid] > pos[cur]:
+                last_reader[a] = t.tid
+    dead_after: dict[int, list[str]] = {}
+    for a, tid in last_reader.items():
+        dead_after.setdefault(tid, []).append(a)
+
+    return WaveSchedule(
+        waves=waves,
+        wave_of=wave_of,
+        slice_of=slice_of,
+        transfers=transfers,
+        last_reader=last_reader,
+        dead_after={t: tuple(sorted(v)) for t, v in dead_after.items()},
+    )

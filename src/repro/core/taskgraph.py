@@ -77,6 +77,16 @@ class Statement:
                         f"{self.name}: access {acc} uses iterator {it!r} "
                         f"not in loops {self.loops}")
 
+    def content_key(self) -> tuple:
+        """Hashable summary of everything semantically relevant — the shared
+        basis for solver memo keys and codegen graph fingerprints (one
+        definition so the two caches cannot drift)."""
+        return (self.name, tuple(self.loops),
+                tuple(sorted(self.trip_counts.items())),
+                tuple((a.array, tuple(a.iters)) for a in self.reads),
+                tuple((a.array, tuple(a.iters)) for a in self.writes),
+                self.flops_per_iter, self.density, self.op)
+
     @property
     def reduction_loops(self) -> tuple[str, ...]:
         """Loops not appearing in any write access — accumulation dims."""

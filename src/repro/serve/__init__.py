@@ -1,3 +1,3 @@
-from .engine import Engine, ServeConfig, throughput_stats
+from .engine import Engine, PlanEngine, ServeConfig, throughput_stats
 
-__all__ = ["Engine", "ServeConfig", "throughput_stats"]
+__all__ = ["Engine", "PlanEngine", "ServeConfig", "throughput_stats"]

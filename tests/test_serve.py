@@ -85,3 +85,39 @@ def test_temperature_sampling_runs():
 def test_throughput_stats():
     s = throughput_stats(1000, 2.0)
     assert s["tokens_per_s"] == 500.0
+
+
+# ---------------------------------------------------------------------------
+# Plan serving: repeated requests hit the whole-plan compiled-program cache
+# ---------------------------------------------------------------------------
+def test_plan_engine_serves_from_program_cache():
+    from repro.codegen import (allclose, cache_stats, clear_program_cache,
+                               random_inputs, reference_executor)
+    from repro.core import SolverOptions, THREE_SLICE, polybench, solve
+    from repro.serve import PlanEngine
+
+    g = polybench.build("2-madd")
+    plan = solve(g, THREE_SLICE, SolverOptions(time_budget_s=2.0))
+    ins = random_inputs(g, seed=0)
+    ref = reference_executor(g)(ins)
+
+    clear_program_cache()
+    eng = PlanEngine(impl="xla")
+    eng.register("2-madd", g, plan)
+    cold = eng.warmup("2-madd", ins)
+    assert cold >= 0.0
+    assert cache_stats()["misses"] == 1
+
+    out = eng.submit("2-madd", ins)             # steady-state request
+    assert all(allclose(out[k], ref[k]) for k in ref)
+
+    # a brand-new engine (new replica) still hits the same compiled program
+    eng2 = PlanEngine(impl="xla")
+    eng2.register("m", g, plan)
+    out2 = eng2.submit("m", ins)
+    assert all(allclose(out2[k], ref[k]) for k in ref)
+    stats = eng2.stats()
+    # exactly one compile ever; the replica's first submit is a cache hit
+    # (later submits resolve engine-locally, no fingerprinting per request)
+    assert stats["misses"] == 1 and stats["hits"] >= 1
+    assert eng.stats()["requests"] == 2
