@@ -1,16 +1,20 @@
 """BENCH_codegen.json emitter: steady-state wall-clock of the plan engines.
 
 Measures repeated execution of solved plans through BOTH executor modes —
-the whole-plan compiled program (one ``jax.jit`` over the full DAG) and the
-per-task host-dispatch debug path — and records the dispatch-overhead
-speedup per kernel.  This is the perf-trajectory datapoint the model
-predictions in Table 6 never provided: actual wall-clock on this host.
+the whole-plan compiled program (segmented ``jax.jit`` programs resolved
+through the serving cache/pool) and the per-task host-dispatch debug path —
+and records the dispatch-overhead speedup per kernel.  This is the
+perf-trajectory datapoint the model predictions in Table 6 never provided:
+actual wall-clock on this host, and the series the CI bench gate
+(`scripts/bench_compare.py`) regresses against.
 
 Methodology: each sample times a *batch* of back-to-back calls (steady-state
 serving behaviour — async dispatch pipelines inside a batch, one block at
-the end) and the metric is the best per-call time across samples, which
-filters scheduler noise on contended CI hosts far better than single-call
-timings.
+the end) and the metric is the best per-call time across samples.  The two
+modes' samples are taken ALTERNATELY (per_task batch, program batch,
+per_task batch, ...), so slow drift on a contended host — CPU frequency,
+noisy neighbours — hits both modes equally and the speedup ratio stays
+meaningful even when absolute times wander.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_codegen \
@@ -20,8 +24,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
-from .common import build_graph, solve_kernel, steady_state_s
+from .common import build_graph, solve_kernel
 
 # Multi-task graphs where whole-plan compilation pays: matmul chains
 # (concurrent waves), add trees (cross-task elementwise fusion), and
@@ -29,9 +34,28 @@ from .common import build_graph, solve_kernel, steady_state_s
 DEFAULT_KERNELS = ("3mm", "2mm", "gemver", "3-madd", "gesummv")
 
 
+def paired_steady_state_s(exes, ins, *, batch: int = 10,
+                          samples: int = 7) -> list[float]:
+    """Best per-call seconds for each executable in ``exes``, sampled
+    alternately (exe0 batch, exe1 batch, exe0 batch, ...) so host drift
+    cancels out of the ratio between them."""
+    import jax
+    for exe in exes:                            # compile + warm up
+        jax.block_until_ready(list(exe(ins).values()))
+    best = [float("inf")] * len(exes)
+    for _ in range(samples):
+        for i, exe in enumerate(exes):
+            t0 = time.perf_counter()
+            for _ in range(batch):
+                out = exe(ins)
+            jax.block_until_ready(list(out.values()))
+            best[i] = min(best[i], (time.perf_counter() - t0) / batch)
+    return best
+
+
 def bench(kernels=DEFAULT_KERNELS, *, scale: int = 1, budget: float = 6.0,
           impl: str = "xla", batch: int = 10, samples: int = 7,
-          plans: dict | None = None) -> dict:
+          pool_size: int | None = None, plans: dict | None = None) -> dict:
     """Benchmark program-mode vs per-task-mode execution of solved plans."""
     import jax
 
@@ -47,15 +71,17 @@ def bench(kernels=DEFAULT_KERNELS, *, scale: int = 1, budget: float = 6.0,
         try:
             ins = random_inputs(g, seed=0)
             per = plan_executor(g, plan, impl=impl, mode="per_task")
-            prog = plan_executor(g, plan, impl=impl, mode="program")
-            per_s = steady_state_s(per, ins, batch=batch, samples=samples)
-            prog_s = steady_state_s(prog, ins, batch=batch, samples=samples)
+            prog = plan_executor(g, plan, impl=impl, mode="program",
+                                 pool_size=pool_size)
+            per_s, prog_s = paired_steady_state_s(
+                (per, prog), ins, batch=batch, samples=samples)
             ref = reference_executor(g)(ins)
             out = prog(ins)
             ok = all(allclose(out[k], ref[k]) for k in ref)
         except NotImplementedError:
             continue                    # triangular-density: model-only
         sched = prog.schedule
+        program = prog.program(impl)
         speedup = per_s / prog_s if prog_s else 0.0
         speedups.append(speedup)
         entries[name] = {
@@ -63,6 +89,8 @@ def bench(kernels=DEFAULT_KERNELS, *, scale: int = 1, budget: float = 6.0,
             "n_waves": len(sched.waves),
             "max_wave_width": sched.max_width,
             "cross_slice_transfers": len(sched.transfers),
+            "n_segments": program.n_segments,
+            "pool_size": program.pool_size,
             "per_task_s": per_s,
             "program_s": prog_s,
             "speedup": round(speedup, 3),
@@ -104,15 +132,19 @@ def main() -> None:
     ap.add_argument("--impl", default="xla")
     ap.add_argument("--batch", type=int, default=10)
     ap.add_argument("--samples", type=int, default=7)
+    ap.add_argument("--pool", type=int, default=None,
+                    help="executable-pool size for program mode "
+                         "(default: REPRO_PROGRAM_POOL_SIZE or 1)")
     ap.add_argument("--out", default="BENCH_codegen.json")
     args = ap.parse_args()
     result = emit(args.out, kernels=tuple(args.kernels), scale=args.scale,
                   budget=args.budget, impl=args.impl, batch=args.batch,
-                  samples=args.samples)
+                  samples=args.samples, pool_size=args.pool)
     for name, e in result["kernels"].items():
         print(f"{name:10s} per_task={e['per_task_s'] * 1e6:9.1f}us "
               f"program={e['program_s'] * 1e6:9.1f}us "
-              f"speedup={e['speedup']:5.2f}x validated={e['validated']}")
+              f"speedup={e['speedup']:5.2f}x segs={e['n_segments']} "
+              f"validated={e['validated']}")
     print(f"gmean_speedup={result['gmean_speedup']:.2f}x -> {args.out}")
 
 

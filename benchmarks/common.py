@@ -7,15 +7,17 @@ analogue of the paper's RTL-simulated GF/s.
 """
 from __future__ import annotations
 
-import contextlib
-import functools
-import io
-import sys
 import time
 
 from repro.core import (ONE_SLICE, THREE_SLICE, SolverOptions, polybench,
                         solve)
-from repro.core.resources import ONE_SLICE_60, THREE_SLICE_60
+# Measurement lives in the core solver now, so solve-time validation and
+# serve-time execution resolve through one program cache + executable pool;
+# re-exported here because every benchmark table imports them from common.
+from repro.core.solver import build_graph, measure_plan, steady_state_s
+
+__all__ = ["MODES", "Table", "build_graph", "fmt_row", "hw_for",
+           "measure_plan", "solve_kernel", "steady_state_s"]
 
 MODES = ("prometheus", "sisyphus", "streamhls", "autodse")
 
@@ -26,13 +28,6 @@ def hw_for(mode: str):
     return THREE_SLICE if mode == "prometheus" else ONE_SLICE
 
 
-@functools.lru_cache(maxsize=None)
-def build_graph(name: str, scale: int):
-    """One build per (kernel, scale) — solving and measuring the same kernel
-    share the graph instead of rebuilding it.  Treat the result read-only."""
-    return polybench.build(name, scale=scale)
-
-
 def solve_kernel(name: str, mode: str, *, scale: int = polybench.TPU_SCALE,
                  budget: float = 12.0, hw=None, seed: int = 0):
     g = build_graph(name, scale)
@@ -41,55 +36,6 @@ def solve_kernel(name: str, mode: str, *, scale: int = polybench.TPU_SCALE,
     plan = solve(g, hw if hw is not None else hw_for(mode), opts)
     plan.solver_seconds = time.monotonic() - t0
     return plan
-
-
-def steady_state_s(exe, ins, *, batch: int = 10, samples: int = 7) -> float:
-    """Best per-call seconds over ``samples`` timed batches of ``batch``
-    back-to-back calls (one block at the batch end).  The ONE timing
-    methodology every benchmark uses: batching amortizes scheduler noise on
-    contended hosts far better than single-call timings, and best-of
-    filters the remaining interference."""
-    out = exe(ins)                              # compile + warm up
-    for v in out.values():
-        v.block_until_ready()                   # drain async dispatch
-    best = float("inf")
-    for _ in range(samples):
-        t0 = time.perf_counter()
-        for _ in range(batch):
-            out = exe(ins)
-        for v in out.values():
-            v.block_until_ready()
-        best = min(best, (time.perf_counter() - t0) / batch)
-    return best
-
-
-def measure_plan(name: str, plan, *, graph=None, scale: int = 1,
-                 impl: str | None = None, repeats: int = 3,
-                 validate: bool = True, mode: str = "program"):
-    """Execute a plan through the codegen subsystem and time it.
-
-    Returns ``(seconds, gflops, validated)`` — the measured counterpart of
-    the model-predicted GF/s, timed with :func:`steady_state_s` (``repeats``
-    = samples).  ``mode="program"`` runs the whole-plan compiled program
-    (one jit over the full DAG); ``mode="per_task"`` runs the host-driven
-    per-task dispatch for comparison.  ``graph`` lets callers pass the
-    already-built graph (``build_graph`` otherwise caches the rebuild).
-    Triangular-density kernels are not executable; callers should catch
-    ``NotImplementedError``.
-    """
-    from repro.codegen import (allclose, plan_executor, random_inputs,
-                               reference_executor)
-    g = graph if graph is not None else build_graph(name, scale)
-    exe = plan_executor(g, plan, impl=impl, mode=mode)
-    ins = random_inputs(g, seed=0)
-    best = steady_state_s(exe, ins, samples=repeats)
-    ok = True
-    if validate:
-        ref = reference_executor(g)(ins)
-        out = exe(ins)
-        ok = all(allclose(out[k], ref[k]) for k in ref)
-    gflops = g.total_flops() / best / 1e9 if best else 0.0
-    return best, gflops, ok
 
 
 def fmt_row(cells) -> str:

@@ -6,7 +6,6 @@ as a structural audit of the PolyBench builders against the paper.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import polybench
 from repro.core.fusion import fuse

@@ -1,0 +1,158 @@
+"""CI benchmark-regression gate: compare a fresh BENCH_codegen.json
+against the committed baseline and fail on regression.
+
+Checks, in order:
+
+* every kernel present in BOTH files must have ``validated: true`` in the
+  fresh run (a miscompiled kernel is an instant failure, whatever its
+  speed);
+* no common kernel's ``speedup`` (program mode over per-task mode, a
+  same-host same-run ratio, robust to absolute machine speed) may regress
+  more than ``--max-kernel-regress`` (default 10%) below the baseline;
+* the geometric-mean speedup over common kernels may not regress more than
+  ``--max-gmean-regress`` (default 15%);
+* optional absolute floors (``--floor gemver=0.9``) pin individual kernels
+  to a minimum speedup independent of the baseline — the gemver serving
+  regression stays fixed because CI refuses to merge anything below 0.9x.
+
+The gmean is recomputed over the common-kernel intersection so adding or
+removing a benchmark kernel does not masquerade as a perf change.
+
+Usage:
+    python scripts/bench_compare.py BASELINE.json FRESH.json \
+        --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
+        --floor gemver=0.9
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "kernels" not in data:
+        raise SystemExit(f"{path}: not a BENCH_codegen.json (no 'kernels')")
+    return data
+
+
+def gmean(values: list[float]) -> float:
+    vals = [v for v in values if v > 0]
+    if not vals:
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def parse_floor(spec: str) -> tuple[str, float]:
+    name, _, value = spec.partition("=")
+    if not value:
+        raise argparse.ArgumentTypeError(
+            f"floor {spec!r} is not of the form kernel=value"
+        )
+    return name, float(value)
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    *,
+    max_kernel_regress: float = 0.10,
+    max_gmean_regress: float = 0.15,
+    floors: dict[str, float] | None = None,
+) -> list[str]:
+    """Return the list of failure messages (empty = gate passes)."""
+    failures: list[str] = []
+    base_kernels = baseline["kernels"]
+    fresh_kernels = fresh["kernels"]
+    common = sorted(set(base_kernels) & set(fresh_kernels))
+    if not common:
+        return ["no common kernels between baseline and fresh run"]
+    missing = sorted(set(base_kernels) - set(fresh_kernels))
+    if missing:
+        failures.append(f"kernels missing from fresh run: {missing}")
+
+    for name in common:
+        entry = fresh_kernels[name]
+        if not entry.get("validated", False):
+            failures.append(f"{name}: validated=false in fresh run")
+
+    for name in common:
+        base_s = float(base_kernels[name]["speedup"])
+        new_s = float(fresh_kernels[name]["speedup"])
+        if base_s > 0 and new_s < base_s * (1.0 - max_kernel_regress):
+            failures.append(
+                f"{name}: speedup regressed {base_s:.3f}x -> {new_s:.3f}x "
+                f"(> {max_kernel_regress:.0%} below baseline)"
+            )
+
+    base_g = gmean([float(base_kernels[n]["speedup"]) for n in common])
+    new_g = gmean([float(fresh_kernels[n]["speedup"]) for n in common])
+    if base_g > 0 and new_g < base_g * (1.0 - max_gmean_regress):
+        failures.append(
+            f"gmean speedup regressed {base_g:.3f}x -> {new_g:.3f}x "
+            f"(> {max_gmean_regress:.0%} below baseline)"
+        )
+
+    for name, floor in (floors or {}).items():
+        entry = fresh_kernels.get(name)
+        if entry is None:
+            failures.append(f"{name}: floor set but kernel not benchmarked")
+        elif float(entry["speedup"]) < floor:
+            failures.append(
+                f"{name}: speedup {float(entry['speedup']):.3f}x below "
+                f"floor {floor:.3f}x"
+            )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_codegen.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_codegen.json")
+    ap.add_argument("--max-kernel-regress", type=float, default=0.10)
+    ap.add_argument("--max-gmean-regress", type=float, default=0.15)
+    ap.add_argument(
+        "--floor",
+        type=parse_floor,
+        action="append",
+        default=[],
+        metavar="KERNEL=SPEEDUP",
+        help="absolute per-kernel speedup floor (repeatable)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    common = sorted(set(baseline["kernels"]) & set(fresh["kernels"]))
+    for name in common:
+        base_s = float(baseline["kernels"][name]["speedup"])
+        new_s = float(fresh["kernels"][name]["speedup"])
+        delta = (new_s / base_s - 1.0) * 100 if base_s else float("nan")
+        print(
+            f"{name:10s} baseline={base_s:6.3f}x fresh={new_s:6.3f}x "
+            f"({delta:+.1f}%) validated="
+            f"{fresh['kernels'][name].get('validated')}"
+        )
+
+    failures = compare(
+        baseline,
+        fresh,
+        max_kernel_regress=args.max_kernel_regress,
+        max_gmean_regress=args.max_gmean_regress,
+        floors=dict(args.floor),
+    )
+    if failures:
+        print("\nBENCH GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

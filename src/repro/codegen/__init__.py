@@ -24,8 +24,11 @@ the same lowering targets JAX/Pallas:
 """
 from .executor import PlanExecutable, plan_executor
 from .lower import LoweredUnit, TaskLowering, lower_task
-from .program import (PlanProgram, cache_stats, clear_program_cache,
-                      compiled_program, graph_fingerprint, plan_fingerprint)
+from .program import (PlanProgram, ProgramCache, cache_stats,
+                      clear_program_cache, compiled_program,
+                      enable_persistent_cache, graph_fingerprint,
+                      persistent_cache_dir, plan_fingerprint, program_cache,
+                      program_key, set_program_cache_size)
 from .reference import (allclose, assert_close, eval_statement,
                         random_inputs, reference_executor)
 from .schedule import Transfer, WaveSchedule, wave_schedule
@@ -33,8 +36,10 @@ from .schedule import Transfer, WaveSchedule, wave_schedule
 __all__ = [
     "PlanExecutable", "plan_executor",
     "LoweredUnit", "TaskLowering", "lower_task",
-    "PlanProgram", "compiled_program", "cache_stats",
+    "PlanProgram", "ProgramCache", "compiled_program", "cache_stats",
     "clear_program_cache", "graph_fingerprint", "plan_fingerprint",
+    "program_cache", "program_key", "set_program_cache_size",
+    "enable_persistent_cache", "persistent_cache_dir",
     "Transfer", "WaveSchedule", "wave_schedule",
     "allclose", "assert_close", "eval_statement",
     "random_inputs", "reference_executor",

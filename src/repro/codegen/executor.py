@@ -49,12 +49,14 @@ class PlanExecutable:
     """
 
     def __init__(self, graph: TaskGraph, plan: ExecutionPlan,
-                 impl: str | None = None, mode: str = "program"):
+                 impl: str | None = None, mode: str = "program",
+                 pool_size: int | None = None):
         if mode not in MODES:
             raise ValueError(f"bad mode {mode!r}; want one of {MODES}")
         self.graph = graph
         self.plan = plan
         self.mode = mode
+        self.pool_size = pool_size
         self.fg = fuse(graph)
         self.schedule: WaveSchedule = wave_schedule(self.fg, plan)
         self.order = self.schedule.order
@@ -81,7 +83,8 @@ class PlanExecutable:
         if impl not in self._programs:
             self._programs[impl] = compiled_program(
                 self.graph, self.plan, impl,
-                fg=self.fg, schedule=self.schedule)
+                fg=self.fg, schedule=self.schedule,
+                pool_size=self.pool_size)
         return self._programs[impl]
 
     def lowerings(self, impl: str | None = None) -> dict[int, TaskLowering]:
@@ -196,11 +199,15 @@ def _place(x: jax.Array, dev) -> jax.Array:
 
 def plan_executor(graph: TaskGraph, plan: ExecutionPlan,
                   impl: str | None = None,
-                  mode: str = "program") -> PlanExecutable:
+                  mode: str = "program",
+                  pool_size: int | None = None) -> PlanExecutable:
     """Lower ``plan`` for ``graph`` into a plan-faithful executable.
 
     ``mode="program"`` (default) compiles the whole DAG into one program per
     impl; ``mode="per_task"`` keeps the host-driven per-task dispatch as a
-    debug/validation path.
+    debug/validation path.  ``pool_size`` clones the program's segment
+    executables into a round-robin pool (default: the
+    ``REPRO_PROGRAM_POOL_SIZE`` env knob, 1).
     """
-    return PlanExecutable(graph, plan, impl=impl, mode=mode)
+    return PlanExecutable(graph, plan, impl=impl, mode=mode,
+                          pool_size=pool_size)

@@ -1,30 +1,47 @@
-"""Whole-plan compiled programs: the entire fused DAG in ONE ``jax.jit``.
+"""Whole-plan compiled programs: the fused DAG as few ``jax.jit`` segments.
 
 PR 1's executor walked the DAG in a Python loop — one ``jax.jit`` call per
-task, blocking placement between slices — so independent tasks serialized on
-the host dispatch path and every inter-task edge round-tripped through HBM.
-Here the *whole* dataflow program is lowered into a single jitted callable:
+task — so independent tasks serialized on the host dispatch path and every
+inter-task edge round-tripped through HBM.  PR 2 lowered the *whole*
+dataflow program into a single jitted callable.  This module is the serving
+generation of that engine, with three production mechanisms on top:
 
-* task bodies are inlined wave by wave (:mod:`repro.codegen.schedule`), so
-  XLA sees every kernel at once, schedules same-wave tasks concurrently and
-  elides host round-trips between producers and consumers;
-* with several devices, each task's operands are committed to its slice's
-  device with ``jax.device_put`` *inside* the traced program, and cross-slice
-  edges are issued at the producer's wave (not the consumer's) so the
-  transfer overlaps the next wave's compute;
-* intermediate buffers are internal to the one XLA program — liveness-based
-  reuse is the compiler's job here, while the per-task debug path donates
-  dying buffers explicitly (see ``executor.py``).
+* **materialization segments** — XLA CPU's fusion pass *clones* a cheap-to-
+  recompute producer into every consumer fusion, even through
+  ``optimization_barrier`` and even when the producer is a program output
+  (measured on gemver: the rank-2 update ran once per consumer dot, turning
+  the fusion win into a 0.55x loss).  The program is therefore split at
+  multi-consumer producer boundaries: each segment is its own executable, so
+  the producer's buffer is materialized exactly once and duplication is
+  structurally impossible.  Graphs without multi-consumer intermediates
+  (most of PolyBench) keep the original single-program lowering.
+* **executable pool** — each program optionally holds ``pool_size`` cloned
+  sets of its segment executables, served round-robin, so concurrent callers
+  (or cross-call pipelining on memory-bound graphs) never contend on one
+  executable instance.  ``REPRO_PROGRAM_POOL_SIZE`` sets the default.
+* **bounded LRU program cache** — programs are cached process-wide, keyed by
+  (graph fingerprint, plan fingerprint, impl), with per-entry hit/last-use/
+  size stats and LRU eviction at ``REPRO_PROGRAM_CACHE_SIZE`` entries, so a
+  replica serving many distinct plans has a bounded footprint.  A persistent
+  AOT compilation cache (``jax_compilation_cache_dir``, exposed as
+  :func:`enable_persistent_cache` / ``REPRO_COMPILATION_CACHE_DIR``) lets
+  replicas share lowered XLA artifacts across processes: a warm replica's
+  first compile of a known program deserializes instead of re-lowering.
 
-Programs are cached process-wide, keyed by (graph fingerprint, plan
-fingerprint, kernel impl); the input shapes/dtypes dimension of the key is
-carried by ``jax.jit``'s own aval cache underneath, so a repeated call with
-identical shapes re-traces nothing — that is what makes the serving path
+The input shapes/dtypes dimension of the cache key is carried by
+``jax.jit``'s own aval cache underneath, so a repeated call with identical
+shapes re-traces nothing — that is what makes the serving path
 (`repro.serve.PlanEngine`) zero-overhead after the first request.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import itertools
+import os
+import time
+from collections import OrderedDict
+from typing import Callable
 
 import jax
 
@@ -33,6 +50,18 @@ from ..core.plan import ExecutionPlan
 from ..core.taskgraph import TaskGraph
 from .lower import TaskLowering, lower_task
 from .schedule import WaveSchedule, wave_schedule
+
+#: Default LRU capacity of the process-wide program cache.
+DEFAULT_CACHE_SIZE = 64
+#: Default executable-pool size per cache entry (1 = no cloning).
+DEFAULT_POOL_SIZE = 1
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return max(1, int(os.environ.get(name, default)))
+    except ValueError:
+        return default
 
 
 # ---------------------------------------------------------------------------
@@ -57,15 +86,136 @@ def plan_fingerprint(plan: ExecutionPlan) -> str:
     return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
 
 
+def program_key(graph: TaskGraph, plan: ExecutionPlan,
+                impl: str) -> tuple[str, str, str]:
+    """The process-wide cache key of a (graph, plan, impl) triple."""
+    return (graph_fingerprint(graph), plan_fingerprint(plan), impl)
+
+
+# ---------------------------------------------------------------------------
+# Persistent AOT compilation cache (cross-process artifact sharing)
+# ---------------------------------------------------------------------------
+_persistent_dir: str | None = None
+
+
+def enable_persistent_cache(path: str) -> str:
+    """Point JAX's persistent compilation cache at ``path`` and open it up
+    to every program this engine compiles (no min-size / min-compile-time
+    cutoffs — plan programs are small but re-lowered by every replica).
+
+    Returns the directory so callers can log/inspect it.  Safe to call more
+    than once; the last directory wins process-wide.
+    """
+    global _persistent_dir
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    if _persistent_dir != path:
+        # jax latches the cache backend on first compile; a process that
+        # already compiled anything would otherwise silently never persist
+        try:
+            from jax._src import compilation_cache as _cc
+            _cc.reset_cache()
+        except (ImportError, AttributeError):
+            pass
+    _persistent_dir = path
+    return path
+
+
+def persistent_cache_dir() -> str | None:
+    """The active persistent-cache directory, if any."""
+    return _persistent_dir
+
+
+def _auto_enable_persistent_cache() -> None:
+    if _persistent_dir is None:
+        path = os.environ.get("REPRO_COMPILATION_CACHE_DIR")
+        if path:
+            enable_persistent_cache(path)
+
+
+# ---------------------------------------------------------------------------
+# Program segments
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of tasks compiled into one executable.
+
+    ``in_arrays`` are the env arrays the segment reads (external inputs or
+    earlier segments' outputs); ``out_arrays`` are what later segments or
+    the caller consume — materialized buffers at the executable boundary.
+    """
+
+    index: int
+    tids: tuple[int, ...]
+    in_arrays: tuple[str, ...]
+    out_arrays: tuple[str, ...]
+
+
+def _split_segments(schedule: WaveSchedule, lowered: dict[int, TaskLowering],
+                    materialize: frozenset[str], out_names: tuple[str, ...],
+                    ) -> list[Segment]:
+    """Split the wave-major task order at multi-consumer producers.
+
+    A task whose output feeds >= 2 consumer tasks closes its segment, so the
+    output crosses an executable boundary and XLA cannot clone the producer
+    into each consumer (see module docstring).  With no such producers the
+    whole plan stays one segment, i.e. one executable.
+    """
+    order = schedule.order
+    groups: list[list[int]] = []
+    cur: list[int] = []
+    for tid in order:
+        cur.append(tid)
+        if lowered[tid].out_array in materialize:
+            groups.append(cur)
+            cur = []
+    if cur:
+        groups.append(cur)
+
+    segments: list[Segment] = []
+    for gi, group in enumerate(groups):
+        # external reads: arrays consumed before any in-segment write (an
+        # in-segment write earlier in the group satisfies later reads, and
+        # a task reading its own output array is a cross-task accumulation
+        # seed, external only for the segment's first writer)
+        seen: set[str] = set()
+        ext: list[str] = []
+        for tid in group:
+            lw = lowered[tid]
+            for a in lw.in_arrays:
+                if a not in seen and a not in ext:
+                    ext.append(a)
+            seen.add(lw.out_array)
+        later_reads = {a for g2 in groups[gi + 1:] for tid in g2
+                       for a in lowered[tid].in_arrays}
+        outs: list[str] = []
+        for tid in group:
+            a = lowered[tid].out_array
+            if (a in later_reads or a in out_names) and a not in outs:
+                outs.append(a)
+        segments.append(Segment(index=gi, tids=tuple(group),
+                                in_arrays=tuple(ext),
+                                out_arrays=tuple(outs)))
+    return segments
+
+
 # ---------------------------------------------------------------------------
 # The compiled program
 # ---------------------------------------------------------------------------
 class PlanProgram:
-    """One plan, one impl, ONE compiled program over the whole DAG."""
+    """One plan, one impl, one compiled executable per segment.
+
+    Most plans have a single segment (the PR-2 whole-program lowering); a
+    plan with multi-consumer intermediates is split at those boundaries.
+    ``pool_size`` > 1 clones the segment executables into a round-robin
+    pool so repeated/concurrent calls spread over distinct executables.
+    """
 
     def __init__(self, graph: TaskGraph, plan: ExecutionPlan, impl: str,
                  fg: FusedGraph | None = None,
-                 schedule: WaveSchedule | None = None):
+                 schedule: WaveSchedule | None = None,
+                 pool_size: int | None = None):
         self.graph = graph
         self.plan = plan
         self.impl = impl
@@ -78,10 +228,11 @@ class PlanProgram:
         }
         self.in_names = tuple(graph.external_inputs())
         self.out_names = tuple(graph.final_outputs())
-        # Task outputs feeding >= 2 consumer tasks are pinned behind an
-        # optimization barrier: XLA CPU otherwise *clones* the producer
-        # computation into every consumer fusion (observed on gemver — Ah
-        # recomputed per consumer), turning the fusion win into a loss.
+        # Task outputs feeding >= 2 consumer tasks: XLA CPU clones such
+        # producers into every consumer fusion (observed on gemver — the
+        # rank-2 update recomputed per consumer dot), through optimization
+        # barriers and even past explicit outputs.  These arrays define the
+        # segment boundaries where materialization is structural.
         consumers: dict[str, set[int]] = {}
         for (_, v, a) in self.fg.edges:
             consumers.setdefault(a, set()).add(v)
@@ -90,99 +241,275 @@ class PlanProgram:
         self._devices = tuple(jax.devices())
         self._multi = len(self._devices) > 1 and self.schedule.multi_slice
         self._traces = 0
-        self._jit = jax.jit(self._body)
+        # atomic under the GIL (single C-level next()), so concurrent
+        # callers round-robin onto distinct clones without a lock
+        self._cursor = itertools.count()
+        self._calls = 0
+        if os.environ.get("REPRO_PROGRAM_SEGMENT", "1") == "0":
+            # debug escape hatch: single-executable lowering, barrier-pinned
+            self.segments = [Segment(0, tuple(self.schedule.order),
+                                     self.in_names, self.out_names)]
+        else:
+            self.segments = _split_segments(
+                self.schedule, self.lowered, self._materialize,
+                self.out_names)
+        self.pool_size = pool_size if pool_size is not None \
+            else _env_int("REPRO_PROGRAM_POOL_SIZE", DEFAULT_POOL_SIZE)
+        self._pool: list[tuple[Callable, ...]] = [
+            tuple(jax.jit(self._segment_body(seg)) for seg in self.segments)
+            for _ in range(self.pool_size)
+        ]
+        self._single = len(self.segments) == 1
 
     # -- introspection ----------------------------------------------------
     @property
     def trace_count(self) -> int:
-        """How many times the program body has been (re-)traced."""
+        """How many times any segment body has been (re-)traced."""
         return self._traces
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def calls(self) -> int:
+        """Requests served by this program (pool round-robin position is
+        ``calls % pool_size``)."""
+        return self._calls
+
+    def est_bytes(self) -> int:
+        """Rough resident-size estimate of this cache entry: the graph's
+        array footprint once (intermediate buffers live inside the
+        executables) plus a fixed per-task code estimate per pool clone."""
+        arrays = sum(a.bytes for a in self.graph.arrays.values())
+        code = 64 * 1024 * len(self.lowered) * self.pool_size
+        return arrays + code
 
     def _dev(self, slice_id: int) -> int:
         return slice_id % len(self._devices)
 
-    # -- traced body ------------------------------------------------------
-    def _body(self, *flat: jax.Array):
-        self._traces += 1
-        env: dict[str, jax.Array] = dict(zip(self.in_names, flat))
-        placed: dict[tuple[str, int], jax.Array] = {}
+    # -- traced bodies ----------------------------------------------------
+    def _segment_body(self, seg: Segment):
+        """Build the traceable body of one segment (closure per pool clone,
+        so every ``jax.jit`` wrapper compiles its own executable)."""
+        tids = frozenset(seg.tids)
 
-        def on_device(array: str, d: int) -> jax.Array:
-            key = (array, d)
-            if key not in placed:
-                placed[key] = jax.device_put(env[array], self._devices[d])
-            return placed[key]
+        def body(*flat: jax.Array):
+            self._traces += 1
+            env: dict[str, jax.Array] = dict(zip(seg.in_arrays, flat))
+            placed: dict[tuple[str, int], jax.Array] = {}
 
-        for wi, wave in enumerate(self.schedule.waves):
-            for tid in wave:
-                lw = self.lowered[tid]
+            def on_device(array: str, d: int) -> jax.Array:
+                key = (array, d)
+                if key not in placed:
+                    placed[key] = jax.device_put(env[array],
+                                                 self._devices[d])
+                return placed[key]
+
+            for wi, wave in enumerate(self.schedule.waves):
+                for tid in wave:
+                    if tid not in tids:
+                        continue
+                    lw = self.lowered[tid]
+                    if self._multi:
+                        d = self._dev(self.schedule.slice_of[tid])
+                        args = [on_device(a, d) for a in lw.in_arrays]
+                    else:
+                        args = [env[a] for a in lw.in_arrays]
+                    out = lw.body(*args)
+                    if self._single and lw.out_array in self._materialize \
+                            and lw.out_array not in seg.out_arrays:
+                        # unsegmented fallback: barrier-pin multi-consumer
+                        # producers (best effort — see module docstring)
+                        out = jax.lax.optimization_barrier(out)
+                    if self._multi:
+                        # the array has a new version: stale placements die
+                        for k in [k for k in placed
+                                  if k[0] == lw.out_array]:
+                            del placed[k]
+                    env[lw.out_array] = out
                 if self._multi:
-                    d = self._dev(self.schedule.slice_of[tid])
-                    args = [on_device(a, d) for a in lw.in_arrays]
-                else:
-                    args = [env[a] for a in lw.in_arrays]
-                out = lw.body(*args)
-                if lw.out_array in self._materialize:
-                    out = jax.lax.optimization_barrier(out)
-                if self._multi:
-                    # the array has a new version: stale placements die
-                    for key in [k for k in placed if k[0] == lw.out_array]:
-                        del placed[key]
-                env[lw.out_array] = out
+                    # Overlap-aware dispatch: cross-slice edges whose
+                    # producer AND consumer live in this segment are issued
+                    # at the producer's wave so the transfer rides under
+                    # wave wi+1's compute.  Edges crossing a segment
+                    # boundary are materialized there and placed at use.
+                    for tr in self.schedule.transfers:
+                        if tr.ready_wave == wi and tr.src in tids \
+                                and tr.dst in tids:
+                            on_device(tr.array, self._dev(tr.dst_slice))
             if self._multi:
-                # Overlap-aware dispatch: cross-slice edges are issued the
-                # moment their producing wave is emitted, so the transfer
-                # rides under wave wi+1's compute instead of stalling the
-                # consumer at use time.
-                for tr in self.schedule.transfers:
-                    if tr.ready_wave == wi:
-                        on_device(tr.array, self._dev(tr.dst_slice))
-        outs = [env[a] for a in self.out_names]
-        if self._multi:
-            outs = [jax.device_put(v, self._devices[0]) for v in outs]
-        return tuple(outs)
+                # final outputs land on device 0 (the PR-2 contract, kept
+                # for every segment — a multi-consumer intermediate can
+                # itself be a final output produced mid-program)
+                outs = [jax.device_put(env[a], self._devices[0])
+                        if a in self.out_names else env[a]
+                        for a in seg.out_arrays]
+            else:
+                outs = [env[a] for a in seg.out_arrays]
+            return tuple(outs)
+
+        return body
 
     # -- execution --------------------------------------------------------
     def __call__(self, inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
-        outs = self._jit(*[inputs[a] for a in self.in_names])
-        return dict(zip(self.out_names, outs))
+        i = next(self._cursor)
+        fns = self._pool[i % self.pool_size]
+        self._calls = i + 1
+        if self._single:
+            seg = self.segments[0]
+            outs = fns[0](*[inputs[a] for a in seg.in_arrays])
+            return dict(zip(seg.out_arrays, outs))
+        env = dict(inputs)
+        for seg, fn in zip(self.segments, fns):
+            res = fn(*[env[a] for a in seg.in_arrays])
+            env.update(zip(seg.out_arrays, res))
+        return {a: env[a] for a in self.out_names}
 
 
 # ---------------------------------------------------------------------------
-# Process-wide program cache
+# Process-wide bounded LRU program cache
 # ---------------------------------------------------------------------------
-_CACHE: dict[tuple[str, str, str], PlanProgram] = {}
-_HITS = 0
-_MISSES = 0
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached program plus its serving statistics."""
+
+    program: PlanProgram
+    hits: int = 0
+    last_use: float = 0.0
+    est_bytes: int = 0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "last_use": self.last_use,
+                "est_bytes": self.est_bytes,
+                "pool_size": self.program.pool_size,
+                "n_segments": self.program.n_segments,
+                "calls": self.program.calls}
+
+
+class ProgramCache:
+    """Bounded LRU cache of compiled plan programs.
+
+    Keys are (graph fingerprint, plan fingerprint, impl).  A ``get`` moves
+    the entry to the MRU position; inserting beyond ``capacity`` evicts the
+    LRU entry (its jitted executables die with it once callers drop their
+    references).
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CACHE_SIZE):
+        self.capacity = max(1, capacity)
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def keys(self) -> list[tuple]:
+        """LRU -> MRU order (eviction order is the front of this list)."""
+        return list(self._entries)
+
+    def entry(self, key: tuple) -> CacheEntry | None:
+        """Peek an entry without touching LRU order or hit counts."""
+        return self._entries.get(key)
+
+    def get(self, key: tuple) -> PlanProgram | None:
+        """Hit path: O(1), no fingerprinting — serving engines resolve a
+        precomputed key here on every request."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        entry.hits += 1
+        entry.last_use = time.monotonic()
+        self.hits += 1
+        return entry.program
+
+    def put(self, key: tuple, program: PlanProgram) -> PlanProgram:
+        self._entries[key] = CacheEntry(
+            program=program, last_use=time.monotonic(),
+            est_bytes=program.est_bytes())
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return program
+
+    def resize(self, capacity: int) -> None:
+        self.capacity = max(1, capacity)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def stats(self, detail: bool = False) -> dict:
+        out = {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "est_bytes": sum(e.est_bytes for e in self._entries.values()),
+        }
+        if detail:
+            out["entries"] = {"/".join(k): e.stats()
+                              for k, e in self._entries.items()}
+        return out
+
+
+_CACHE = ProgramCache(_env_int("REPRO_PROGRAM_CACHE_SIZE",
+                               DEFAULT_CACHE_SIZE))
+
+
+def program_cache() -> ProgramCache:
+    """The process-wide program cache (shared by solver measurement, the
+    executors and every ``PlanEngine`` replica in this process)."""
+    return _CACHE
+
+
+def set_program_cache_size(capacity: int) -> None:
+    """Re-bound the process-wide cache, evicting LRU overflow."""
+    _CACHE.resize(capacity)
 
 
 def compiled_program(graph: TaskGraph, plan: ExecutionPlan, impl: str,
                      fg: FusedGraph | None = None,
-                     schedule: WaveSchedule | None = None) -> PlanProgram:
+                     schedule: WaveSchedule | None = None,
+                     pool_size: int | None = None) -> PlanProgram:
     """Cache lookup/build: same (graph, plan, impl) -> same PlanProgram.
 
-    A hit re-uses the program's lowerings AND its ``jax.jit`` trace cache, so
-    a repeated call with identical input shapes/dtypes re-lowers and
-    re-traces nothing.
+    A hit re-uses the program's lowerings AND its ``jax.jit`` trace caches,
+    so a repeated call with identical input shapes/dtypes re-lowers and
+    re-traces nothing.  An explicit ``pool_size`` differing from the cached
+    entry rebuilds it (the pool is part of the execution contract).
     """
-    global _HITS, _MISSES
-    key = (graph_fingerprint(graph), plan_fingerprint(plan), impl)
-    prog = _CACHE.get(key)
-    if prog is not None:
-        _HITS += 1
-        return prog
-    _MISSES += 1
-    prog = PlanProgram(graph, plan, impl, fg=fg, schedule=schedule)
-    _CACHE[key] = prog
-    return prog
+    _auto_enable_persistent_cache()
+    key = program_key(graph, plan, impl)
+    entry = _CACHE.entry(key)
+    if entry is not None and (pool_size is None
+                              or entry.program.pool_size == pool_size):
+        return _CACHE.get(key)
+    _CACHE.misses += 1
+    prog = PlanProgram(graph, plan, impl, fg=fg, schedule=schedule,
+                       pool_size=pool_size)
+    return _CACHE.put(key, prog)
 
 
-def cache_stats() -> dict:
-    return {"hits": _HITS, "misses": _MISSES, "size": len(_CACHE)}
+def cache_stats(detail: bool = False) -> dict:
+    """Global program-cache statistics (one source of truth for the bench
+    gate and ``PlanEngine.stats()``): size/capacity, hits/misses/evictions,
+    estimated bytes, and per-entry detail on request."""
+    return _CACHE.stats(detail=detail)
 
 
 def clear_program_cache() -> None:
-    global _HITS, _MISSES
     _CACHE.clear()
-    _HITS = 0
-    _MISSES = 0

@@ -1,4 +1,11 @@
 """Import every arch module so the registry is populated."""
-from . import (recurrentgemma_9b, qwen3_moe_235b_a22b, mixtral_8x7b,
-               musicgen_medium, qwen1_5_0_5b, yi_34b, qwen1_5_32b,
-               qwen3_0_6b, rwkv6_1_6b, internvl2_76b)  # noqa: F401
+from . import internvl2_76b  # noqa: F401
+from . import mixtral_8x7b  # noqa: F401
+from . import musicgen_medium  # noqa: F401
+from . import qwen1_5_0_5b  # noqa: F401
+from . import qwen1_5_32b  # noqa: F401
+from . import qwen3_0_6b  # noqa: F401
+from . import qwen3_moe_235b_a22b  # noqa: F401
+from . import recurrentgemma_9b  # noqa: F401
+from . import rwkv6_1_6b  # noqa: F401
+from . import yi_34b  # noqa: F401

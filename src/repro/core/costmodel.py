@@ -134,7 +134,6 @@ def task_report(task: FusedTask, cfg: TaskConfig, graph: FusedGraph,
 
     # ----- intra-tile (Eq. 15) ------------------------------------------
     red_loops = [l for l in main.loops if l in main.reduction_loops]
-    nonred_loops = [l for l in main.loops if l not in main.reduction_loops]
     intra_elems = 1.0
     for l in main.loops:
         intra_elems *= cfg.tiles[l].tile

@@ -30,10 +30,10 @@ Determinism: all enumeration orders are sorted; annealing uses a fixed seed.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import random
 import time
-from typing import Iterable, Sequence
 
 from .costmodel import footprint_elems, n_transfers, plan_latency, task_report
 from .fusion import FusedGraph, FusedTask, fuse
@@ -368,7 +368,6 @@ def _rewire_edges(fg: FusedGraph, choice: dict[int, TaskChoice],
     A producer feeding several consumers takes the most conservative
     routing (HBM if any edge bounces, stream if any crosses slices).
     """
-    caps = opts.caps
     cfgs: dict[int, TaskConfig] = {}
     for t in fg.tasks:
         cfgs[t.tid] = dataclasses.replace(choice[t.tid].cfg,
@@ -694,3 +693,68 @@ def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
     return ExecutionPlan(graph_name=fg.graph.name, configs=cfgs,
                          reports=reports, latency_s=lat,
                          useful_flops=useful)
+
+
+# ---------------------------------------------------------------------------
+# Measured execution (solve-time validation = serve-time executables)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def build_graph(name: str, scale: int = 1) -> TaskGraph:
+    """One PolyBench graph build per (kernel, scale) — solving, measuring
+    and serving the same kernel share the graph (and therefore its
+    fingerprint, i.e. its program-cache entries).  Treat the result
+    read-only."""
+    from . import polybench
+    return polybench.build(name, scale=scale)
+
+
+def steady_state_s(exe, ins, *, batch: int = 10, samples: int = 7) -> float:
+    """Best per-call seconds over ``samples`` timed batches of ``batch``
+    back-to-back calls (one block at the batch end).  The ONE timing
+    methodology every benchmark uses: batching amortizes scheduler noise on
+    contended hosts far better than single-call timings, and best-of
+    filters the remaining interference."""
+    out = exe(ins)                              # compile + warm up
+    for v in out.values():
+        v.block_until_ready()                   # drain async dispatch
+    best = float("inf")
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        for _ in range(batch):
+            out = exe(ins)
+        for v in out.values():
+            v.block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / batch)
+    return best
+
+
+def measure_plan(name: str, plan: ExecutionPlan, *, graph=None,
+                 scale: int = 1, impl: str | None = None, repeats: int = 3,
+                 validate: bool = True, mode: str = "program",
+                 pool_size: int | None = None):
+    """Execute a plan through the codegen subsystem and time it.
+
+    Returns ``(seconds, gflops, validated)`` — the measured counterpart of
+    the model-predicted GF/s, timed with :func:`steady_state_s` (``repeats``
+    = samples).  ``mode="program"`` runs the whole-plan compiled program
+    resolved through the SAME process-wide program cache (and executable
+    pool) the serving engine uses, so solve-time measurement and serve-time
+    execution hit identical executables; ``mode="per_task"`` runs the
+    host-driven per-task dispatch for comparison.  ``graph`` lets callers
+    pass the already-built graph (:func:`build_graph` otherwise caches the
+    rebuild).  Triangular-density kernels are not executable; callers
+    should catch ``NotImplementedError``.
+    """
+    from ..codegen import (allclose, plan_executor, random_inputs,
+                           reference_executor)
+    g = graph if graph is not None else build_graph(name, scale)
+    exe = plan_executor(g, plan, impl=impl, mode=mode, pool_size=pool_size)
+    ins = random_inputs(g, seed=0)
+    best = steady_state_s(exe, ins, samples=repeats)
+    ok = True
+    if validate:
+        ref = reference_executor(g)(ins)
+        out = exe(ins)
+        ok = all(allclose(out[k], ref[k]) for k in ref)
+    gflops = g.total_flops() / best / 1e9 if best else 0.0
+    return best, gflops, ok

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterable, Mapping
+from typing import Mapping
 
 import numpy as np
 

@@ -16,7 +16,6 @@ bytes are a §Perf lever).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -12,7 +12,6 @@ charges for choosing the pipeline role of the pod axis.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -47,7 +47,6 @@ class StragglerMonitor:
             prev = self._ema[i]
             self._ema[i] = t if prev is None else \
                 self.cfg.ema * prev + (1 - self.cfg.ema) * t
-            baseline = min(self._ema[i], median) or t
             if self._steps > self.cfg.min_steps \
                     and t > self.cfg.threshold * max(median, 1e-9):
                 self._slow_streak[i] += 1

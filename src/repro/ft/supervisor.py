@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Callable
 
 log = logging.getLogger("repro.ft")

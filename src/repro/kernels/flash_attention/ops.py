@@ -30,7 +30,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     bk: int = 128, impl: str | None = None) -> jax.Array:
     impl = impl or dispatch.current_impl()
     b, s, h, d = q.shape
-    hkv = k.shape[2]
     qb, kb, vb = _to_bh(q), _to_bh(k), _to_bh(v)
     if impl == "xla":
         out = ref.attention(qb, kb, vb, causal=causal, window=window,

@@ -30,7 +30,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import get_config, list_archs
 from repro.distributed import sharding as sh

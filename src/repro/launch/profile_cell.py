@@ -17,7 +17,6 @@ from repro.configs import get_config
 from repro.launch import hlo_breakdown, hlo_parse
 from repro.launch.dryrun import SHAPES, _measure, lower_cell
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import RooflineReport, model_flops
 
 
 def main() -> None:

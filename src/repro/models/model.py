@@ -18,7 +18,6 @@ traded for legal parallelism, exactly the Listing 1 trade.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -29,7 +29,9 @@ def init_rwkv6_block(key, d_model: int, n_heads: int, d_ff: int | None = None,
     d_ff = d_ff or 4 * d_model
     ks = split_keys(key, ["wr", "wk", "wv", "wg", "wo", "wd1", "wd2",
                           "cm_r", "cm_k", "cm_v"])
-    zeros = lambda *shape: jnp.zeros(shape, dtype)
+    def zeros(*shape):
+        return jnp.zeros(shape, dtype)
+
     return {
         "mu": zeros(5, d_model) + 0.5,       # r,k,v,g,w mixing coefficients
         "wr": dense_init(ks["wr"], (d_model, d_model), dtype),
@@ -72,7 +74,9 @@ def _unheads(x: jax.Array, b: int, n_heads: int) -> jax.Array:
 
 def _tm_projections(params, x, xs, compute_dtype):
     mu = params["mu"].astype(jnp.float32)
-    mix = lambda i: (x * (1 - mu[i]) + xs * mu[i]).astype(compute_dtype)
+    def mix(i):
+        return (x * (1 - mu[i]) + xs * mu[i]).astype(compute_dtype)
+
     r = mix(0) @ params["wr"].astype(compute_dtype)
     k = mix(1) @ params["wk"].astype(compute_dtype)
     v = mix(2) @ params["wv"].astype(compute_dtype)

@@ -32,6 +32,21 @@ class ServeConfig:
     temperature: float = 0.0       # 0 = greedy
     eos_id: int | None = None
     seed: int = 0
+    # -- plan-serving knobs (PlanEngine) ----------------------------------
+    # Persistent AOT compilation cache directory: replicas pointed at the
+    # same path share lowered XLA artifacts across processes, so a fresh
+    # replica's first compile deserializes instead of re-lowering.
+    # (env equivalent: REPRO_COMPILATION_CACHE_DIR)
+    compilation_cache_dir: str | None = None
+    # Bound of the process-wide compiled-program LRU cache; None keeps the
+    # current global setting.  (env equivalent: REPRO_PROGRAM_CACHE_SIZE)
+    program_cache_size: int | None = None
+    # Round-robin executable-pool size per cached program; None defers to
+    # REPRO_PROGRAM_POOL_SIZE (default 1).
+    pool_size: int | None = None
+    # Admission policy: max (graph, plan) pairs registered at once; the
+    # least-recently-used registration is evicted past this.  None = no cap.
+    max_plans: int | None = None
 
 
 class Engine:
@@ -86,52 +101,120 @@ class PlanEngine:
     """Serve repeated plan executions off the compiled-program cache.
 
     Register (graph, plan) pairs under a model name, then submit input
-    batches against them.  Every request resolves through
-    ``repro.codegen.compiled_program`` — the process-wide cache keyed by
-    (graph fingerprint, plan fingerprint, impl) — so steady-state requests
-    pay one host dispatch of an already-compiled whole-plan program.
+    batches against them.  Requests resolve through the process-wide
+    bounded LRU program cache (``repro.codegen.program_cache``): the
+    (graph, plan, impl) fingerprint key is hashed once per registration,
+    and every ``submit()`` is an O(1) keyed cache lookup — eviction-aware,
+    so the cache's hit/eviction statistics stay the one source of truth.
+
+    ``ServeConfig`` carries the serving knobs: persistent AOT compilation
+    cache directory (cross-replica artifact sharing / warm start),
+    program-cache bound, executable-pool size, and the registration
+    admission cap.
     """
 
-    def __init__(self, impl: str | None = None):
+    def __init__(self, impl: str | None = None,
+                 sc: ServeConfig | None = None):
+        from ..codegen import enable_persistent_cache, set_program_cache_size
         self._impl = impl
+        self.sc = sc or ServeConfig()
+        if self.sc.compilation_cache_dir:
+            enable_persistent_cache(self.sc.compilation_cache_dir)
+        if self.sc.program_cache_size is not None:
+            set_program_cache_size(self.sc.program_cache_size)
         self._registry: dict[str, tuple[Any, Any]] = {}
-        # (name, impl) -> PlanProgram: fingerprints are hashed once per
-        # registration, not per request — submit() is pure dispatch
-        self._resolved: dict[tuple[str, str], Any] = {}
+        # (name, impl) -> program-cache key: fingerprints are hashed once
+        # per registration, not per request — submit() is pure dispatch
+        self._keys: dict[tuple[str, str], tuple] = {}
+        self._last_use: dict[str, float] = {}
         self.requests = 0
+        self.per_name: dict[str, int] = {}
 
     def register(self, name: str, graph, plan) -> None:
+        """Admit a (graph, plan) pair; past ``sc.max_plans`` registrations
+        the least-recently-submitted name is evicted first."""
+        if self.sc.max_plans is not None and name not in self._registry:
+            while len(self._registry) >= max(1, self.sc.max_plans):
+                lru = min(self._registry,
+                          key=lambda n: self._last_use.get(n, 0.0))
+                self.unregister(lru)
         self._registry[name] = (graph, plan)
-        self._resolved = {k: v for k, v in self._resolved.items()
-                          if k[0] != name}
+        self._last_use[name] = time.monotonic()
+        self._keys = {k: v for k, v in self._keys.items() if k[0] != name}
+
+    def unregister(self, name: str) -> None:
+        self._registry.pop(name, None)
+        self._last_use.pop(name, None)
+        self.per_name.pop(name, None)
+        self._keys = {k: v for k, v in self._keys.items() if k[0] != name}
 
     def names(self) -> list[str]:
         return sorted(self._registry)
 
     def warmup(self, name: str, inputs: dict) -> float:
         """Compile-and-first-run; returns seconds spent (the cold cost the
-        cache amortizes away for every later request)."""
+        cache amortizes away for every later request).  With a persistent
+        compilation cache configured, a replica warming a program another
+        replica already compiled deserializes the artifact instead of
+        re-lowering — the warm-start path."""
         t0 = time.monotonic()
         out = self.submit(name, inputs)
         for v in out.values():
             v.block_until_ready()
         return time.monotonic() - t0
 
+    def _resolve(self, name: str, impl: str):
+        from ..codegen import compiled_program, program_cache, program_key
+        key = self._keys.get((name, impl))
+        if key is not None:
+            prog = program_cache().get(key)
+            if prog is not None and (self.sc.pool_size is None
+                                     or prog.pool_size == self.sc.pool_size):
+                return prog
+            # miss, or another caller rebuilt the entry with a different
+            # pool: fall through and re-admit it under this engine's
+            # configured pool contract
+        graph, plan = self._registry[name]
+        if key is None:
+            key = program_key(graph, plan, impl)
+            self._keys[(name, impl)] = key
+        # miss or evicted: build (compiled_program re-admits it as MRU)
+        return compiled_program(graph, plan, impl,
+                                pool_size=self.sc.pool_size)
+
     def submit(self, name: str, inputs: dict) -> dict:
-        """Execute one request; hits the whole-plan compiled program."""
+        """Execute one request; hits the compiled program for ``name``."""
         from ..kernels import dispatch
         impl = self._impl or dispatch.current_impl()
-        prog = self._resolved.get((name, impl))
-        if prog is None:
-            from ..codegen import compiled_program
-            graph, plan = self._registry[name]
-            prog = compiled_program(graph, plan, impl)
-            self._resolved[(name, impl)] = prog
+        prog = self._resolve(name, impl)
         self.requests += 1
+        self.per_name[name] = self.per_name.get(name, 0) + 1
+        self._last_use[name] = time.monotonic()
         return prog(inputs)
 
     def stats(self) -> dict:
-        from ..codegen import cache_stats
+        """Serving statistics: engine request counts, the global program
+        cache (size/capacity, hits/misses/evictions, per-entry detail) and
+        per-pool occupancy of every program this engine serves."""
+        from ..codegen import cache_stats, persistent_cache_dir, program_cache
+        cache = program_cache()
+        pools = {}
+        for (name, impl), key in self._keys.items():
+            entry = cache.entry(key)
+            if entry is not None:
+                p = entry.program
+                pools[f"{name}/{impl}"] = {
+                    "pool_size": p.pool_size,
+                    "next": p.calls % p.pool_size,
+                    "calls": p.calls,
+                    "n_segments": p.n_segments,
+                }
+        s = cache_stats(detail=True)
+        hit_rate = s["hits"] / max(1, s["hits"] + s["misses"])
         return {"requests": self.requests,
                 "registered": len(self._registry),
-                **cache_stats()}
+                "per_name": dict(self.per_name),
+                "hit_rate": round(hit_rate, 4),
+                "pools": pools,
+                "persistent_cache_dir": persistent_cache_dir(),
+                **s}

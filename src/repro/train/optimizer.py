@@ -36,7 +36,9 @@ class OptState(NamedTuple):
 
 
 def init_opt_state(params: Any) -> OptState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     needs_master = any(x.dtype != jnp.float32
                        for x in jax.tree.leaves(params))
     master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \

@@ -1,0 +1,106 @@
+"""CI bench gate (scripts/bench_compare.py): regression and floor logic."""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    pathlib.Path(__file__).resolve().parent.parent / "scripts"
+    / "bench_compare.py")
+bench_compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_compare)
+
+
+def _bench(kernels: dict) -> dict:
+    return {"benchmark": "codegen_whole_plan", "kernels": kernels,
+            "gmean_speedup": 0.0}
+
+
+def _k(speedup: float, validated: bool = True) -> dict:
+    return {"speedup": speedup, "validated": validated}
+
+
+def test_gate_passes_on_equal_runs():
+    base = _bench({"a": _k(2.0), "b": _k(1.2)})
+    assert bench_compare.compare(base, base) == []
+
+
+def test_gate_passes_within_noise_band():
+    base = _bench({"a": _k(2.0)})
+    fresh = _bench({"a": _k(1.85)})            # -7.5% < 10%
+    assert bench_compare.compare(base, fresh) == []
+
+
+def test_gate_fails_kernel_regression():
+    base = _bench({"a": _k(2.0), "b": _k(1.2)})
+    fresh = _bench({"a": _k(1.0), "b": _k(1.2)})
+    failures = bench_compare.compare(base, fresh)
+    assert any("a: speedup regressed" in f for f in failures)
+
+
+def test_gate_fails_gmean_regression_only_when_aggregate_slips():
+    base = _bench({k: _k(1.0) for k in "abcde"})
+    # every kernel down 9.9% — inside the per-kernel band, but the gmean
+    # (also -9.9%) is inside its 15% band too: passes
+    fresh = _bench({k: _k(0.901) for k in "abcde"})
+    assert bench_compare.compare(base, fresh) == []
+    fresh = _bench({k: _k(0.80) for k in "abcde"})
+    failures = bench_compare.compare(base, fresh,
+                                     max_kernel_regress=0.25)
+    assert failures and all("gmean" in f for f in failures)
+
+
+def test_gate_fails_on_unvalidated_kernel():
+    base = _bench({"a": _k(1.0)})
+    fresh = _bench({"a": _k(5.0, validated=False)})
+    failures = bench_compare.compare(base, fresh)
+    assert any("validated=false" in f for f in failures)
+
+
+def test_gate_enforces_absolute_floor():
+    base = _bench({"gemver": _k(0.546)})
+    fresh = _bench({"gemver": _k(0.60)})       # improved, but under floor
+    failures = bench_compare.compare(base, fresh,
+                                     floors={"gemver": 0.9})
+    assert any("below floor" in f for f in failures)
+    ok = _bench({"gemver": _k(0.95)})
+    assert bench_compare.compare(base, ok, floors={"gemver": 0.9}) == []
+
+
+def test_gate_ignores_added_kernels_in_gmean():
+    base = _bench({"a": _k(1.0)})
+    fresh = _bench({"a": _k(1.0), "zzz": _k(0.1)})
+    assert bench_compare.compare(base, fresh) == []
+
+
+def test_gate_flags_missing_kernels():
+    base = _bench({"a": _k(1.0), "b": _k(1.0)})
+    fresh = _bench({"a": _k(1.0)})
+    failures = bench_compare.compare(base, fresh)
+    assert any("missing" in f for f in failures)
+
+
+def test_cli_roundtrip(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_bench({"a": _k(1.0)})))
+    fresh.write_text(json.dumps(_bench({"a": _k(0.5)})))
+    assert bench_compare.main([str(base), str(fresh)]) == 1
+    fresh.write_text(json.dumps(_bench({"a": _k(1.05)})))
+    assert bench_compare.main([str(base), str(fresh)]) == 0
+
+
+def test_committed_baseline_is_gateable():
+    """The repo's committed BENCH_codegen.json must satisfy the gate's own
+    acceptance floors (gemver >= 0.9x, all kernels validated)."""
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_codegen.json"
+    if not path.exists():
+        pytest.skip("no committed baseline")
+    data = json.loads(path.read_text())
+    failures = bench_compare.compare(data, data, floors={"gemver": 0.9})
+    assert failures == []

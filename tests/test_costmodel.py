@@ -7,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import polybench
-from repro.core.costmodel import (dag_latency, footprint_elems, n_transfers,
+from repro.core.costmodel import (footprint_elems, n_transfers,
                                   plan_latency, task_report)
 from repro.core.fusion import fuse
 from repro.core.padding import TileOption
@@ -165,7 +165,6 @@ def test_streaming_shift_reduces_latency():
         return TaskConfig(perm=tuple(t.loops), tiles=tiles,
                           placements=placements, slice_id=slice_id)
 
-    reports = {}
     cfg_stream = {t.tid: mk(t, t.tid, True) for t in fg.tasks}
     cfg_block = {t.tid: mk(t, t.tid, False) for t in fg.tasks}
     lat_stream, _ = plan_latency(fg, cfg_stream, THREE_SLICE)

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import textwrap
 
-import pytest
 
 from conftest import run_subprocess
 

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import kernel_impl
-from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.matmul import ops as mm_ops, ref as mm_ref
 from repro.kernels.quant import ops as q_ops, ref as q_ref
 from repro.kernels.rglru import ops as rg_ops, ref as rg_ref

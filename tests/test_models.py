@@ -19,7 +19,7 @@ from repro.configs import get_config, list_archs
 from repro.configs.base import smoke
 from repro.models import attention as attn_mod
 from repro.models import model as M
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import train_step
 
 ARCHS = list_archs()

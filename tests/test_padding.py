@@ -1,7 +1,6 @@
 """Unit + property tests: padding (core/padding.py) — paper §2.1.6, Eqs. 1-3."""
 from __future__ import annotations
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.padding import (TileOption, burst_width,

@@ -13,7 +13,6 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import smoke
-from repro.models import attention as attn_mod
 from repro.models import model as M
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import train_step

@@ -121,3 +121,69 @@ def test_plan_engine_serves_from_program_cache():
     # (later submits resolve engine-locally, no fingerprinting per request)
     assert stats["misses"] == 1 and stats["hits"] >= 1
     assert eng.stats()["requests"] == 2
+
+
+def test_plan_engine_admission_evicts_lru_registration():
+    from repro.codegen import clear_program_cache, random_inputs
+    from repro.core import SolverOptions, THREE_SLICE, polybench, solve
+    from repro.serve import PlanEngine, ServeConfig
+
+    clear_program_cache()
+    eng = PlanEngine(impl="xla", sc=ServeConfig(max_plans=2))
+    graphs = {}
+    for name in ("2-madd", "3-madd"):
+        g = polybench.build(name)
+        plan = solve(g, THREE_SLICE, SolverOptions(time_budget_s=1.0))
+        graphs[name] = (g, plan)
+        eng.register(name, g, plan)
+    assert eng.names() == ["2-madd", "3-madd"]
+    # 3-madd becomes most recently used; admitting a third plan evicts
+    # the LRU registration (2-madd)
+    eng.submit("3-madd", random_inputs(graphs["3-madd"][0], seed=0))
+    g, plan = graphs["2-madd"]
+    eng.register("copy", g, plan)
+    assert eng.names() == ["3-madd", "copy"]
+
+
+def test_plan_engine_stats_pools_and_hit_rate():
+    from repro.codegen import clear_program_cache, random_inputs
+    from repro.core import SolverOptions, THREE_SLICE, polybench, solve
+    from repro.serve import PlanEngine, ServeConfig
+
+    clear_program_cache()
+    g = polybench.build("2-madd")
+    plan = solve(g, THREE_SLICE, SolverOptions(time_budget_s=1.0))
+    eng = PlanEngine(impl="xla", sc=ServeConfig(pool_size=2))
+    eng.register("m", g, plan)
+    ins = random_inputs(g, seed=0)
+    for _ in range(3):
+        eng.submit("m", ins)
+    s = eng.stats()
+    assert s["requests"] == 3 and s["per_name"] == {"m": 3}
+    pool = s["pools"]["m/xla"]
+    assert pool["pool_size"] == 2 and pool["calls"] == 3
+    assert pool["next"] == 1                    # 3 calls round-robin of 2
+    assert 0.0 <= s["hit_rate"] <= 1.0
+    assert s["capacity"] >= 1 and "evictions" in s
+    # entries detail rides along for dashboards
+    assert any(e["pool_size"] == 2 for e in s["entries"].values())
+
+
+def test_plan_engine_reasserts_its_pool_contract():
+    """Another caller rebuilding the cache entry with a different pool must
+    not silently downgrade an engine configured for a larger pool."""
+    from repro.codegen import (clear_program_cache, compiled_program,
+                               random_inputs)
+    from repro.core import SolverOptions, THREE_SLICE, polybench, solve
+    from repro.serve import PlanEngine, ServeConfig
+
+    clear_program_cache()
+    g = polybench.build("2-madd")
+    plan = solve(g, THREE_SLICE, SolverOptions(time_budget_s=1.0))
+    eng = PlanEngine(impl="xla", sc=ServeConfig(pool_size=2))
+    eng.register("m", g, plan)
+    ins = random_inputs(g, seed=0)
+    eng.submit("m", ins)
+    compiled_program(g, plan, "xla", pool_size=1)   # foreign rebuild
+    eng.submit("m", ins)
+    assert eng.stats()["pools"]["m/xla"]["pool_size"] == 2

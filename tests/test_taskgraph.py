@@ -1,7 +1,6 @@
 """Unit tests: affine task-graph IR (core/taskgraph.py) + PolyBench builders."""
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
 from repro.core import polybench

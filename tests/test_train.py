@@ -17,9 +17,8 @@ from repro.configs.base import smoke
 from repro.data import DataConfig, PrefetchLoader, SyntheticLM
 from repro.ft import FailurePlan, InjectedFailure, run_with_restarts
 from repro.ft.straggler import StragglerConfig, StragglerMonitor
-from repro.models import model as M
 from repro.train.loop import TrainConfig, train
-from repro.train.optimizer import (AdamWConfig, adamw_update, global_norm,
+from repro.train.optimizer import (AdamWConfig, adamw_update,
                                    init_opt_state, lr_schedule)
 
 
@@ -116,8 +115,6 @@ def test_prefetch_loader_order_and_seek():
 
 
 def test_host_sharded_batches_disjoint():
-    full = SyntheticLM(DataConfig(vocab=32, seq_len=8, global_batch=4,
-                                  seed=5))
     h0 = SyntheticLM(DataConfig(vocab=32, seq_len=8, global_batch=4,
                                 seed=5, n_hosts=2, host_id=0))
     h1 = SyntheticLM(DataConfig(vocab=32, seq_len=8, global_batch=4,
