@@ -1,0 +1,180 @@
+"""BENCH_concurrent.json emitter: ``PlanEngine.submit`` under thread load.
+
+The executable pool exists for multi-threaded servers (N callers
+round-robin onto N cloned executables), but until now only single-caller
+steady state was ever measured (ROADMAP open item).  This benchmark drives
+one shared ``PlanEngine`` from ``--threads`` OS threads, each submitting
+``--requests`` back-to-back requests (block per request — a request is
+done when its outputs are ready), against pool sizes {1, 2, 4}, and
+records throughput and p50/p99 latency per pool size — the measured
+answer to "does pool > 1 pay, and what should the default be?".
+
+Every pool's section also doubles as a served-under-load correctness
+check: the last response is validated against the reference oracle and the
+engine/cache counters are checked for lost updates (the thread-safety
+stress signal the CI gate reads).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_concurrent \
+        --kernel 3-madd --threads 4 --pools 1 2 4 --requests 40 \
+        --out BENCH_concurrent.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+from .common import build_graph, solve_kernel
+
+DEFAULT_POOLS = (1, 2, 4)
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def _drive(eng, name: str, ins, *, threads: int, requests: int):
+    """N threads x M blocking submits against one engine; returns
+    (wall_seconds, per-request latencies, worker errors)."""
+    import jax
+
+    latencies: list[list[float]] = [[] for _ in range(threads)]
+    errors: list[str] = []
+    barrier = threading.Barrier(threads + 1)
+
+    def worker(i: int) -> None:
+        try:
+            barrier.wait()
+            for _ in range(requests):
+                t0 = time.perf_counter()
+                out = eng.submit(name, ins)
+                jax.block_until_ready(list(out.values()))
+                latencies[i].append(time.perf_counter() - t0)
+        except Exception as e:                          # lost update / race
+            errors.append(f"thread {i}: {type(e).__name__}: {e}")
+
+    workers = [threading.Thread(target=worker, args=(i,))
+               for i in range(threads)]
+    for w in workers:
+        w.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for w in workers:
+        w.join()
+    wall = time.perf_counter() - t0
+    return wall, sorted(lat for per in latencies for lat in per), errors
+
+
+def bench(kernel: str = "3-madd", *, pool_sizes=DEFAULT_POOLS,
+          threads: int = 4, requests: int = 40, scale: int = 1,
+          budget: float = 4.0, impl: str = "xla") -> dict:
+    """Measure concurrent serving throughput per pool size."""
+    import jax
+
+    from repro.codegen import (allclose, cache_stats, clear_program_cache,
+                               random_inputs, reference_executor)
+    from repro.serve import PlanEngine, ServeConfig
+
+    g = build_graph(kernel, scale)
+    plan = solve_kernel(kernel, "prometheus", scale=scale, budget=budget)
+    ins = random_inputs(g, seed=0)
+    ref = reference_executor(g)(ins)
+
+    pools: dict[str, dict] = {}
+    for pool in pool_sizes:
+        clear_program_cache()
+        eng = PlanEngine(impl=impl, sc=ServeConfig(pool_size=pool))
+        eng.register(kernel, g, plan)
+        eng.warmup(kernel, ins)                 # warms every pool clone
+        warm_requests = eng.requests
+        wall, lat, errors = _drive(eng, kernel, ins, threads=threads,
+                                   requests=requests)
+        out = eng.submit(kernel, ins)           # served-state validation
+        ok = all(allclose(out[k], ref[k]) for k in ref)
+        stats = eng.stats()
+        served = stats["requests"] - warm_requests - 1   # minus validation
+        # completed = requests that actually finished (one latency sample
+        # each).  lost_updates compares the engine's accounting against
+        # COMPLETED work, so a worker dying early (reported via `errors`)
+        # is not misdiagnosed as a counter race; throughput likewise only
+        # counts completed requests.
+        completed = len(lat)
+        cs = cache_stats()
+        pools[str(pool)] = {
+            "pool_size": pool,
+            "wall_s": round(wall, 6),
+            "throughput_rps": round(completed / wall, 3) if wall else 0.0,
+            "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+            "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+            "completed": completed,
+            "served": served,
+            "lost_updates": max(completed - served, 0),
+            "errors": errors,
+            "validated": bool(ok and not errors),
+            "cache_misses": cs["misses"],
+            "cache_hits": cs["hits"],
+        }
+
+    base = pools.get(str(pool_sizes[0]), {}).get("throughput_rps", 0.0)
+    for p in pools.values():
+        p["scaling_vs_first"] = round(p["throughput_rps"] / base, 4) \
+            if base else 0.0
+    best = max(pools, key=lambda k: pools[k]["throughput_rps"]) \
+        if pools else None
+    return {
+        "benchmark": "concurrent_serving",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "impl": impl,
+        "kernel": kernel,
+        "scale": scale,
+        "threads": threads,
+        "requests_per_thread": requests,
+        "scaling_baseline_pool": str(pool_sizes[0]),
+        "pools": pools,
+        "best_pool": best,
+    }
+
+
+def emit(path: str, **kw) -> dict:
+    result = bench(**kw)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernel", default="3-madd")
+    ap.add_argument("--pools", type=int, nargs="+",
+                    default=list(DEFAULT_POOLS))
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=40,
+                    help="requests per thread")
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--budget", type=float, default=4.0)
+    ap.add_argument("--impl", default="xla")
+    ap.add_argument("--out", default="BENCH_concurrent.json")
+    args = ap.parse_args()
+    result = emit(args.out, kernel=args.kernel,
+                  pool_sizes=tuple(args.pools), threads=args.threads,
+                  requests=args.requests, scale=args.scale,
+                  budget=args.budget, impl=args.impl)
+    for k, p in result["pools"].items():
+        print(f"pool={k}: {p['throughput_rps']:8.1f} req/s "
+              f"p50={p['p50_ms']:7.2f}ms p99={p['p99_ms']:7.2f}ms "
+              f"served={p['served']} lost={p['lost_updates']} "
+              f"validated={p['validated']}")
+    print(f"best_pool={result['best_pool']} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

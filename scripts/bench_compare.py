@@ -1,7 +1,7 @@
-"""CI benchmark-regression gate: compare a fresh BENCH_codegen.json
-against the committed baseline and fail on regression.
+"""CI benchmark-regression gate: compare fresh benchmark JSONs against the
+committed baselines and fail on regression.
 
-Checks, in order:
+Per-kernel gate (BENCH_codegen.json), checks in order:
 
 * every kernel present in BOTH files must have ``validated: true`` in the
   fresh run (a miscompiled kernel is an instant failure, whatever its
@@ -18,10 +18,22 @@ Checks, in order:
 The gmean is recomputed over the common-kernel intersection so adding or
 removing a benchmark kernel does not masquerade as a perf change.
 
+Concurrent-serving gate (BENCH_concurrent.json, via
+``--concurrent-baseline``/``--concurrent-fresh``):
+
+* every fresh pool section must be ``validated`` with zero
+  ``lost_updates`` and no worker errors (the thread-safety stress signal);
+* no common pool size's ``scaling_vs_first`` (throughput relative to the
+  run's first pool size — a same-run ratio, robust to absolute runner
+  speed) may regress more than ``--max-concurrent-regress`` (default 15%)
+  below the baseline.
+
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
         --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
-        --floor gemver=0.9
+        --floor gemver=0.9 \
+        --concurrent-baseline BENCH_concurrent.json \
+        --concurrent-fresh BENCH_concurrent_fresh.json
 """
 
 from __future__ import annotations
@@ -37,6 +49,14 @@ def load(path: str) -> dict:
         data = json.load(f)
     if "kernels" not in data:
         raise SystemExit(f"{path}: not a BENCH_codegen.json (no 'kernels')")
+    return data
+
+
+def load_concurrent(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "pools" not in data:
+        raise SystemExit(f"{path}: not a BENCH_concurrent.json (no 'pools')")
     return data
 
 
@@ -109,10 +129,86 @@ def compare(
     return failures
 
 
+#: Prefix marking failures that must NEVER be retried away by CI (an
+#: intermittent thread-safety failure is a bug, not noise).  ``main``
+#: returns exit code 2 when any failure carries it — the machine-readable
+#: contract the workflow's retry logic branches on.
+CORRECTNESS_TAG = "[correctness]"
+
+
+def compare_concurrent(
+    baseline: dict,
+    fresh: dict,
+    *,
+    max_regress: float = 0.15,
+) -> list[str]:
+    """Concurrent-serving gate; returns failure messages (empty = pass).
+
+    Throughput in req/s is runner-dependent, so the regression check runs
+    on ``scaling_vs_first`` — each pool size's throughput relative to the
+    same run's first pool — which cancels absolute machine speed the same
+    way the kernel gate's speedup ratios do.  The correctness fields
+    (``validated``/``lost_updates``/``errors``) gate absolutely: a racy
+    serving layer fails whatever its speed.
+    """
+    failures: list[str] = []
+    base_pools = baseline["pools"]
+    fresh_pools = fresh["pools"]
+    for k in sorted(fresh_pools, key=int):
+        entry = fresh_pools[k]
+        if not entry.get("validated", False):
+            failures.append(
+                f"{CORRECTNESS_TAG} pool {k}: validated=false in fresh run"
+            )
+        if entry.get("lost_updates", 0):
+            failures.append(
+                f"{CORRECTNESS_TAG} pool {k}: "
+                f"{entry['lost_updates']} lost updates "
+                f"(thread-safety stress failed)"
+            )
+        if entry.get("errors"):
+            failures.append(
+                f"{CORRECTNESS_TAG} pool {k}: worker errors "
+                f"{entry['errors'][:2]}"
+            )
+        if float(entry.get("throughput_rps", 0.0)) <= 0.0:
+            failures.append(f"pool {k}: zero throughput")
+    common = sorted(set(base_pools) & set(fresh_pools), key=int)
+    if not common:
+        failures.append("no common pool sizes between baseline and fresh")
+    # scaling_vs_first is normalized against each run's OWN first pool;
+    # comparing ratios with different denominators would be meaningless
+    base_norm = baseline.get("scaling_baseline_pool")
+    fresh_norm = fresh.get("scaling_baseline_pool")
+    if None not in (base_norm, fresh_norm) and base_norm != fresh_norm:
+        failures.append(
+            f"scaling normalized against different pools "
+            f"(baseline pool {base_norm}, fresh pool {fresh_norm})"
+        )
+        return failures
+    for k in common:
+        base_s = float(base_pools[k].get("scaling_vs_first", 0.0))
+        new_s = float(fresh_pools[k].get("scaling_vs_first", 0.0))
+        if base_s > 0 and new_s < base_s * (1.0 - max_regress):
+            failures.append(
+                f"pool {k}: concurrent scaling regressed "
+                f"{base_s:.3f}x -> {new_s:.3f}x "
+                f"(> {max_regress:.0%} below baseline)"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline", help="committed BENCH_codegen.json")
-    ap.add_argument("fresh", help="freshly measured BENCH_codegen.json")
+    ap.add_argument(
+        "baseline",
+        nargs="?",
+        default=None,
+        help="committed BENCH_codegen.json",
+    )
+    ap.add_argument(
+        "fresh", nargs="?", default=None, help="fresh BENCH_codegen.json"
+    )
     ap.add_argument("--max-kernel-regress", type=float, default=0.10)
     ap.add_argument("--max-gmean-regress", type=float, default=0.15)
     ap.add_argument(
@@ -123,32 +219,77 @@ def main(argv: list[str] | None = None) -> int:
         metavar="KERNEL=SPEEDUP",
         help="absolute per-kernel speedup floor (repeatable)",
     )
+    ap.add_argument(
+        "--concurrent-baseline",
+        default=None,
+        help="committed BENCH_concurrent.json",
+    )
+    ap.add_argument(
+        "--concurrent-fresh",
+        default=None,
+        help="freshly measured BENCH_concurrent.json",
+    )
+    ap.add_argument("--max-concurrent-regress", type=float, default=0.15)
     args = ap.parse_args(argv)
 
-    baseline = load(args.baseline)
-    fresh = load(args.fresh)
-    common = sorted(set(baseline["kernels"]) & set(fresh["kernels"]))
-    for name in common:
-        base_s = float(baseline["kernels"][name]["speedup"])
-        new_s = float(fresh["kernels"][name]["speedup"])
-        delta = (new_s / base_s - 1.0) * 100 if base_s else float("nan")
-        print(
-            f"{name:10s} baseline={base_s:6.3f}x fresh={new_s:6.3f}x "
-            f"({delta:+.1f}%) validated="
-            f"{fresh['kernels'][name].get('validated')}"
+    if (args.baseline is None) != (args.fresh is None):
+        ap.error("baseline and fresh must be given together")
+    if (args.concurrent_baseline is None) != (args.concurrent_fresh is None):
+        ap.error(
+            "--concurrent-baseline and --concurrent-fresh must be "
+            "given together"
+        )
+    if args.baseline is None and args.concurrent_baseline is None:
+        ap.error(
+            "nothing to compare: give BASELINE FRESH and/or "
+            "--concurrent-baseline/--concurrent-fresh"
         )
 
-    failures = compare(
-        baseline,
-        fresh,
-        max_kernel_regress=args.max_kernel_regress,
-        max_gmean_regress=args.max_gmean_regress,
-        floors=dict(args.floor),
-    )
+    failures: list[str] = []
+    if args.baseline is not None:
+        baseline = load(args.baseline)
+        fresh = load(args.fresh)
+        common = sorted(set(baseline["kernels"]) & set(fresh["kernels"]))
+        for name in common:
+            base_s = float(baseline["kernels"][name]["speedup"])
+            new_s = float(fresh["kernels"][name]["speedup"])
+            delta = (new_s / base_s - 1.0) * 100 if base_s else float("nan")
+            print(
+                f"{name:10s} baseline={base_s:6.3f}x fresh={new_s:6.3f}x "
+                f"({delta:+.1f}%) validated="
+                f"{fresh['kernels'][name].get('validated')}"
+            )
+        failures += compare(
+            baseline,
+            fresh,
+            max_kernel_regress=args.max_kernel_regress,
+            max_gmean_regress=args.max_gmean_regress,
+            floors=dict(args.floor),
+        )
+
+    if args.concurrent_baseline is not None:
+        cbase = load_concurrent(args.concurrent_baseline)
+        cfresh = load_concurrent(args.concurrent_fresh)
+        for k in sorted(cfresh["pools"], key=int):
+            e = cfresh["pools"][k]
+            b = cbase["pools"].get(k, {})
+            print(
+                f"pool={k}: {e.get('throughput_rps', 0):9.1f} req/s "
+                f"scaling={e.get('scaling_vs_first', 0):5.2f}x "
+                f"(baseline {b.get('scaling_vs_first', 0):5.2f}x) "
+                f"lost={e.get('lost_updates')} "
+                f"validated={e.get('validated')}"
+            )
+        failures += compare_concurrent(
+            cbase, cfresh, max_regress=args.max_concurrent_regress
+        )
+
     if failures:
         print("\nBENCH GATE FAILED:", file=sys.stderr)
         for msg in failures:
             print(f"  - {msg}", file=sys.stderr)
+        if any(msg.startswith(CORRECTNESS_TAG) for msg in failures):
+            return 2        # correctness failure: CI must not retry
         return 1
     print("\nbench gate passed")
     return 0

@@ -1,0 +1,142 @@
+"""Host calibration: microbenchmarks -> ``CalibratedHardware`` profiles.
+
+The paper's NLP solver balances computation against communication *because
+its cost model reflects the hardware*; static constants reflect a TPU v5e
+spec sheet, not the host actually executing the plans.  This package
+measures the four rates the solver's concurrency decisions turn on — see
+``microbench.py`` — and caches them as a JSON profile under
+``REPRO_CALIBRATION_DIR`` so every solve on this host can consume measured
+numbers:
+
+    from repro.calibrate import calibrate
+    hw = calibrate().hardware(n_slices=3)       # measured board
+    plan = solve(graph, hw)
+
+or, once a profile is cached, simply ``solve(graph, None)`` — the solver
+falls back to the cached calibrated board, and to the static constants only
+when no profile exists.
+
+``calibrate(bench=...)`` accepts any object with the ``Microbench``
+surface; tests inject deterministic fakes so CI never times real hardware.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from .profile import (CONTRACTION_SIZES, CalibratedHardware,
+                      calibration_dir)
+
+__all__ = [
+    "CONTRACTION_SIZES", "CalibratedHardware", "calibrate",
+    "calibrated_hardware", "calibration_dir", "cached_profile",
+    "cached_hardware", "profile_path",
+]
+
+
+def profile_path(backend: str, n_devices: int, cpu_count: int,
+                 base_dir: str | None = None) -> str:
+    """Cache file for one host identity under the calibration dir."""
+    name = f"{backend}-{n_devices}dev-{cpu_count}cpu.json"
+    return os.path.join(base_dir or calibration_dir(), name)
+
+
+def calibrate(*, force: bool = False, bench=None, path: str | None = None,
+              save: bool = True, quick: bool = False) -> CalibratedHardware:
+    """Load the host's cached profile, measuring (and caching) if absent.
+
+    ``force=True`` re-measures even with a cache hit; ``bench`` swaps the
+    measurement backend (tests pass a deterministic fake); ``quick=True``
+    shrinks the real microbenchmarks for smoke runs.
+    """
+    if bench is None:
+        from .microbench import Microbench
+        bench = Microbench(quick=quick)
+    backend, n_devices, cpu_count = bench.identity()
+    if path is None:
+        path = profile_path(backend, n_devices, cpu_count)
+    if not force and os.path.exists(path):
+        try:
+            cached = CalibratedHardware.load(path)
+        except (ValueError, OSError, json.JSONDecodeError):
+            pass                    # stale schema / corrupt file: re-measure
+        else:
+            # a cached smoke-quality (quick) profile must not satisfy a
+            # full-fidelity request — re-measure and overwrite it
+            if quick or not cached.quick:
+                return cached
+
+    from ..core.resources import BOARD_SLICES
+    t0 = time.monotonic()
+    dispatch_s = bench.measure_dispatch_s()
+    ici_bw = bench.measure_ici_bw()
+    solo_bw = bench.measure_hbm_bw(1)
+    share = [1.0]
+    for k in range(2, BOARD_SLICES + 1):
+        per_thread = bench.measure_hbm_bw(k)
+        share.append(max(min(per_thread / solo_bw, 1.0), 1e-3))
+    gflops = {name: bench.measure_gflops(n)
+              for name, n in CONTRACTION_SIZES.items()}
+    profile = CalibratedHardware(
+        backend=backend, n_devices=n_devices, cpu_count=cpu_count,
+        dispatch_s=dispatch_s, ici_bw=ici_bw, hbm_bw=solo_bw,
+        hbm_share=tuple(share), gflops=gflops, quick=bool(quick),
+        elapsed_s=time.monotonic() - t0)
+    if save:
+        profile.save(path)
+    return profile
+
+
+def calibrated_hardware(n_slices: int = 3, **kw):
+    """Measured ``Hardware`` board for this host (calibrating on demand)."""
+    return calibrate().hardware(n_slices=n_slices, **kw)
+
+
+# cached_profile memo: (path -> (mtime, profile)) so solve(graph, None)
+# does not re-read + re-parse the JSON on every solve.
+_PROFILE_MEMO: dict[str, tuple[float, CalibratedHardware]] = {}
+
+
+def cached_profile(path: str | None = None) -> CalibratedHardware | None:
+    """The host's cached profile, or ``None`` — never measures.
+
+    This is the solver's quiet default path (``solve(graph, None)``):
+    loading must not spend seconds timing hardware mid-solve.  On a host
+    with no calibration dir it returns ``None`` before touching JAX at
+    all; otherwise the host identity needs the backend name, imported
+    lazily (and by then the caller is about to run JAX anyway).
+    """
+    if path is None:
+        base = calibration_dir()
+        if not os.path.isdir(base) or not os.listdir(base):
+            return None             # uncalibrated host: stay JAX-free
+        try:
+            import jax
+            backend = jax.default_backend()
+            n_devices = jax.device_count()
+            cpu_count = os.cpu_count() or 1
+        except Exception:
+            return None
+        path = profile_path(backend, n_devices, cpu_count, base_dir=base)
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return None
+    hit = _PROFILE_MEMO.get(path)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    try:
+        profile = CalibratedHardware.load(path)
+    except (ValueError, OSError, json.JSONDecodeError):
+        return None
+    _PROFILE_MEMO[path] = (mtime, profile)
+    return profile
+
+
+def cached_hardware(n_slices: int = 3, **kw):
+    """Measured board from the cache, or ``None`` when uncalibrated."""
+    profile = cached_profile()
+    if profile is None:
+        return None
+    return profile.hardware(n_slices=n_slices, **kw)

@@ -1,0 +1,156 @@
+"""Microbenchmarks measuring the running host's actual rates.
+
+Four measurements, mirroring the profile fields (see ``profile.py``):
+
+(a) **dispatch** — per-call overhead of a warmed jitted no-op, timed with a
+    block per call (the host-side serialization cost a task launch pays);
+(b) **ici** — effective cross-slice transfer bandwidth: a device-to-device
+    copy when the host has several devices, else a jitted full-buffer pass
+    (the on-fabric copy a single-device "slice" stream degenerates to);
+(c) **hbm share** — streaming bandwidth of a memory-bound pass, solo and
+    with ``k`` host threads concurrently streaming their own buffers — the
+    measured counterpart of the cost model's per-wave ``bw_share``;
+(d) **contraction GFLOP/s** — steady-state matmul throughput at the sizes
+    in ``CONTRACTION_SIZES``.
+
+Every measurement is best-of-N over timed batches (the repo's standard
+steady-state methodology: batching amortizes scheduler noise, best-of
+filters interference).  ``Microbench`` is a plain object so tests inject a
+deterministic fake with the same surface — CI never times real hardware.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from .profile import CONTRACTION_SIZES
+
+
+def _best_rate(fn, *, units: float, inner: int, samples: int) -> float:
+    """Best ``units``-per-second over ``samples`` batches of ``inner``
+    back-to-back calls of ``fn`` (``fn`` must block before returning)."""
+    fn()                                        # warm up / compile
+    best = float("inf")
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return units / best
+
+
+class Microbench:
+    """The real measurement backend (imports JAX at construction).
+
+    ``quick=True`` shrinks buffers and repeat counts for smoke tests; the
+    defaults aim at a few seconds per measurement on a small CPU host.
+    """
+
+    def __init__(self, quick: bool = False):
+        import jax                              # deferred: profile loading
+        import jax.numpy as jnp                 # must not require jax
+        self._jax = jax
+        self._jnp = jnp
+        self.quick = quick
+        self._stream_elems = (1 << 21) if quick else (1 << 23)  # f32 elems
+        self._samples = 3 if quick else 5
+        self._inner = 4 if quick else 10
+
+    # -- host identity ----------------------------------------------------
+    def identity(self) -> tuple[str, int, int]:
+        """(backend, n_devices, cpu_count) — the profile cache key."""
+        import os
+        return (self._jax.default_backend(), self._jax.device_count(),
+                os.cpu_count() or 1)
+
+    # -- (a) dispatch overhead --------------------------------------------
+    def measure_dispatch_s(self) -> float:
+        jax, jnp = self._jax, self._jnp
+        x = jnp.zeros((8,), jnp.float32)
+        f = jax.jit(lambda v: v + 1.0)
+
+        def call():
+            f(x).block_until_ready()
+
+        rate = _best_rate(call, units=1.0, inner=50 if self.quick else 200,
+                          samples=self._samples)
+        return 1.0 / rate                       # seconds per dispatch
+
+    # -- (b) cross-slice transfer bandwidth -------------------------------
+    def measure_ici_bw(self) -> float:
+        jax, jnp = self._jax, self._jnp
+        n = self._stream_elems
+        x = jnp.zeros((n,), jnp.float32)
+        nbytes = float(n * 4)
+        devices = jax.devices()
+        if len(devices) > 1:
+            # real inter-device hop: place on device 1 from device 0
+            src = jax.device_put(x, devices[0])
+            src.block_until_ready()
+
+            def call():
+                jax.device_put(src, devices[1]).block_until_ready()
+        else:
+            # single-device host: a cross-slice stream degenerates to an
+            # on-fabric buffer pass; a jitted whole-buffer op measures it
+            f = jax.jit(lambda v: v + 0.0)
+
+            def call():
+                f(x).block_until_ready()
+
+        return _best_rate(call, units=nbytes, inner=self._inner,
+                          samples=self._samples)
+
+    # -- (c) HBM bandwidth under concurrently-active slices ---------------
+    def measure_hbm_bw(self, n_concurrent: int = 1) -> float:
+        """Per-thread achieved streaming bytes/s with ``n_concurrent``
+        threads each streaming a private buffer (k=1 is the solo rate the
+        share curve normalizes against)."""
+        jax, jnp = self._jax, self._jnp
+        n = self._stream_elems
+        nbytes = float(n * 4)
+        f = jax.jit(lambda v: v + 1.0)
+        bufs = [jnp.full((n,), float(i), jnp.float32)
+                for i in range(max(n_concurrent, 1))]
+        for b in bufs:
+            f(b).block_until_ready()            # compile once, fault in
+        inner = self._inner
+        barrier = threading.Barrier(len(bufs))
+        rates = [0.0] * len(bufs)
+
+        def worker(i: int) -> None:
+            buf = bufs[i]
+            barrier.wait()
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                f(buf).block_until_ready()
+            rates[i] = nbytes * inner / (time.perf_counter() - t0)
+
+        best = 0.0
+        for _ in range(self._samples):
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(len(bufs))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            best = max(best, sum(rates) / len(rates))
+        return best
+
+    # -- (d) steady-state contraction GFLOP/s -----------------------------
+    def measure_gflops(self, n: int) -> float:
+        jax, jnp = self._jax, self._jnp
+        if self.quick:
+            n = min(n, CONTRACTION_SIZES["medium"])
+        key = jax.random.PRNGKey(0)
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (n, n), jnp.float32)
+        b = jax.random.normal(kb, (n, n), jnp.float32)
+        f = jax.jit(lambda x, y: x @ y)
+
+        def call():
+            f(a, b).block_until_ready()
+
+        flops = 2.0 * n * n * n
+        return _best_rate(call, units=flops, inner=self._inner,
+                          samples=self._samples) / 1e9

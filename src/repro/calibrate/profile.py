@@ -1,0 +1,122 @@
+"""``CalibratedHardware``: measured host rates the cost model consumes.
+
+The static constants in ``repro.core.resources`` describe a TPU v5e; the
+host actually running the executables (a CPU container, a different TPU
+generation, a shared dev box) has different ratios of compute to bandwidth
+to dispatch overhead — and those *ratios* are what the solver's slice
+assignment and streaming decisions turn on.  A profile holds the four
+measured quantities the microbenchmark suite (``repro.calibrate.
+microbench``) produces:
+
+* ``dispatch_s``   — per-dispatch overhead of a jitted call (a);
+* ``ici_bw``       — effective cross-slice transfer bandwidth (b);
+* ``hbm_bw`` / ``hbm_share`` — solo streaming bandwidth and the per-slice
+  share of it under k concurrently-active slices (c);
+* ``gflops``       — steady-state GFLOP/s of small/medium/large
+  contractions (d); ``peak_flops`` is the best sustained rate.
+
+Profiles are JSON-serializable and cached under ``REPRO_CALIBRATION_DIR``
+(one file per host identity) so calibration runs once per host, not once
+per process.  ``hardware()`` turns a profile into the ``Hardware`` board
+the solver consumes in place of the static constants.
+
+This module is import-light (no JAX): the solver can *load* a profile
+without touching the runtime; only measuring needs ``microbench``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+SCHEMA_VERSION = 1
+
+#: Contraction sizes (n, for an n x n x n matmul) behind the ``gflops``
+#: entries — small is dispatch/latency-bound, large is steady-state MXU/FPU
+#: throughput.  Keys are the profile's ``gflops`` dict keys.
+CONTRACTION_SIZES: dict[str, int] = {"small": 128, "medium": 256,
+                                     "large": 512}
+
+
+def calibration_dir() -> str:
+    """Directory holding cached profiles (``REPRO_CALIBRATION_DIR``)."""
+    return os.environ.get("REPRO_CALIBRATION_DIR") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-calibration")
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedHardware:
+    """Measured rates of the running host, in cost-model units."""
+
+    backend: str                    # jax backend name ("cpu", "tpu", ...)
+    n_devices: int
+    cpu_count: int
+    dispatch_s: float               # (a) seconds per jitted dispatch
+    ici_bw: float                   # (b) bytes/s across slices
+    hbm_bw: float                   # (c) bytes/s solo streaming
+    hbm_share: tuple[float, ...]    # (c) share[k-1]: per-slice fraction
+    gflops: dict[str, float]        # (d) size class -> measured GFLOP/s
+    quick: bool = False             # smoke-quality measurement fidelity
+    elapsed_s: float = 0.0          # how long calibration took
+    schema: int = SCHEMA_VERSION
+
+    @property
+    def peak_flops(self) -> float:
+        """Best sustained FLOP/s across the contraction size classes."""
+        return max(self.gflops.values()) * 1e9
+
+    @property
+    def host_key(self) -> str:
+        """Cache-file identity of the host this profile describes."""
+        return f"{self.backend}-{self.n_devices}dev-{self.cpu_count}cpu"
+
+    # -- serialization ----------------------------------------------------
+    def to_jsonable(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hbm_share"] = list(self.hbm_share)
+        return d
+
+    @staticmethod
+    def from_jsonable(d: dict) -> "CalibratedHardware":
+        if d.get("schema", 0) != SCHEMA_VERSION:
+            raise ValueError(
+                f"calibration schema {d.get('schema')!r} != "
+                f"{SCHEMA_VERSION} — re-run calibration")
+        fields = {f.name for f in dataclasses.fields(CalibratedHardware)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["hbm_share"] = tuple(kw.get("hbm_share", ()))
+        kw["gflops"] = dict(kw.get("gflops", {}))
+        return CalibratedHardware(**kw)
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(self.to_jsonable(), f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)   # atomic: concurrent calibrators race safe
+        return path
+
+    @staticmethod
+    def load(path: str) -> "CalibratedHardware":
+        with open(path) as f:
+            return CalibratedHardware.from_jsonable(json.load(f))
+
+    # -- consumption ------------------------------------------------------
+    def hardware(self, n_slices: int = 3, chips_per_slice: int = 1,
+                 compute_frac: float = 1.0, vmem_frac: float = 1.0):
+        """The measured board: a ``Hardware`` whose rates are this profile.
+
+        The cost model then prices compute with measured FLOP/s, transfers
+        with measured HBM/ICI bandwidth, concurrent waves with the measured
+        share curve, and task launches with the measured dispatch overhead
+        — so slice assignment and stream decisions answer to this host, not
+        to the static TPU constants.
+        """
+        from ..core.resources import Hardware
+        return Hardware.make(
+            n_slices=n_slices, chips_per_slice=chips_per_slice,
+            compute_frac=compute_frac, vmem_frac=vmem_frac,
+            peak_flops=self.peak_flops, hbm_bw=self.hbm_bw,
+            ici_bw=self.ici_bw, dispatch_s=self.dispatch_s,
+            hbm_share=self.hbm_share or None)

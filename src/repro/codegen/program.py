@@ -22,8 +22,11 @@ generation of that engine, with three production mechanisms on top:
 * **bounded LRU program cache** — programs are cached process-wide, keyed by
   (graph fingerprint, plan fingerprint, impl), with per-entry hit/last-use/
   size stats and LRU eviction at ``REPRO_PROGRAM_CACHE_SIZE`` entries, so a
-  replica serving many distinct plans has a bounded footprint.  A persistent
-  AOT compilation cache (``jax_compilation_cache_dir``, exposed as
+  replica serving many distinct plans has a bounded footprint.  Cache and
+  pool are thread-safe: concurrent servers hit under the cache lock,
+  misses for the same key compile once behind a per-key build lock, and
+  the round-robin cursor never hands two callers the same clone index.
+  A persistent AOT cache (``jax_compilation_cache_dir``, exposed as
   :func:`enable_persistent_cache` / ``REPRO_COMPILATION_CACHE_DIR``) lets
   replicas share lowered XLA artifacts across processes: a warm replica's
   first compile of a known program deserializes instead of re-lowering.
@@ -37,8 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import itertools
 import os
+import threading
 import time
 from collections import OrderedDict
 from typing import Callable
@@ -241,9 +244,10 @@ class PlanProgram:
         self._devices = tuple(jax.devices())
         self._multi = len(self._devices) > 1 and self.schedule.multi_slice
         self._traces = 0
-        # atomic under the GIL (single C-level next()), so concurrent
-        # callers round-robin onto distinct clones without a lock
-        self._cursor = itertools.count()
+        # one lock for the serving counters: concurrent submit threads
+        # round-robin onto distinct clones (every call gets a unique
+        # index) and `calls`/`trace_count` never lose updates
+        self._counter_lock = threading.Lock()
         self._calls = 0
         if os.environ.get("REPRO_PROGRAM_SEGMENT", "1") == "0":
             # debug escape hatch: single-executable lowering, barrier-pinned
@@ -295,7 +299,8 @@ class PlanProgram:
         tids = frozenset(seg.tids)
 
         def body(*flat: jax.Array):
-            self._traces += 1
+            with self._counter_lock:
+                self._traces += 1
             env: dict[str, jax.Array] = dict(zip(seg.in_arrays, flat))
             placed: dict[tuple[str, int], jax.Array] = {}
 
@@ -353,9 +358,10 @@ class PlanProgram:
 
     # -- execution --------------------------------------------------------
     def __call__(self, inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
-        i = next(self._cursor)
+        with self._counter_lock:
+            i = self._calls
+            self._calls = i + 1
         fns = self._pool[i % self.pool_size]
-        self._calls = i + 1
         if self._single:
             seg = self.segments[0]
             outs = fns[0](*[inputs[a] for a in seg.in_arrays])
@@ -388,15 +394,22 @@ class CacheEntry:
 
 
 class ProgramCache:
-    """Bounded LRU cache of compiled plan programs.
+    """Bounded LRU cache of compiled plan programs — thread-safe.
 
     Keys are (graph fingerprint, plan fingerprint, impl).  A ``get`` moves
     the entry to the MRU position; inserting beyond ``capacity`` evicts the
     LRU entry (its jitted executables die with it once callers drop their
     references).
+
+    Every operation holds ``lock`` (an RLock): concurrent ``submit``
+    threads used to race the OrderedDict mutation in get/put (move_to_end
+    during iteration, double evictions, lost hit counts).  Compilation
+    itself happens *outside* this lock — see :func:`compiled_program` —
+    so a slow build never stalls unrelated hits.
     """
 
     def __init__(self, capacity: int = DEFAULT_CACHE_SIZE):
+        self.lock = threading.RLock()
         self.capacity = max(1, capacity)
         self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
         self.hits = 0
@@ -404,66 +417,91 @@ class ProgramCache:
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self.lock:
+            return len(self._entries)
 
     def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
+        with self.lock:
+            return key in self._entries
 
     def keys(self) -> list[tuple]:
         """LRU -> MRU order (eviction order is the front of this list)."""
-        return list(self._entries)
+        with self.lock:
+            return list(self._entries)
 
     def entry(self, key: tuple) -> CacheEntry | None:
         """Peek an entry without touching LRU order or hit counts."""
-        return self._entries.get(key)
+        with self.lock:
+            return self._entries.get(key)
 
     def get(self, key: tuple) -> PlanProgram | None:
         """Hit path: O(1), no fingerprinting — serving engines resolve a
         precomputed key here on every request."""
-        entry = self._entries.get(key)
-        if entry is None:
-            return None
-        self._entries.move_to_end(key)
-        entry.hits += 1
-        entry.last_use = time.monotonic()
-        self.hits += 1
-        return entry.program
+        with self.lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                return None
+            self._entries.move_to_end(key)
+            entry.hits += 1
+            entry.last_use = time.monotonic()
+            self.hits += 1
+            return entry.program
+
+    def get_if(self, key: tuple, pool_size: int | None) -> PlanProgram | None:
+        """Hit only when the cached program satisfies the caller's pool
+        contract (``pool_size=None`` accepts any); a contract mismatch is
+        not a hit — the caller will rebuild."""
+        with self.lock:
+            entry = self._entries.get(key)
+            if entry is None or (pool_size is not None
+                                 and entry.program.pool_size != pool_size):
+                return None
+            return self.get(key)
+
+    def count_miss(self) -> None:
+        with self.lock:
+            self.misses += 1
 
     def put(self, key: tuple, program: PlanProgram) -> PlanProgram:
-        self._entries[key] = CacheEntry(
-            program=program, last_use=time.monotonic(),
-            est_bytes=program.est_bytes())
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.evictions += 1
-        return program
+        with self.lock:
+            self._entries[key] = CacheEntry(
+                program=program, last_use=time.monotonic(),
+                est_bytes=program.est_bytes())
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+            return program
 
     def resize(self, capacity: int) -> None:
-        self.capacity = max(1, capacity)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+        with self.lock:
+            self.capacity = max(1, capacity)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        with self.lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
 
     def stats(self, detail: bool = False) -> dict:
-        out = {
-            "size": len(self._entries),
-            "capacity": self.capacity,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "est_bytes": sum(e.est_bytes for e in self._entries.values()),
-        }
-        if detail:
-            out["entries"] = {"/".join(k): e.stats()
-                              for k, e in self._entries.items()}
-        return out
+        with self.lock:
+            out = {
+                "size": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "est_bytes": sum(e.est_bytes
+                                 for e in self._entries.values()),
+            }
+            if detail:
+                out["entries"] = {"/".join(k): e.stats()
+                                  for k, e in self._entries.items()}
+            return out
 
 
 _CACHE = ProgramCache(_env_int("REPRO_PROGRAM_CACHE_SIZE",
@@ -481,6 +519,25 @@ def set_program_cache_size(capacity: int) -> None:
     _CACHE.resize(capacity)
 
 
+# Per-key build locks: concurrent misses for the SAME program compile once
+# (the second thread blocks, then hits), while different keys build in
+# parallel.  The registry itself is guarded and bounded; clearing it only
+# risks one duplicate build per cleared key, never corruption.
+_BUILD_LOCKS: dict[tuple, threading.Lock] = {}
+_BUILD_LOCKS_GUARD = threading.Lock()
+_BUILD_LOCKS_MAX = 1024
+
+
+def _build_lock(key: tuple) -> threading.Lock:
+    with _BUILD_LOCKS_GUARD:
+        lock = _BUILD_LOCKS.get(key)
+        if lock is None:
+            if len(_BUILD_LOCKS) >= _BUILD_LOCKS_MAX:
+                _BUILD_LOCKS.clear()
+            lock = _BUILD_LOCKS.setdefault(key, threading.Lock())
+        return lock
+
+
 def compiled_program(graph: TaskGraph, plan: ExecutionPlan, impl: str,
                      fg: FusedGraph | None = None,
                      schedule: WaveSchedule | None = None,
@@ -491,17 +548,24 @@ def compiled_program(graph: TaskGraph, plan: ExecutionPlan, impl: str,
     so a repeated call with identical input shapes/dtypes re-lowers and
     re-traces nothing.  An explicit ``pool_size`` differing from the cached
     entry rebuilds it (the pool is part of the execution contract).
+
+    Thread-safe: cache bookkeeping happens under the cache lock, the build
+    under a per-key lock (N threads missing the same cold program compile
+    it once; distinct programs still compile concurrently).
     """
     _auto_enable_persistent_cache()
     key = program_key(graph, plan, impl)
-    entry = _CACHE.entry(key)
-    if entry is not None and (pool_size is None
-                              or entry.program.pool_size == pool_size):
-        return _CACHE.get(key)
-    _CACHE.misses += 1
-    prog = PlanProgram(graph, plan, impl, fg=fg, schedule=schedule,
-                       pool_size=pool_size)
-    return _CACHE.put(key, prog)
+    prog = _CACHE.get_if(key, pool_size)
+    if prog is not None:
+        return prog
+    with _build_lock(key):
+        prog = _CACHE.get_if(key, pool_size)    # built while we waited?
+        if prog is not None:
+            return prog
+        _CACHE.count_miss()
+        built = PlanProgram(graph, plan, impl, fg=fg, schedule=schedule,
+                            pool_size=pool_size)
+        return _CACHE.put(key, built)
 
 
 def cache_stats(detail: bool = False) -> dict:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..core.costmodel import topo_waves
 from ..core.fusion import FusedGraph
 from ..core.plan import ExecutionPlan
 
@@ -77,6 +78,14 @@ class WaveSchedule:
     def max_width(self) -> int:
         return max(len(w) for w in self.waves) if self.waves else 0
 
+    @property
+    def wave_slice_counts(self) -> tuple[int, ...]:
+        """Distinct slices concurrently active in each wave — the counts the
+        cost model's per-wave HBM share uses (``costmodel.plan_latency``)
+        and what a calibrated ``hbm_share`` curve is indexed by."""
+        return tuple(len({self.slice_of[t] for t in wave})
+                     for wave in self.waves)
+
     def concurrent_groups(self, wave: int) -> dict[int, tuple[int, ...]]:
         """Tasks of ``wave`` keyed by slice — distinct keys run concurrently."""
         out: dict[int, list[int]] = {}
@@ -97,11 +106,12 @@ class WaveSchedule:
 
 
 def wave_schedule(fg: FusedGraph, plan: ExecutionPlan) -> WaveSchedule:
-    """Derive the wave schedule of ``plan`` over the fused DAG ``fg``."""
-    preds = {t.tid: [u for (u, _) in fg.preds(t.tid)] for t in fg.tasks}
-    wave_of: dict[int, int] = {}
-    for tid in fg.topo_order():
-        wave_of[tid] = 1 + max((wave_of[u] for u in preds[tid]), default=-1)
+    """Derive the wave schedule of ``plan`` over the fused DAG ``fg``.
+
+    Waves come from :func:`repro.core.costmodel.topo_waves` — the same
+    levels the cost model prices, so what the solver optimized is what the
+    executors run."""
+    wave_of = topo_waves(fg)
     n_waves = 1 + max(wave_of.values()) if wave_of else 0
     waves = tuple(tuple(sorted(t for t, w in wave_of.items() if w == wi))
                   for wi in range(n_waves))

@@ -9,8 +9,8 @@ from .fusion import FusedGraph, FusedTask, fuse
 from .padding import TileOption, tile_options, communication_padding
 from .plan import ArrayPlacement, ExecutionPlan, TaskConfig, TaskReport
 from .resources import Hardware, Slice, ONE_SLICE, THREE_SLICE
-from .solver import (SolverOptions, build_graph, measure_plan, solve,
-                     steady_state_s)
+from .solver import (SolverOptions, build_graph, default_hardware,
+                     measure_plan, solve, steady_state_s)
 from . import polybench
 
 # Codegen is layered above core (it consumes plans).  Resolved lazily
@@ -33,6 +33,6 @@ __all__ = [
     "ArrayPlacement", "ExecutionPlan", "TaskConfig", "TaskReport",
     "Hardware", "Slice", "ONE_SLICE", "THREE_SLICE",
     "SolverOptions", "solve", "polybench",
-    "build_graph", "measure_plan", "steady_state_s",
+    "build_graph", "default_hardware", "measure_plan", "steady_state_s",
     "plan_executor", "random_inputs", "reference_executor",
 ]

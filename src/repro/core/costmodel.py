@@ -316,7 +316,16 @@ def edge_order_compatible(fg: FusedGraph, configs: Mapping[int, TaskConfig],
 
 
 def dag_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
-                reports: Mapping[int, TaskReport]) -> float:
+                reports: Mapping[int, TaskReport],
+                dispatch_s: float = 0.0) -> float:
+    """Makespan of the DAG (Eqs. 12-13).
+
+    ``dispatch_s`` is the fixed per-task host dispatch overhead (calibrated
+    ``Hardware.dispatch_s``; 0 under the static model).  It serializes with
+    the task on its slice, so co-locating independent tasks pays it once
+    per task back-to-back while spreading them overlaps it — the measured
+    "dispatch saving" the solver weighs against stream cost.
+    """
     start: dict[int, float] = {}
     finish: dict[int, float] = {}
     slice_free: dict[int, float] = {}
@@ -332,7 +341,7 @@ def dag_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
                 # through the FIFO...
                 out_tiles = max(_n_out_tiles(fg, u, configs[u]), 1)
                 first_tile = reports[u].latency_s / out_tiles
-                ready = max(ready, start[u] + first_tile)
+                ready = max(ready, start[u] + dispatch_s + first_tile)
                 # ...but cannot drain the last tile before the producer
                 # emits it: finish >= producer finish + one tile hop.
                 ready = max(ready, finish[u] + first_tile - rep.latency_s)
@@ -340,7 +349,7 @@ def dag_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
                 ready = max(ready, finish[u])
         s0 = max(ready, slice_free.get(cfg.slice_id, 0.0))
         start[tid] = s0
-        finish[tid] = s0 + rep.latency_s
+        finish[tid] = s0 + dispatch_s + rep.latency_s
         slice_free[cfg.slice_id] = finish[tid]
     return max(finish[t] for t in fg.sinks())
 
@@ -356,10 +365,48 @@ def _n_out_tiles(fg: FusedGraph, tid: int, cfg: TaskConfig) -> int:
     return n
 
 
+def topo_waves(fg: FusedGraph) -> dict[int, int]:
+    """Topological level of every task: wave ``w`` tasks have all producers
+    in waves ``< w``, so same-wave tasks are mutually independent.  This is
+    the cost model's view of the wave schedule the executors run
+    (``repro.codegen.schedule`` derives its waves from this function).
+
+    Memoized on the graph object (the ``_access_of`` idiom): the solver's
+    assignment search calls ``plan_latency`` thousands of times per solve
+    and the waves depend only on graph structure, never on the candidate
+    plan.  Callers must treat the returned dict as read-only.
+    """
+    cache = getattr(fg, "_wave_cache", None)
+    if cache is None or cache[0] != len(fg.tasks):
+        preds = {t.tid: [u for (u, _) in fg.preds(t.tid)] for t in fg.tasks}
+        wave_of: dict[int, int] = {}
+        for tid in fg.topo_order():
+            wave_of[tid] = 1 + max((wave_of[u] for u in preds[tid]),
+                                   default=-1)
+        cache = (len(fg.tasks), wave_of)
+        fg._wave_cache = cache
+    return cache[1]
+
+
 def plan_latency(fg: FusedGraph, configs: Mapping[int, TaskConfig],
                  hw: Hardware) -> tuple[float, dict[int, TaskReport]]:
-    n_active = max(len({c.slice_id for c in configs.values()}), 1)
-    reports = {t.tid: task_report(t, configs[t.tid], fg, hw,
-                                  bw_share=1.0 / n_active)
-               for t in fg.tasks}
-    return dag_latency(fg, configs, reports), reports
+    """DAG makespan + per-task reports under ``hw``.
+
+    HBM bandwidth is shared among the slices *concurrently active in the
+    same wave*, not among every slice the plan uses anywhere: a 3-wave
+    plan whose waves each run on one slice keeps full bandwidth per task.
+    (Charging the whole-plan slice count overcharged multi-wave plans and
+    biased the solver toward single-slice assignments.)
+    """
+    wave_of = topo_waves(fg)
+    wave_slices: dict[int, set[int]] = {}
+    for t in fg.tasks:
+        wave_slices.setdefault(wave_of[t.tid], set()) \
+            .add(configs[t.tid].slice_id)
+    reports = {
+        t.tid: task_report(
+            t, configs[t.tid], fg, hw,
+            bw_share=hw.bw_share_at(len(wave_slices[wave_of[t.tid]])))
+        for t in fg.tasks}
+    return dag_latency(fg, configs, reports,
+                       dispatch_s=hw.dispatch_s), reports

@@ -101,19 +101,23 @@ class Slice:
     # (e.g. "60% of one SLR" in the on-board evaluation).
     compute_frac: float = 1.0
     vmem_frac: float = 1.0
+    # Board-level rates this slice divides — overridden by calibration
+    # (repro.calibrate) with rates measured on the running host.
+    board_flops: float = PEAK_FLOPS_BF16
+    board_hbm_bw: float = HBM_BW
 
     @property
     def flops(self) -> float:
-        """Peak of ONE region = chip peak / BOARD_SLICES."""
-        return PEAK_FLOPS_BF16 / BOARD_SLICES * self.chips \
+        """Peak of ONE region = board peak / BOARD_SLICES."""
+        return self.board_flops / BOARD_SLICES * self.chips \
             * self.compute_frac
 
     @property
     def hbm_bw(self) -> float:
         """A single active region can saturate the full HBM system; the
-        schedule-level share (1/active slices) is applied by the cost
-        model (plan_latency) — DRAM channels are a board resource."""
-        return HBM_BW * self.chips
+        schedule-level share (per-wave active slices) is applied by the
+        cost model (plan_latency) — DRAM channels are a board resource."""
+        return self.board_hbm_bw * self.chips
 
     @property
     def vmem(self) -> float:
@@ -122,25 +126,58 @@ class Slice:
 
 @dataclasses.dataclass(frozen=True)
 class Hardware:
-    """Board-level description: a set of slices plus interconnect."""
+    """Board-level description: a set of slices plus interconnect.
+
+    The rate fields default to the static TPU-v5e constants above; a
+    calibrated board (``repro.calibrate.CalibratedHardware.hardware()``)
+    replaces them with rates *measured on the running host*, including two
+    terms the static model has no number for:
+
+    * ``dispatch_s`` — fixed per-task host dispatch overhead.  Tasks on the
+      same slice serialize their dispatches; tasks on different slices
+      overlap them, so this is exactly the "dispatch saving" the solver
+      weighs against cross-slice stream cost.
+    * ``hbm_share`` — measured per-slice fraction of solo HBM bandwidth
+      when ``k`` slices are concurrently active (index ``k-1``).  Real
+      memory systems de-rate more gracefully than the analytic ``1/k``.
+    """
 
     slices: tuple[Slice, ...]
     ici_bw: float = ICI_BW       # bytes/s between slices (FIFO/stream analogue)
     hbm_bw: float = HBM_BW       # bytes/s off-chip, shared across slices
     vmem: float = VMEM_BYTES
     peak_flops: float = PEAK_FLOPS_BF16
+    dispatch_s: float = 0.0      # per-task dispatch overhead (calibrated)
+    hbm_share: tuple[float, ...] | None = None   # measured share curve
 
     @staticmethod
     def make(n_slices: int = 1, chips_per_slice: int = 1,
-             compute_frac: float = 1.0, vmem_frac: float = 1.0) -> "Hardware":
-        return Hardware(slices=tuple(
-            Slice(sid=i, chips=chips_per_slice, compute_frac=compute_frac,
-                  vmem_frac=vmem_frac)
-            for i in range(n_slices)))
+             compute_frac: float = 1.0, vmem_frac: float = 1.0,
+             peak_flops: float = PEAK_FLOPS_BF16, hbm_bw: float = HBM_BW,
+             ici_bw: float = ICI_BW, dispatch_s: float = 0.0,
+             hbm_share: tuple[float, ...] | None = None) -> "Hardware":
+        return Hardware(
+            slices=tuple(
+                Slice(sid=i, chips=chips_per_slice,
+                      compute_frac=compute_frac, vmem_frac=vmem_frac,
+                      board_flops=peak_flops, board_hbm_bw=hbm_bw)
+                for i in range(n_slices)),
+            ici_bw=ici_bw, hbm_bw=hbm_bw, peak_flops=peak_flops,
+            dispatch_s=dispatch_s, hbm_share=hbm_share)
 
     @property
     def n_slices(self) -> int:
         return len(self.slices)
+
+    def bw_share_at(self, n_active: int) -> float:
+        """Per-slice fraction of solo HBM bandwidth when ``n_active``
+        slices are concurrently active in the same wave.  Uses the
+        measured share curve when calibrated, the analytic ``1/n``
+        split otherwise."""
+        n = max(int(n_active), 1)
+        if self.hbm_share:
+            return self.hbm_share[min(n, len(self.hbm_share)) - 1]
+        return 1.0 / n
 
 
 # Canonical boards used by benchmarks (Table 8 analogue: "1 SLR" vs "3 SLR").

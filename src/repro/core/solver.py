@@ -39,7 +39,7 @@ from .costmodel import footprint_elems, n_transfers, plan_latency, task_report
 from .fusion import FusedGraph, FusedTask, fuse
 from .padding import TileOption, tile_options
 from .plan import ArrayPlacement, ExecutionPlan, TaskConfig, TaskReport
-from .resources import Hardware
+from .resources import Hardware, THREE_SLICE
 from .taskgraph import TaskGraph, legal_permutations
 
 
@@ -430,9 +430,25 @@ def _evaluate(fg: FusedGraph, choice: dict[int, TaskChoice],
     return lat, cfgs, reports
 
 
-def solve(graph: TaskGraph, hw: Hardware,
+def default_hardware(n_slices: int = 3) -> Hardware:
+    """The board ``solve`` uses when the caller passes ``hw=None``: this
+    host's cached calibrated profile (``repro.calibrate``) so slice and
+    stream decisions answer to measured rates, falling back to the static
+    TPU constants when the host was never calibrated.  Never measures —
+    run ``scripts/calibrate.py`` (or ``repro.calibrate.calibrate()``) once
+    per host to materialize the profile."""
+    from ..calibrate import cached_hardware
+    hw = cached_hardware(n_slices=n_slices)
+    if hw is not None:
+        return hw
+    return THREE_SLICE if n_slices == 3 else Hardware.make(n_slices=n_slices)
+
+
+def solve(graph: TaskGraph, hw: Hardware | None = None,
           opts: SolverOptions | None = None) -> ExecutionPlan:
     opts = opts or SolverOptions()
+    if hw is None:
+        hw = default_hardware()
     caps = opts.caps
     t0 = time.monotonic()
     deadline = t0 + opts.time_budget_s

@@ -15,6 +15,7 @@ hits a fully compiled program with zero re-lowering or re-tracing.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from functools import partial
 from typing import Any
@@ -111,6 +112,12 @@ class PlanEngine:
     cache directory (cross-replica artifact sharing / warm start),
     program-cache bound, executable-pool size, and the registration
     admission cap.
+
+    Thread-safe: N server threads may ``submit`` (and register/unregister)
+    against one engine concurrently — registry, key table and request
+    counters mutate under an engine lock, the program cache under its own
+    lock, and program execution itself runs outside both, so requests for
+    warm programs never serialize on each other.
     """
 
     def __init__(self, impl: str | None = None,
@@ -122,6 +129,7 @@ class PlanEngine:
             enable_persistent_cache(self.sc.compilation_cache_dir)
         if self.sc.program_cache_size is not None:
             set_program_cache_size(self.sc.program_cache_size)
+        self._lock = threading.RLock()
         self._registry: dict[str, tuple[Any, Any]] = {}
         # (name, impl) -> program-cache key: fingerprints are hashed once
         # per registration, not per request — submit() is pure dispatch
@@ -133,52 +141,82 @@ class PlanEngine:
     def register(self, name: str, graph, plan) -> None:
         """Admit a (graph, plan) pair; past ``sc.max_plans`` registrations
         the least-recently-submitted name is evicted first."""
-        if self.sc.max_plans is not None and name not in self._registry:
-            while len(self._registry) >= max(1, self.sc.max_plans):
-                lru = min(self._registry,
-                          key=lambda n: self._last_use.get(n, 0.0))
-                self.unregister(lru)
-        self._registry[name] = (graph, plan)
-        self._last_use[name] = time.monotonic()
-        self._keys = {k: v for k, v in self._keys.items() if k[0] != name}
+        with self._lock:
+            if self.sc.max_plans is not None and name not in self._registry:
+                while len(self._registry) >= max(1, self.sc.max_plans):
+                    lru = min(self._registry,
+                              key=lambda n: self._last_use.get(n, 0.0))
+                    self.unregister(lru)
+            self._registry[name] = (graph, plan)
+            self._last_use[name] = time.monotonic()
+            self._keys = {k: v for k, v in self._keys.items()
+                          if k[0] != name}
 
     def unregister(self, name: str) -> None:
-        self._registry.pop(name, None)
-        self._last_use.pop(name, None)
-        self.per_name.pop(name, None)
-        self._keys = {k: v for k, v in self._keys.items() if k[0] != name}
+        with self._lock:
+            self._registry.pop(name, None)
+            self._last_use.pop(name, None)
+            self.per_name.pop(name, None)
+            self._keys = {k: v for k, v in self._keys.items()
+                          if k[0] != name}
 
     def names(self) -> list[str]:
-        return sorted(self._registry)
+        with self._lock:
+            return sorted(self._registry)
 
     def warmup(self, name: str, inputs: dict) -> float:
         """Compile-and-first-run; returns seconds spent (the cold cost the
-        cache amortizes away for every later request).  With a persistent
+        cache amortizes away for every later request).
+
+        Warms **every** pool clone, not just clone 0 — otherwise the first
+        ``pool_size - 1`` concurrent requests after warmup each pay a
+        first-call trace on a cold clone.  Every warmup execution flows
+        through :meth:`submit`, so per-entry hit counters, LRU recency and
+        ``per_name`` accounting all see the warmup (a just-warmed plan is
+        MRU, never the next eviction victim).  With a persistent
         compilation cache configured, a replica warming a program another
         replica already compiled deserializes the artifact instead of
         re-lowering — the warm-start path."""
+        from ..codegen import program_cache
+        from ..kernels import dispatch
         t0 = time.monotonic()
         out = self.submit(name, inputs)
         for v in out.values():
             v.block_until_ready()
+        impl = self._impl or dispatch.current_impl()
+        if self.sc.pool_size is not None:
+            # the engine's own pool contract — valid even if the entry was
+            # already evicted again by a concurrent replica
+            clones = self.sc.pool_size
+        else:
+            with self._lock:
+                key = self._keys.get((name, impl))
+            entry = program_cache().entry(key) if key is not None else None
+            clones = entry.program.pool_size if entry is not None else 1
+        for _ in range(clones - 1):
+            out = self.submit(name, inputs)
+            for v in out.values():
+                v.block_until_ready()
         return time.monotonic() - t0
 
     def _resolve(self, name: str, impl: str):
         from ..codegen import compiled_program, program_cache, program_key
-        key = self._keys.get((name, impl))
-        if key is not None:
-            prog = program_cache().get(key)
-            if prog is not None and (self.sc.pool_size is None
-                                     or prog.pool_size == self.sc.pool_size):
-                return prog
-            # miss, or another caller rebuilt the entry with a different
-            # pool: fall through and re-admit it under this engine's
-            # configured pool contract
-        graph, plan = self._registry[name]
-        if key is None:
-            key = program_key(graph, plan, impl)
-            self._keys[(name, impl)] = key
-        # miss or evicted: build (compiled_program re-admits it as MRU)
+        with self._lock:
+            key = self._keys.get((name, impl))
+            if key is None:
+                graph, plan = self._registry[name]
+                key = program_key(graph, plan, impl)
+                self._keys[(name, impl)] = key
+            else:
+                graph, plan = self._registry[name]
+        # fast path: an O(1) keyed hit honouring this engine's pool
+        # contract (a pool-mismatched entry is NOT counted as a hit —
+        # compiled_program rebuilds and re-admits it below)
+        prog = program_cache().get_if(key, self.sc.pool_size)
+        if prog is not None:
+            return prog
+        # miss or evicted or foreign pool: build once (per-key build lock
+        # inside compiled_program), re-admitted as MRU
         return compiled_program(graph, plan, impl,
                                 pool_size=self.sc.pool_size)
 
@@ -187,9 +225,10 @@ class PlanEngine:
         from ..kernels import dispatch
         impl = self._impl or dispatch.current_impl()
         prog = self._resolve(name, impl)
-        self.requests += 1
-        self.per_name[name] = self.per_name.get(name, 0) + 1
-        self._last_use[name] = time.monotonic()
+        with self._lock:
+            self.requests += 1
+            self.per_name[name] = self.per_name.get(name, 0) + 1
+            self._last_use[name] = time.monotonic()
         return prog(inputs)
 
     def stats(self) -> dict:
@@ -198,8 +237,13 @@ class PlanEngine:
         per-pool occupancy of every program this engine serves."""
         from ..codegen import cache_stats, persistent_cache_dir, program_cache
         cache = program_cache()
+        with self._lock:
+            keys = dict(self._keys)
+            requests = self.requests
+            registered = len(self._registry)
+            per_name = dict(self.per_name)
         pools = {}
-        for (name, impl), key in self._keys.items():
+        for (name, impl), key in keys.items():
             entry = cache.entry(key)
             if entry is not None:
                 p = entry.program
@@ -211,9 +255,9 @@ class PlanEngine:
                 }
         s = cache_stats(detail=True)
         hit_rate = s["hits"] / max(1, s["hits"] + s["misses"])
-        return {"requests": self.requests,
-                "registered": len(self._registry),
-                "per_name": dict(self.per_name),
+        return {"requests": requests,
+                "registered": registered,
+                "per_name": per_name,
                 "hit_rate": round(hit_rate, 4),
                 "pools": pools,
                 "persistent_cache_dir": persistent_cache_dir(),

@@ -104,3 +104,112 @@ def test_committed_baseline_is_gateable():
     data = json.loads(path.read_text())
     failures = bench_compare.compare(data, data, floors={"gemver": 0.9})
     assert failures == []
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-serving gate
+# ---------------------------------------------------------------------------
+def _cbench(pools: dict, norm: str = "1") -> dict:
+    return {"benchmark": "concurrent_serving",
+            "scaling_baseline_pool": norm, "pools": pools}
+
+
+def _pool(scaling: float, *, validated: bool = True, lost: int = 0,
+          errors: list | None = None, rps: float = 1000.0) -> dict:
+    return {"throughput_rps": rps, "scaling_vs_first": scaling,
+            "validated": validated, "lost_updates": lost,
+            "errors": errors or []}
+
+
+def test_concurrent_gate_passes_on_equal_runs():
+    base = _cbench({"1": _pool(1.0), "2": _pool(1.1), "4": _pool(1.3)})
+    assert bench_compare.compare_concurrent(base, base) == []
+
+
+def test_concurrent_gate_uses_scaling_not_absolute_throughput():
+    """A 10x slower runner with the same pool scaling must pass."""
+    base = _cbench({"1": _pool(1.0, rps=5000), "4": _pool(1.3, rps=6500)})
+    fresh = _cbench({"1": _pool(1.0, rps=500), "4": _pool(1.25, rps=625)})
+    assert bench_compare.compare_concurrent(base, fresh) == []
+
+
+def test_concurrent_gate_fails_scaling_regression():
+    base = _cbench({"1": _pool(1.0), "4": _pool(1.3)})
+    fresh = _cbench({"1": _pool(1.0), "4": _pool(1.0)})   # -23%
+    failures = bench_compare.compare_concurrent(base, fresh)
+    assert any("pool 4: concurrent scaling regressed" in f
+               for f in failures)
+
+
+def test_concurrent_gate_rejects_mismatched_normalization():
+    """scaling_vs_first ratios from runs normalized against different
+    first pools must not be compared."""
+    base = _cbench({"2": _pool(1.0), "4": _pool(1.3)}, norm="1")
+    fresh = _cbench({"2": _pool(1.0), "4": _pool(1.3)}, norm="2")
+    failures = bench_compare.compare_concurrent(base, fresh)
+    assert any("normalized against different pools" in f for f in failures)
+    # legacy files without the field still compare (no false failure)
+    base.pop("scaling_baseline_pool")
+    assert bench_compare.compare_concurrent(base, fresh) == []
+
+
+def test_concurrent_gate_fails_on_lost_updates_or_errors():
+    base = _cbench({"1": _pool(1.0)})
+    fresh = _cbench({"1": _pool(1.0, lost=3)})
+    assert any("lost updates" in f for f in
+               bench_compare.compare_concurrent(base, fresh))
+    fresh = _cbench({"1": _pool(1.0, errors=["thread 2: KeyError"])})
+    assert any("worker errors" in f for f in
+               bench_compare.compare_concurrent(base, fresh))
+    fresh = _cbench({"1": _pool(1.0, validated=False)})
+    assert any("validated=false" in f for f in
+               bench_compare.compare_concurrent(base, fresh))
+
+
+def test_concurrent_correctness_failures_exit_2(tmp_path):
+    """Correctness failures (the never-retry class) exit with code 2;
+    scaling-only failures exit 1 — the machine contract CI's retry logic
+    branches on."""
+    base = _cbench({"1": _pool(1.0), "4": _pool(1.3)})
+    cbase = tmp_path / "b.json"
+    cfresh = tmp_path / "f.json"
+    cbase.write_text(json.dumps(base))
+    argv = ["--concurrent-baseline", str(cbase),
+            "--concurrent-fresh", str(cfresh)]
+    cfresh.write_text(json.dumps(
+        _cbench({"1": _pool(1.0), "4": _pool(1.3, lost=2)})))
+    assert bench_compare.main(argv) == 2
+    cfresh.write_text(json.dumps(
+        _cbench({"1": _pool(1.0), "4": _pool(0.9)})))
+    assert bench_compare.main(argv) == 1
+
+
+def test_concurrent_cli(tmp_path):
+    cbase = tmp_path / "cbase.json"
+    cfresh = tmp_path / "cfresh.json"
+    cbase.write_text(json.dumps(_cbench({"1": _pool(1.0),
+                                         "4": _pool(1.3)})))
+    cfresh.write_text(json.dumps(_cbench({"1": _pool(1.0),
+                                          "4": _pool(0.9)})))
+    argv = ["--concurrent-baseline", str(cbase),
+            "--concurrent-fresh", str(cfresh)]
+    assert bench_compare.main(argv) == 1
+    cfresh.write_text(json.dumps(_cbench({"1": _pool(1.0),
+                                          "4": _pool(1.28)})))
+    assert bench_compare.main(argv) == 0
+    # both gates in one invocation
+    kbase = tmp_path / "kbase.json"
+    kbase.write_text(json.dumps(_bench({"a": _k(1.0)})))
+    assert bench_compare.main([str(kbase), str(kbase)] + argv) == 0
+
+
+def test_committed_concurrent_baseline_is_gateable():
+    """The committed BENCH_concurrent.json must pass its own gate: every
+    pool validated, zero lost updates (the measured thread-safety
+    answer stays green)."""
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_concurrent.json"
+    if not path.exists():
+        pytest.skip("no committed concurrent baseline")
+    data = json.loads(path.read_text())
+    assert bench_compare.compare_concurrent(data, data) == []
