@@ -28,12 +28,30 @@ Concurrent-serving gate (BENCH_concurrent.json, via
   speed) may regress more than ``--max-concurrent-regress`` (default 15%)
   below the baseline.
 
+Frontend gate (BENCH_frontend.json, via
+``--frontend-baseline``/``--frontend-fresh``):
+
+* every fresh workload must be ``validated`` against the ``jax.jit``
+  oracle (a mis-traced program is a correctness failure, never retried);
+* the coverage fractions (``coverage_eqns``/``coverage_flops``) may not
+  drop below the baseline — the lowering is deterministic, so any drop is
+  a lowering regression, also tagged correctness;
+* no common workload's ``ratio`` (jit seconds over traced-program
+  seconds — a same-run paired ratio, robust to runner speed) may regress
+  more than ``--max-frontend-regress`` (default 50%) below baseline.  The
+  band is deliberately wide: unlike the per-task/program ratio (both
+  sides our code), the jit side is XLA's own schedule, whose CPU timing
+  swings run-to-run — the timing gate is a catastrophic-regression
+  tripwire, the correctness gates above carry the precision.
+
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
         --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
         --floor gemver=0.9 \
         --concurrent-baseline BENCH_concurrent.json \
-        --concurrent-fresh BENCH_concurrent_fresh.json
+        --concurrent-fresh BENCH_concurrent_fresh.json \
+        --frontend-baseline BENCH_frontend.json \
+        --frontend-fresh BENCH_frontend_fresh.json
 """
 
 from __future__ import annotations
@@ -57,6 +75,16 @@ def load_concurrent(path: str) -> dict:
         data = json.load(f)
     if "pools" not in data:
         raise SystemExit(f"{path}: not a BENCH_concurrent.json (no 'pools')")
+    return data
+
+
+def load_frontend(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "workloads" not in data:
+        raise SystemExit(
+            f"{path}: not a BENCH_frontend.json (no 'workloads')"
+        )
     return data
 
 
@@ -198,6 +226,59 @@ def compare_concurrent(
     return failures
 
 
+def compare_frontend(
+    baseline: dict,
+    fresh: dict,
+    *,
+    max_regress: float = 0.50,
+) -> list[str]:
+    """Frontend trace gate; returns failure messages (empty = pass).
+
+    Validation and coverage gate absolutely (both are deterministic: a
+    traced program that stops matching the ``jax.jit`` oracle, or a
+    lowering that suddenly owns fewer equations, is a code regression, not
+    runner noise — tagged so CI never retries them).  The timing gate runs
+    on ``ratio`` — jit over traced-program seconds from the same paired
+    run — which cancels absolute machine speed like the kernel gate.
+    """
+    failures: list[str] = []
+    base_w = baseline["workloads"]
+    fresh_w = fresh["workloads"]
+    for name in sorted(fresh_w):
+        if not fresh_w[name].get("validated", False):
+            failures.append(
+                f"{CORRECTNESS_TAG} {name}: traced program failed "
+                f"jax.jit-oracle validation"
+            )
+    common = sorted(set(base_w) & set(fresh_w))
+    if not common:
+        failures.append("no common frontend workloads")
+        return failures
+    missing = sorted(set(base_w) - set(fresh_w))
+    if missing:
+        failures.append(
+            f"frontend workloads missing from fresh run: {missing}"
+        )
+    for name in common:
+        for field in ("coverage_eqns", "coverage_flops"):
+            base_c = float(base_w[name].get(field, 0.0))
+            new_c = float(fresh_w[name].get(field, 0.0))
+            if new_c < base_c - 1e-9:
+                failures.append(
+                    f"{CORRECTNESS_TAG} {name}: {field} dropped "
+                    f"{base_c:.4f} -> {new_c:.4f} (lowering regression)"
+                )
+        base_r = float(base_w[name].get("ratio", 0.0))
+        new_r = float(fresh_w[name].get("ratio", 0.0))
+        if base_r > 0 and new_r < base_r * (1.0 - max_regress):
+            failures.append(
+                f"{name}: jit/program ratio regressed "
+                f"{base_r:.3f}x -> {new_r:.3f}x "
+                f"(> {max_regress:.0%} below baseline)"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -230,6 +311,17 @@ def main(argv: list[str] | None = None) -> int:
         help="freshly measured BENCH_concurrent.json",
     )
     ap.add_argument("--max-concurrent-regress", type=float, default=0.15)
+    ap.add_argument(
+        "--frontend-baseline",
+        default=None,
+        help="committed BENCH_frontend.json",
+    )
+    ap.add_argument(
+        "--frontend-fresh",
+        default=None,
+        help="freshly measured BENCH_frontend.json",
+    )
+    ap.add_argument("--max-frontend-regress", type=float, default=0.50)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -239,10 +331,20 @@ def main(argv: list[str] | None = None) -> int:
             "--concurrent-baseline and --concurrent-fresh must be "
             "given together"
         )
-    if args.baseline is None and args.concurrent_baseline is None:
+    if (args.frontend_baseline is None) != (args.frontend_fresh is None):
+        ap.error(
+            "--frontend-baseline and --frontend-fresh must be "
+            "given together"
+        )
+    if (
+        args.baseline is None
+        and args.concurrent_baseline is None
+        and args.frontend_baseline is None
+    ):
         ap.error(
             "nothing to compare: give BASELINE FRESH and/or "
-            "--concurrent-baseline/--concurrent-fresh"
+            "--concurrent-baseline/--concurrent-fresh and/or "
+            "--frontend-baseline/--frontend-fresh"
         )
 
     failures: list[str] = []
@@ -282,6 +384,23 @@ def main(argv: list[str] | None = None) -> int:
             )
         failures += compare_concurrent(
             cbase, cfresh, max_regress=args.max_concurrent_regress
+        )
+
+    if args.frontend_baseline is not None:
+        fbase = load_frontend(args.frontend_baseline)
+        ffresh = load_frontend(args.frontend_fresh)
+        for name in sorted(ffresh["workloads"]):
+            e = ffresh["workloads"][name]
+            b = fbase["workloads"].get(name, {})
+            print(
+                f"{name:12s} ratio={e.get('ratio', 0):6.3f}x "
+                f"(baseline {b.get('ratio', 0):6.3f}x) "
+                f"coverage={e.get('coverage_flops', 0):.4f} "
+                f"(baseline {b.get('coverage_flops', 0):.4f}) "
+                f"validated={e.get('validated')}"
+            )
+        failures += compare_frontend(
+            fbase, ffresh, max_regress=args.max_frontend_regress
         )
 
     if failures:

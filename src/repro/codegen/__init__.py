@@ -29,8 +29,10 @@ from .program import (PlanProgram, ProgramCache, cache_stats,
                       enable_persistent_cache, graph_fingerprint,
                       persistent_cache_dir, plan_fingerprint, program_cache,
                       program_key, set_program_cache_size)
-from .reference import (allclose, assert_close, eval_statement,
-                        random_inputs, reference_executor)
+from .reference import (OPAQUE_PREFIX, allclose, assert_close,
+                        eval_statement, opaque_fn, random_inputs,
+                        reference_executor, register_opaque,
+                        unregister_opaque)
 from .schedule import Transfer, WaveSchedule, wave_schedule
 
 __all__ = [
@@ -43,4 +45,5 @@ __all__ = [
     "Transfer", "WaveSchedule", "wave_schedule",
     "allclose", "assert_close", "eval_statement",
     "random_inputs", "reference_executor",
+    "OPAQUE_PREFIX", "opaque_fn", "register_opaque", "unregister_opaque",
 ]

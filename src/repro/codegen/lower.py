@@ -34,14 +34,14 @@ from ..core.plan import TaskConfig
 from ..core.taskgraph import Statement
 from ..kernels.contraction import ContractionSpec, LoopDim, Operand
 from ..kernels.contraction import ops as contraction_ops
-from .reference import eval_statement
+from .reference import OPAQUE_PREFIX, eval_statement
 
 
 @dataclasses.dataclass(frozen=True)
 class LoweredUnit:
     """One kernel invocation inside a task body."""
 
-    kind: str                           # "contraction" | "einsum"
+    kind: str                           # "contraction" | "einsum" | "opaque"
     spec: ContractionSpec | None        # set when kind == "contraction"
     statements: tuple[Statement, ...]   # source statements (1 or 2)
     operands: tuple[str, ...]           # env arrays, spec operand order
@@ -79,7 +79,9 @@ class TaskLowering:
     @property
     def kind(self) -> str:
         kinds = {u.kind for u in self.units}
-        return "contraction" if kinds == {"contraction"} else "einsum"
+        if kinds == {"contraction"}:
+            return "contraction"
+        return "opaque" if "opaque" in kinds else "einsum"
 
     @property
     def grid(self) -> tuple[int, ...] | None:
@@ -104,12 +106,19 @@ def _loop_dim(cfg: TaskConfig, loop: str, tc: int) -> LoopDim:
 
 
 def _affine(stmt: Statement) -> bool:
-    """Within the kernel's subset: dense, unique non-None iters per access."""
+    """Within the kernel's subset: dense, unique non-None iters per access.
+
+    Rank-0 accesses (scalar operands of traced elementwise statements,
+    opaque-segment reads) stay on the einsum/eval fallback: a 0-d BlockSpec
+    has no tile for the grid pipeline to carry.  Opaque ops are evaluated
+    through their registered callables, never a contraction kernel."""
     if stmt.density != 1.0:
         return False
-    if stmt.op not in ("mul", "add"):
+    if stmt.op not in ("mul", "add", "sub"):
         return False
     for acc in tuple(stmt.reads) + tuple(stmt.writes):
+        if len(acc.iters) == 0:
+            return False
         if any(it is None for it in acc.iters):
             return False
         if len(set(acc.iters)) != len(acc.iters):
@@ -211,10 +220,14 @@ def _build_units(fg: FusedGraph, task: FusedTask,
                 "cost-modeled only (rectangular execution would compute a "
                 "different function)")
         if not _affine(stmt):
-            # outside the kernel subset: einsum fallback, one statement
+            # outside the kernel subset: eval fallback, one statement —
+            # "opaque" marks frontend passthrough segments (registered
+            # residual callables), "einsum" the affine-but-untileable rest
             flush_init()
             srcs = tuple(dict.fromkeys(a.array for a in stmt.reads))
-            units.append(LoweredUnit(kind="einsum", spec=None,
+            kind = "opaque" if stmt.op.startswith(OPAQUE_PREFIX) \
+                else "einsum"
+            units.append(LoweredUnit(kind=kind, spec=None,
                                      statements=(stmt,), operands=srcs,
                                      out_array=stmt.writes[0].array))
             produced = True

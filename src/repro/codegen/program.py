@@ -35,6 +35,18 @@ The input shapes/dtypes dimension of the cache key is carried by
 ``jax.jit``'s own aval cache underneath, so a repeated call with identical
 shapes re-traces nothing — that is what makes the serving path
 (`repro.serve.PlanEngine`) zero-overhead after the first request.
+
+Graphs need not come from the polybench builders: the frontend
+(`repro.frontend`) lowers traced jaxprs into graphs whose unsupported
+regions are **opaque passthrough segments** — statements whose bodies are
+registered residual callables (``repro.codegen.reference.register_opaque``)
+evaluated inline while the segment executable traces.  They inline into the
+same per-segment ``jax.jit`` programs as contraction kernels (XLA CSE
+collapses a multi-output segment's repeated prefix into one computation),
+participate in wave scheduling and multi-consumer materialization splits,
+and cost nothing at execution time beyond the residual computation itself.
+``unit_kinds()`` reports how much of a program is plan-tiled contraction
+versus einsum/opaque fallback.
 """
 from __future__ import annotations
 
@@ -280,6 +292,16 @@ class PlanProgram:
         """Requests served by this program (pool round-robin position is
         ``calls % pool_size``)."""
         return self._calls
+
+    def unit_kinds(self) -> dict[str, int]:
+        """Lowered-unit census: plan-tiled ``contraction`` kernels vs
+        ``einsum`` fallback vs frontend ``opaque`` passthrough segments —
+        the program-side counterpart of a trace's coverage ratio."""
+        out: dict[str, int] = {}
+        for lw in self.lowered.values():
+            for u in lw.units:
+                out[u.kind] = out.get(u.kind, 0) + 1
+        return out
 
     def est_bytes(self) -> int:
         """Rough resident-size estimate of this cache entry: the graph's

@@ -4,6 +4,17 @@ This is the bit-level ground truth every lowered executable is validated
 against (in ``pallas_interpret`` mode the Pallas kernel bodies themselves run
 against it).  Deliberately independent of the lowering pass: it never looks
 at an ExecutionPlan, only at the statement semantics.
+
+Two statement families exist:
+
+* affine ops (``"mul"``/``"add"``/``"sub"``) evaluate through the shared
+  :func:`repro.kernels.contraction.ref.combine_terms` semantics — one
+  definition for this oracle, the ``xla`` impl and the Pallas kernel;
+* **opaque** ops (``"opaque:<digest>"``) are passthrough segments the
+  frontend carved out of a traced jaxpr around unsupported primitives.
+  Their semantics live in a process-wide registry of traceable callables
+  (:func:`register_opaque`); the graph only records the digest, so graph
+  fingerprints (and therefore program-cache keys) stay content-addressed.
 """
 from __future__ import annotations
 
@@ -15,6 +26,47 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.taskgraph import Statement, TaskGraph
+from ..kernels.contraction.ref import combine_terms
+
+#: Marker prefix of opaque statement ops (the rest is a content digest).
+OPAQUE_PREFIX = "opaque:"
+
+# digest -> traceable callable taking the statement's read arrays (in
+# ``Statement.reads`` order) and returning the output array.  Process-wide:
+# entries are registered at trace time (repro.frontend) and looked up at
+# lowering/trace time; compiled programs no longer need them.
+_OPAQUE_FNS: dict[str, Callable] = {}
+
+
+def register_opaque(op: str, fn: Callable) -> str:
+    """Register the callable behind an ``opaque:<digest>`` statement op.
+
+    Idempotent per digest (the digest is content-derived, so re-tracing the
+    same segment re-registers the same semantics)."""
+    if not op.startswith(OPAQUE_PREFIX):
+        raise ValueError(f"opaque op must start with {OPAQUE_PREFIX!r}: "
+                         f"{op!r}")
+    _OPAQUE_FNS[op] = fn
+    return op
+
+
+def unregister_opaque(ops) -> None:
+    """Drop registered opaque callables (trace-cache eviction hook — the
+    registry's lifetime follows the bounded trace cache, so a long-lived
+    serving process does not retain jaxpr closures for functions every
+    other cache already evicted)."""
+    for op in ops:
+        _OPAQUE_FNS.pop(op, None)
+
+
+def opaque_fn(op: str) -> Callable:
+    fn = _OPAQUE_FNS.get(op)
+    if fn is None:
+        raise KeyError(
+            f"opaque op {op!r} is not registered in this process — "
+            "re-trace the source function (repro.frontend.trace) to "
+            "rebuild its passthrough segments")
+    return fn
 
 
 def reference_executor(graph: TaskGraph) -> Callable[..., dict]:
@@ -35,6 +87,9 @@ def eval_statement(stmt: Statement, env: dict) -> jax.Array:
         raise NotImplementedError(
             f"{stmt.name}: triangular-density statements are cost-modeled "
             "only (rectangular execution would compute a different function)")
+    if stmt.op.startswith(OPAQUE_PREFIX):
+        fn = opaque_fn(stmt.op)
+        return fn(*[env[a.array] for a in stmt.reads])
     out_acc = stmt.writes[0]
     reads = [a for a in stmt.reads if a.array != out_acc.array]
     accumulate = any(a.array == out_acc.array for a in stmt.reads)
@@ -42,23 +97,13 @@ def eval_statement(stmt: Statement, env: dict) -> jax.Array:
 
     if not reads:
         val = jnp.zeros(out_shape, jnp.float32)
-    elif stmt.op == "add":
+    else:
         letters = {it: string.ascii_letters[i]
                    for i, it in enumerate(stmt.loops)}
-        val = None
-        for acc in reads:
-            spec = "".join(letters[i] for i in acc.iters) + "->" + \
-                "".join(letters[i] for i in out_acc.iters)
-            term = jnp.einsum(spec, env[acc.array])
-            val = term if val is None else val + term
-    else:  # "mul": product of reads contracted over reduction loops
-        letters = {it: string.ascii_letters[i]
-                   for i, it in enumerate(stmt.loops)}
-        in_specs = ",".join("".join(letters[i] for i in acc.iters)
-                            for acc in reads)
-        out_spec = "".join(letters[i] for i in out_acc.iters)
-        val = jnp.einsum(f"{in_specs}->{out_spec}",
-                         *[env[acc.array] for acc in reads])
+        subs = ["".join(letters[i] for i in acc.iters) for acc in reads]
+        out_sub = "".join(letters[i] for i in out_acc.iters)
+        val = combine_terms(subs, out_sub, stmt.op,
+                            [env[acc.array] for acc in reads], out_shape)
     if accumulate and out_acc.array in env:
         val = env[out_acc.array] + val
     return val

@@ -6,6 +6,11 @@ lowering (arbitrary N-D contractions, plan permutations, fused
 init+accumulate kernels, slice-aware dataflow execution) lives in
 ``repro.codegen``; this module re-exports the public names so existing
 imports keep working.
+
+If you landed here looking for a way to *run a JAX function* through the
+optimizer, the front door is :mod:`repro.frontend`:
+``frontend.trace(fn, *example_inputs)`` captures any callable into a task
+graph — no hand-built statements required.
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ from ..codegen import (PlanExecutable, allclose, assert_close,  # noqa: F401
                        reference_executor)
 
 warnings.warn(
-    "repro.core.apply is deprecated; import from repro.codegen instead",
+    "repro.core.apply is deprecated: import executors from repro.codegen, "
+    "or trace arbitrary JAX functions via repro.frontend.trace",
     DeprecationWarning, stacklevel=2)
 
 # Old private name, kept for any straggler callers.

@@ -714,12 +714,28 @@ def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
 # ---------------------------------------------------------------------------
 # Measured execution (solve-time validation = serve-time executables)
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
 def build_graph(name: str, scale: int = 1) -> TaskGraph:
-    """One PolyBench graph build per (kernel, scale) — solving, measuring
-    and serving the same kernel share the graph (and therefore its
-    fingerprint, i.e. its program-cache entries).  Treat the result
-    read-only."""
+    """One graph build per (kernel, scale) — solving, measuring and serving
+    the same kernel share the graph (and therefore its fingerprint, i.e.
+    its program-cache entries).  Treat the result read-only.
+
+    ``traced:<fp16>`` names resolve through the frontend's trace cache
+    (``repro.frontend.trace`` must have captured the function in this
+    process), so traced workloads flow through ``measure_plan`` and the
+    benchmark tables exactly like PolyBench kernels; ``scale`` does not
+    apply to traced sources (shapes are frozen at trace time).  Traced
+    names deliberately bypass the polybench lru: their lifetime is owned
+    by the *bounded* trace cache — pinning them here would defeat its
+    LRU and serve stale graphs after a re-trace.
+    """
+    if name.startswith("traced:"):
+        from ..frontend import traced_graph
+        return traced_graph(name)
+    return _build_polybench(name, scale)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_polybench(name: str, scale: int) -> TaskGraph:
     from . import polybench
     return polybench.build(name, scale=scale)
 

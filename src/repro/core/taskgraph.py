@@ -65,8 +65,11 @@ class Statement:
     # volume terms without full polyhedra.
     density: float = 1.0
     # How non-accumulator reads combine: "mul" = product (contracted over
-    # reduction loops), "add" = elementwise sum.  Drives the codegen
-    # lowering (repro.codegen) and the reference oracle.
+    # reduction loops), "add" = elementwise sum of per-read projections,
+    # "sub" = like "add" with every read after the first negated, and
+    # "opaque:<digest>" = passthrough segment whose semantics live in the
+    # codegen opaque registry (repro.codegen.register_opaque).  Drives the
+    # codegen lowering (repro.codegen) and the reference oracle.
     op: str = "mul"
 
     def __post_init__(self):
@@ -195,6 +198,41 @@ class TaskGraph:
 # ---------------------------------------------------------------------------
 # Convenience builders
 # ---------------------------------------------------------------------------
+def iter_names(stem: str, rank: int, kind: str = "d") -> tuple[str, ...]:
+    """Fresh iterator names for one statement: ``{stem}_{kind}{0..rank-1}``.
+
+    The frontend names iterators uniquely per statement (the polybench
+    convention: tile factors are shared exactly within a fused task and
+    free elsewhere); ``kind`` distinguishes output dims (``d``) from
+    reduction dims (``r``) and degenerate broadcast dims (``z``).
+    """
+    return tuple(f"{stem}_{kind}{k}" for k in range(rank))
+
+
+def intermediate(name: str, shape: tuple[int, ...],
+                 dtype_bytes: int = 4) -> Array:
+    """A fresh intermediate/input array for graph construction (HBM-resident
+    by default, like every polybench array — the solver decides whether it
+    is ever actually spilled)."""
+    return Array(name=name, shape=tuple(int(s) for s in shape),
+                 dtype_bytes=dtype_bytes, offchip=True)
+
+
+def copy_statement(name: str, out: str, src: str,
+                   src_iters: tuple[str, ...], out_iters: tuple[str, ...],
+                   trip_counts: Mapping[str, int]) -> Statement:
+    """Identity/projection copy ``out[out_iters] = src[src_iters]`` as an
+    ``op="add"`` single-read statement — how the frontend materializes
+    transposes and forwards arrays that are both consumed downstream and
+    function outputs."""
+    loops = tuple(dict.fromkeys(tuple(out_iters) + tuple(src_iters)))
+    return Statement(
+        name=name, loops=loops, trip_counts=dict(trip_counts),
+        reads=(Access(src, tuple(src_iters)),),
+        writes=(Access(out, tuple(out_iters)),),
+        flops_per_iter=0.0, op="add")
+
+
 def matmul_statements(prefix: str, out: str, lhs: str, rhs: str,
                       i: str, j: str, k: str,
                       I: int, J: int, K: int,

@@ -1,0 +1,37 @@
+"""``repro.frontend`` — trace arbitrary JAX functions into the pipeline.
+
+The missing front half of the paper's source-to-source flow: instead of
+hand-building :class:`~repro.core.taskgraph.TaskGraph` objects (the
+polybench builders), capture *any* JAX callable::
+
+    from repro import frontend
+
+    tf = frontend.trace(fn, *example_inputs)   # jaxpr -> TaskGraph
+    plan = tf.solve()                          # the usual NLP solve
+    exe = tf.executable()                      # whole-plan compiled program
+    out = exe(*inputs)                         # original signature/pytrees
+    tf.validate()                              # vs jax.jit(fn) oracle
+
+The affine subset (``dot_general`` incl. batch dims, elementwise
+add/sub/mul/neg, ``transpose``, ``broadcast_in_dim``, full-axis
+``reduce_sum`` — float32) lowers to real solver statements; everything else
+is carved into opaque passthrough segments executed verbatim inside the
+same compiled program, so coverage is partial but execution is total.
+``TracedFunction.coverage`` reports the split.
+
+Traces are cached process-wide by jaxpr fingerprint (see
+:func:`trace_cache_stats`), aligned with the compiled-program cache: same
+structure -> same graph -> same program-cache entries.  The serving path is
+``PlanEngine.register_function(name, fn, example_inputs)``.
+"""
+from .executable import TracedExecutable, TracedFunction
+from .lowering import Coverage, LoweredJaxpr, SUPPORTED_PRIMITIVES
+from .trace import (TraceCache, clear_trace_cache, trace, trace_cache,
+                    trace_cache_stats, traced_graph)
+
+__all__ = [
+    "Coverage", "LoweredJaxpr", "SUPPORTED_PRIMITIVES",
+    "TraceCache", "TracedExecutable", "TracedFunction",
+    "clear_trace_cache", "trace", "trace_cache", "trace_cache_stats",
+    "traced_graph",
+]

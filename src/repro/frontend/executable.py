@@ -1,0 +1,196 @@
+"""TracedFunction: a lowered JAX callable bound to its closure values.
+
+The trace cache stores :class:`~repro.frontend.lowering.LoweredJaxpr` —
+pure structure.  A :class:`TracedFunction` is one *instance* of that
+structure: the original callable (kept for oracle validation), the const
+values captured by its closure, and the pytree layout of its arguments and
+results.  It knows how to
+
+* ``solve()`` — run the NLP solver over the traced graph (plan cached on
+  the shared record, so two traces of the same structure solve once);
+* ``executable()`` — build a positional-argument callable around the
+  plan-faithful executor (whole-plan compiled program by default), binding
+  inputs/consts to graph arrays and casting outputs back to the traced
+  dtypes;
+* ``validate()`` — execute and compare against ``jax.jit(fn)``, the oracle
+  the acceptance contract names.
+
+Rank-0 values are carried through the graph as shape-(1,) arrays (the
+``promoted`` flag) and reshaped back at the boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lowering import Coverage, LoweredJaxpr
+
+
+def _default_rtol(dtype) -> float:
+    """Scale-aware oracle tolerance per dtype: f32 blocked accumulation
+    stays at the codegen oracle's 2e-4; half-precision oracles (bf16/f16)
+    round at ~4e-3 relative, so they get the looser band."""
+    return 2e-2 if np.dtype(dtype).itemsize <= 2 else 2e-4
+
+
+@dataclasses.dataclass
+class TracedFunction:
+    """One traced (fn, example shapes) pair, ready to solve and serve."""
+
+    fn: Callable
+    record: LoweredJaxpr
+    const_values: tuple
+    in_tree: Any
+    out_tree: Any
+    example_flat: tuple
+    name: str
+
+    def __post_init__(self):
+        self._consts = {
+            n: jnp.asarray(v)
+            for n, v in zip(self.record.const_names, self.const_values)}
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def graph(self):
+        return self.record.graph
+
+    @property
+    def fingerprint(self) -> str:
+        return self.record.fingerprint
+
+    @property
+    def coverage(self) -> Coverage:
+        return self.record.coverage
+
+    def __repr__(self) -> str:
+        c = self.coverage
+        return (f"TracedFunction({self.name}, graph={self.graph.name}, "
+                f"statements={len(self.graph.statements)}, "
+                f"coverage={c.n_supported}/{c.n_eqns} eqns "
+                f"({c.flop_ratio:.0%} est. flops))")
+
+    # -- binding ----------------------------------------------------------
+    def bind(self, flat_inputs) -> dict:
+        """Graph-array environment for one call: positional inputs, bound
+        consts, and the structural static values (literals etc.)."""
+        env = dict(zip(self.record.in_names, flat_inputs))
+        env.update(self._consts)
+        env.update(self.record.static_bindings)
+        return env
+
+    def bind_args(self, args: tuple) -> dict:
+        """Flatten positional args (checking the traced pytree/avals) and
+        bind them — the entry the serving engine uses."""
+        flat, tree = jax.tree_util.tree_flatten(tuple(args))
+        if tree != self.in_tree:
+            raise TypeError(
+                f"{self.name}: argument structure {tree} does not match "
+                f"the traced structure {self.in_tree}")
+        flat = [jnp.asarray(v) for v in flat]
+        for i, (v, (shape, dtype)) in enumerate(
+                zip(flat, self.record.in_avals)):
+            if tuple(v.shape) != tuple(shape) or v.dtype != dtype:
+                raise ValueError(
+                    f"{self.name}: argument {i} is {v.shape}/{v.dtype}, "
+                    f"traced as {shape}/{np.dtype(dtype)} — re-trace the "
+                    "function for new shapes/dtypes")
+        return self.bind(flat)
+
+    def unbind(self, outs: dict, env: dict):
+        """Assemble the function's pytree result from executed graph
+        outputs + the bound environment, restoring rank and dtype."""
+        flat_out = []
+        for spec, (shape, dtype) in zip(self.record.out_specs,
+                                        self.record.out_avals):
+            v = outs[spec.ref] if spec.kind == "array" else env[spec.ref]
+            if spec.promoted:
+                v = jnp.reshape(v, ())
+            if v.dtype != dtype:
+                v = v.astype(dtype)
+            flat_out.append(v)
+        return jax.tree_util.tree_unflatten(self.out_tree, flat_out)
+
+    # -- solving / execution ----------------------------------------------
+    def solve(self, hw=None, opts=None):
+        """Solve the traced graph (cached on the shared record when called
+        with default hardware/options, so repeated traces and the serving
+        engine reuse one plan)."""
+        from ..core.solver import solve
+        if not self.graph.statements:
+            return None
+        default = hw is None and opts is None
+        if default and "default" in self.record.plan_cache:
+            return self.record.plan_cache["default"]
+        if opts is None:
+            from ..core.solver import SolverOptions
+            opts = SolverOptions(time_budget_s=20.0)
+        plan = solve(self.graph, hw, opts)
+        if default:
+            self.record.plan_cache["default"] = plan
+        return plan
+
+    def executable(self, impl: str | None = None, mode: str = "program",
+                   pool_size: int | None = None, hw=None, opts=None,
+                   plan=None) -> "TracedExecutable":
+        if plan is None:
+            plan = self.solve(hw=hw, opts=opts)
+        return TracedExecutable(self, plan, impl=impl, mode=mode,
+                                pool_size=pool_size)
+
+    def validate(self, *args, impl: str | None = None,
+                 mode: str = "program", rtol: float | None = None,
+                 plan=None) -> bool:
+        """Execute the traced graph and assert it matches ``jax.jit(fn)``
+        (the oracle) on ``args`` (default: the example inputs).  Scale-aware
+        per-output comparison; raises ``AssertionError`` on mismatch."""
+        from ..codegen.reference import assert_close
+        if not args:
+            args = jax.tree_util.tree_unflatten(
+                self.in_tree, list(self.example_flat))
+        expect = jax.jit(self.fn)(*args)
+        got = self.executable(impl=impl, mode=mode, plan=plan)(*args)
+        e_flat, e_tree = jax.tree_util.tree_flatten(expect)
+        g_flat, g_tree = jax.tree_util.tree_flatten(got)
+        assert e_tree == g_tree, (e_tree, g_tree)
+        for i, (e, g) in enumerate(zip(e_flat, g_flat)):
+            tol = rtol if rtol is not None else _default_rtol(e.dtype)
+            assert_close(g, e, rtol=tol,
+                         name=f"{self.name} output {i} vs jax.jit oracle")
+        return True
+
+
+class TracedExecutable:
+    """Positional-argument callable over the plan-faithful executor.
+
+    Mirrors the original function's signature and result pytree; inside, it
+    is the same :class:`~repro.codegen.executor.PlanExecutable` (and
+    therefore the same process-wide compiled-program cache) the serving
+    engine uses.  A trace whose graph holds no statements (pure passthrough
+    functions) short-circuits to binding alone.
+    """
+
+    def __init__(self, tf: TracedFunction, plan, impl: str | None = None,
+                 mode: str = "program", pool_size: int | None = None):
+        from ..codegen import plan_executor
+        self.tf = tf
+        self.plan = plan
+        self._exe = None
+        if tf.graph.statements:
+            if plan is None:
+                raise ValueError(f"{tf.name}: no plan for non-empty graph")
+            self._exe = plan_executor(tf.graph, plan, impl=impl, mode=mode,
+                                      pool_size=pool_size)
+
+    @property
+    def executor(self):
+        return self._exe
+
+    def __call__(self, *args):
+        env = self.tf.bind_args(args)
+        outs = self._exe(env) if self._exe is not None else {}
+        return self.tf.unbind(outs, env)

@@ -1,0 +1,642 @@
+"""jaxpr -> TaskGraph lowering: the frontend's translation pass.
+
+The paper's flow is source-to-source: unannotated affine code in, optimized
+accelerator program out.  This module is that front door for JAX: it walks a
+closed jaxpr (``pjit`` calls inlined, so ``jax.nn``-style jitted helpers are
+seen through) and lowers the **affine subset** to
+:class:`~repro.core.taskgraph.Statement` objects the solver/codegen stack
+already understands:
+
+====================  =====================================================
+primitive             lowering
+====================  =====================================================
+``dot_general``       contraction statement (``op="mul"``): batch + free
+                      dims become output iterators, contracting dims become
+                      reduction iterators; ``flops_per_iter=2``
+``add``/``sub``       elementwise statement (``op="add"``/``"sub"``);
+                      size-1 operand dims read through a private trip-1
+                      reduction iterator (exact under the projection
+                      semantics), scalar operands read with rank-0 access
+``mul``               elementwise joint-product statement (``op="mul"``)
+``neg``               ``0 - x`` (``op="sub"`` seeded by a shared scalar
+                      zero constant)
+``transpose``         projection copy (``op="add"``, permuted read iters)
+``broadcast_in_dim``  projection copy; new output dims broadcast, size-1
+                      source dims read through a trip-1 iterator
+``reduce_sum``        projection statement with real reduction iterators
+                      (full-axis sums; rank-0 results fall back to opaque)
+====================  =====================================================
+
+Everything else — transcendentals, comparisons, gathers, control flow,
+non-f32 dtypes — is carved into **opaque passthrough segments**: maximal
+runs of unsupported equations re-evaluated verbatim (``primitive.bind``)
+inside a single statement whose semantics live in the codegen opaque
+registry.  Opaque statements still participate in graph dependencies,
+scheduling and the whole-plan program; they are simply not tiled or
+permuted.  The per-trace :class:`Coverage` records how much of the function
+the optimizer actually owns.
+
+Const values never enter the lowering result: jaxpr constvars become named
+off-chip input arrays whose values are bound per
+:class:`~repro.frontend.executable.TracedFunction`, so two traces with the
+same structure share one graph (and therefore one program-cache entry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..codegen.reference import OPAQUE_PREFIX, register_opaque
+from ..core.taskgraph import (Access, Statement, TaskGraph, copy_statement,
+                              intermediate, iter_names)
+
+try:                       # jax >= 0.4.36 moved the jaxpr types here
+    from jax.extend.core import Literal, Var
+except ImportError:        # pragma: no cover - older jax
+    from jax.core import Literal, Var
+
+#: Primitives lowered to affine statements (everything else goes opaque).
+SUPPORTED_PRIMITIVES = ("dot_general", "add", "sub", "mul", "neg",
+                        "transpose", "broadcast_in_dim", "reduce_sum")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr flattening (pjit inlining)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FlatEqn:
+    """One primitive application with its inputs resolved through every
+    inlined ``pjit`` boundary (invars are parent-scope atoms)."""
+
+    eqn: Any                       # the original JaxprEqn
+    invars: tuple[Any, ...]        # resolved atoms: Var | Literal
+    outvars: tuple[Any, ...]
+
+
+def flatten_jaxpr(jaxpr) -> tuple[list[FlatEqn], list[Any], dict]:
+    """Inline ``pjit`` sub-jaxprs into one flat equation list.
+
+    Returns ``(flat_eqns, resolved_outvars, sub_consts)`` where
+    ``sub_consts`` maps sub-jaxpr constvars to their (structural) values —
+    these become static graph inputs and feed the trace fingerprint.
+    """
+    subst: dict[Var, Any] = {}
+    sub_consts: dict[Var, Any] = {}
+    out: list[FlatEqn] = []
+
+    def resolve(a):
+        while isinstance(a, Var) and a in subst:
+            a = subst[a]
+        return a
+
+    def walk(jx) -> None:
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pjit":
+                closed = eqn.params["jaxpr"]
+                sj = closed.jaxpr
+                for cv, cval in zip(sj.constvars, closed.consts):
+                    sub_consts[cv] = cval
+                for iv, a in zip(sj.invars, eqn.invars):
+                    subst[iv] = resolve(a)
+                walk(sj)
+                for ov, sov in zip(eqn.outvars, sj.outvars):
+                    subst[ov] = resolve(sov)
+                continue
+            out.append(FlatEqn(eqn, tuple(resolve(a) for a in eqn.invars),
+                               tuple(eqn.outvars)))
+
+    walk(jaxpr)
+    resolved_outs = [resolve(v) for v in jaxpr.outvars]
+    return out, resolved_outs, sub_consts
+
+
+def fingerprint_jaxpr(closed, sub_consts: dict) -> str:
+    """Content hash of a closed jaxpr: structure + input/const avals +
+    inlined sub-jaxpr const values.  Two closures with the same structure
+    but different top-level const *values* share a fingerprint on purpose —
+    the graph is identical, only the bound values differ."""
+    h = hashlib.sha256()
+    h.update(str(closed.jaxpr).encode())
+    for v in closed.jaxpr.invars:
+        h.update(repr((tuple(v.aval.shape), str(v.aval.dtype))).encode())
+    for c in closed.consts:
+        h.update(repr((tuple(np.shape(c)),
+                       str(np.result_type(c)))).encode())
+    for v in sub_consts.values():
+        h.update(np.asarray(v).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Lowering result
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Coverage:
+    """How much of the traced function the optimizer owns."""
+
+    n_eqns: int
+    n_supported: int
+    supported_flops: float
+    opaque_flops_est: float        # 1 flop per output element per opaque eqn
+
+    @property
+    def eqn_ratio(self) -> float:
+        return self.n_supported / self.n_eqns if self.n_eqns else 1.0
+
+    @property
+    def flop_ratio(self) -> float:
+        total = self.supported_flops + self.opaque_flops_est
+        return self.supported_flops / total if total else 1.0
+
+    def to_jsonable(self) -> dict:
+        return {"n_eqns": self.n_eqns, "n_supported": self.n_supported,
+                "eqn_ratio": round(self.eqn_ratio, 4),
+                "flop_ratio": round(self.flop_ratio, 4)}
+
+
+@dataclasses.dataclass(frozen=True)
+class OutSpec:
+    """How one flat function output is produced.
+
+    ``kind="array"``: read from the executed graph's outputs under ``ref``;
+    ``kind="binding"``: read straight from the bound input dict (an input,
+    const or literal forwarded unchanged).  ``promoted`` marks rank-0
+    values carried as shape-(1,) arrays inside the graph."""
+
+    kind: str
+    ref: str
+    promoted: bool = False
+
+
+@dataclasses.dataclass
+class LoweredJaxpr:
+    """The trace-cache value: everything derived from jaxpr *structure*.
+
+    Const values are deliberately absent (bound per TracedFunction);
+    ``static_bindings`` holds values that ARE structure — literals,
+    inlined sub-jaxpr consts and synthetic constants the lowering itself
+    introduced (the scalar zero seeding ``neg``)."""
+
+    fingerprint: str
+    graph: TaskGraph
+    in_names: tuple[str, ...]                  # one per flat invar
+    const_names: tuple[str, ...]               # one per closed.consts entry
+    static_bindings: dict[str, jax.Array]
+    in_avals: tuple[tuple[tuple[int, ...], Any], ...]
+    out_specs: tuple[OutSpec, ...]
+    out_avals: tuple[tuple[tuple[int, ...], Any], ...]
+    coverage: Coverage
+    opaque_ops: tuple[str, ...] = ()    # registry entries owned by this record
+    plan_cache: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def graph_name(self) -> str:
+        return self.graph.name
+
+
+def graph_name_of(fingerprint: str) -> str:
+    return f"traced:{fingerprint[:16]}"
+
+
+# ---------------------------------------------------------------------------
+# Opaque segment evaluation
+# ---------------------------------------------------------------------------
+def eval_flat_eqns(feqns: list[FlatEqn], env: dict) -> None:
+    """Re-evaluate flat equations against a Var->value environment (the
+    ``jax.core.eval_jaxpr`` loop, over resolved atoms)."""
+    for fe in feqns:
+        vals = [a.val if isinstance(a, Literal) else env[a]
+                for a in fe.invars]
+        subfuns, bind_params = fe.eqn.primitive.get_bind_params(
+            fe.eqn.params)
+        outs = fe.eqn.primitive.bind(*subfuns, *vals, **bind_params)
+        if not fe.eqn.primitive.multiple_results:
+            outs = [outs]
+        for ov, o in zip(fe.outvars, outs):
+            env[ov] = o
+
+
+def _segment_callable(feqns: list[FlatEqn], in_vars: tuple,
+                      unpromote: tuple[bool, ...], out_var,
+                      promote_out: bool) -> Callable:
+    """Traceable residual computing one needed output of an opaque segment.
+
+    Each output statement re-derives the segment prefix up to its producer;
+    in program mode XLA CSE collapses the duplicates back into one
+    computation, so a k-output segment costs one evaluation."""
+
+    def run(*vals):
+        env: dict = {}
+        for v, val, unp in zip(in_vars, vals, unpromote):
+            env[v] = jnp.reshape(val, ()) if unp else val
+        eval_flat_eqns(feqns, env)
+        out = env[out_var]
+        return jnp.reshape(out, (1,)) if promote_out else out
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Lowering context
+# ---------------------------------------------------------------------------
+class _Ctx:
+    def __init__(self, fingerprint: str):
+        self.fingerprint = fingerprint
+        self.arrays: dict[str, Any] = {}
+        self.statements: list[Statement] = []
+        self.var_name: dict[Var, str] = {}
+        self.promoted: set[str] = set()
+        self.static: dict[str, jax.Array] = {}
+        self._literals: dict[tuple, str] = {}
+        self._n = 0
+        self.supported_flops = 0.0
+        self.opaque_flops_est = 0.0
+        self.opaque_ops: list[str] = []
+
+    def fresh(self, stem: str) -> str:
+        self._n += 1
+        return f"t{self._n}_{stem}"
+
+    def add_array(self, name: str, shape, dtype) -> str:
+        self.arrays[name] = intermediate(
+            name, tuple(shape), dtype_bytes=np.dtype(dtype).itemsize)
+        return name
+
+    def name_of(self, atom) -> str:
+        if isinstance(atom, Literal):
+            return self.static_value(atom.val)
+        return self.var_name[atom]
+
+    def static_value(self, val: np.ndarray) -> str:
+        """Materialize a structural constant as a named static input."""
+        val = np.asarray(val)
+        key = (val.tobytes(), str(val.dtype), val.shape)
+        name = self._literals.get(key)
+        if name is None:
+            name = f"lit{len(self._literals)}"
+            self._literals[key] = name
+            self.add_array(name, val.shape, val.dtype)
+            self.static[name] = jnp.asarray(val)
+        return name
+
+    def static_scalar(self, value: float) -> str:
+        return self.static_value(np.float32(value))
+
+    def emit(self, stmt: Statement, outvar, shape=None, dtype=None) -> None:
+        out = stmt.writes[0].array
+        aval = outvar.aval
+        self.add_array(out, aval.shape if shape is None else shape,
+                       aval.dtype if dtype is None else dtype)
+        self.statements.append(stmt)
+        self.var_name[outvar] = out
+
+
+# ---------------------------------------------------------------------------
+# Supported-primitive handlers (one Statement each)
+# ---------------------------------------------------------------------------
+def _h_dot_general(ctx: _Ctx, fe: FlatEqn) -> None:
+    (lc, rc), (lb, rb) = fe.eqn.params["dimension_numbers"]
+    lhs, rhs = fe.invars
+    lshape, rshape = lhs.aval.shape, rhs.aval.shape
+    out_aval = fe.outvars[0].aval
+    name = ctx.fresh("dot")
+    out_its = iter_names(name, len(out_aval.shape))
+    red_its = iter_names(name, len(lc), "r")
+    lfree = [d for d in range(len(lshape)) if d not in lb and d not in lc]
+    rfree = [d for d in range(len(rshape)) if d not in rb and d not in rc]
+    lits: list[str] = [""] * len(lshape)
+    for i, d in enumerate(lb):
+        lits[d] = out_its[i]
+    for i, d in enumerate(lc):
+        lits[d] = red_its[i]
+    for i, d in enumerate(lfree):
+        lits[d] = out_its[len(lb) + i]
+    rits: list[str] = [""] * len(rshape)
+    for i, d in enumerate(rb):
+        rits[d] = out_its[i]
+    for i, d in enumerate(rc):
+        rits[d] = red_its[i]
+    for i, d in enumerate(rfree):
+        rits[d] = out_its[len(lb) + len(lfree) + i]
+    trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+    for i, d in enumerate(lc):
+        trip[red_its[i]] = int(lshape[d])
+    stmt = Statement(
+        name=name, loops=tuple(out_its) + tuple(red_its), trip_counts=trip,
+        reads=(Access(ctx.name_of(lhs), tuple(lits)),
+               Access(ctx.name_of(rhs), tuple(rits))),
+        writes=(Access(name, out_its),), flops_per_iter=2.0, op="mul")
+    ctx.emit(stmt, fe.outvars[0])
+
+
+def _ew_access(ctx: _Ctx, atom, out_its, out_shape, name: str,
+               z_its: list[str], trip: dict[str, int]) -> Access:
+    """Access map of one elementwise operand: same-size dims share the
+    output iterator; size-1 broadcast dims read through a private trip-1
+    iterator (summed out exactly); scalars read with rank-0 access."""
+    shp = atom.aval.shape
+    if len(shp) == 0:
+        return Access(ctx.name_of(atom), ())
+    its = []
+    for d, (s, os) in enumerate(zip(shp, out_shape)):
+        if int(s) == int(os):
+            its.append(out_its[d])
+        else:                                   # s == 1: broadcast dim
+            z = f"{name}_z{len(z_its)}"
+            z_its.append(z)
+            trip[z] = 1
+            its.append(z)
+    return Access(ctx.name_of(atom), tuple(its))
+
+
+def _h_elementwise(op: str):
+    def handler(ctx: _Ctx, fe: FlatEqn) -> None:
+        out_aval = fe.outvars[0].aval
+        name = ctx.fresh(op)
+        out_its = iter_names(name, len(out_aval.shape))
+        trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+        z_its: list[str] = []
+        reads = tuple(_ew_access(ctx, a, out_its, out_aval.shape, name,
+                                 z_its, trip) for a in fe.invars)
+        stmt = Statement(
+            name=name, loops=tuple(out_its) + tuple(z_its),
+            trip_counts=trip, reads=reads,
+            writes=(Access(name, out_its),), flops_per_iter=1.0, op=op)
+        ctx.emit(stmt, fe.outvars[0])
+    return handler
+
+
+def _h_neg(ctx: _Ctx, fe: FlatEqn) -> None:
+    out_aval = fe.outvars[0].aval
+    name = ctx.fresh("neg")
+    out_its = iter_names(name, len(out_aval.shape))
+    zero = ctx.static_scalar(0.0)
+    stmt = Statement(
+        name=name, loops=out_its,
+        trip_counts={it: int(n) for it, n in zip(out_its, out_aval.shape)},
+        reads=(Access(zero, ()), Access(ctx.name_of(fe.invars[0]), out_its)),
+        writes=(Access(name, out_its),), flops_per_iter=1.0, op="sub")
+    ctx.emit(stmt, fe.outvars[0])
+
+
+def _h_transpose(ctx: _Ctx, fe: FlatEqn) -> None:
+    perm = tuple(fe.eqn.params["permutation"])
+    out_aval = fe.outvars[0].aval
+    name = ctx.fresh("tr")
+    out_its = iter_names(name, len(out_aval.shape))
+    src_its = tuple(out_its[perm.index(d)] for d in range(len(perm)))
+    ctx.emit(copy_statement(
+        name, name, ctx.name_of(fe.invars[0]), src_its, out_its,
+        {it: int(n) for it, n in zip(out_its, out_aval.shape)}),
+        fe.outvars[0])
+
+
+def _h_broadcast_in_dim(ctx: _Ctx, fe: FlatEqn) -> None:
+    bd = tuple(fe.eqn.params["broadcast_dimensions"])
+    src = fe.invars[0]
+    out_aval = fe.outvars[0].aval
+    name = ctx.fresh("bc")
+    out_its = iter_names(name, len(out_aval.shape))
+    trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+    z_its: list[str] = []
+    its: list[str] = []
+    for p, s in enumerate(src.aval.shape):
+        if int(s) == int(out_aval.shape[bd[p]]):
+            its.append(out_its[bd[p]])
+        else:                                   # size-1 source dim
+            z = f"{name}_z{len(z_its)}"
+            z_its.append(z)
+            trip[z] = 1
+            its.append(z)
+    stmt = Statement(
+        name=name, loops=tuple(out_its) + tuple(z_its), trip_counts=trip,
+        reads=(Access(ctx.name_of(src), tuple(its)),),
+        writes=(Access(name, out_its),), flops_per_iter=0.0, op="add")
+    ctx.emit(stmt, fe.outvars[0])
+
+
+def _h_reduce_sum(ctx: _Ctx, fe: FlatEqn) -> None:
+    axes = tuple(fe.eqn.params["axes"])
+    src = fe.invars[0]
+    out_aval = fe.outvars[0].aval
+    name = ctx.fresh("rsum")
+    out_its = iter_names(name, len(out_aval.shape))
+    red_its = iter_names(name, len(axes), "r")
+    trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+    its: list[str] = []
+    kept = 0
+    for d, s in enumerate(src.aval.shape):
+        if d in axes:
+            r = red_its[axes.index(d)]
+            trip[r] = int(s)
+            its.append(r)
+        else:
+            its.append(out_its[kept])
+            kept += 1
+    stmt = Statement(
+        name=name, loops=tuple(out_its) + tuple(red_its), trip_counts=trip,
+        reads=(Access(ctx.name_of(src), tuple(its)),),
+        writes=(Access(name, out_its),), flops_per_iter=1.0, op="add")
+    ctx.emit(stmt, fe.outvars[0])
+
+
+HANDLERS: dict[str, Callable[[_Ctx, FlatEqn], None]] = {
+    "dot_general": _h_dot_general,
+    "add": _h_elementwise("add"),
+    "sub": _h_elementwise("sub"),
+    "mul": _h_elementwise("mul"),
+    "neg": _h_neg,
+    "transpose": _h_transpose,
+    "broadcast_in_dim": _h_broadcast_in_dim,
+    "reduce_sum": _h_reduce_sum,
+}
+
+
+def _supported(fe: FlatEqn, eqn_produced: set) -> bool:
+    if fe.eqn.primitive.name not in HANDLERS:
+        return False
+    if len(fe.outvars) != 1:
+        return False
+    out_aval = fe.outvars[0].aval
+    if out_aval.dtype != np.float32 or len(out_aval.shape) == 0:
+        return False
+    if any(int(n) == 0 for n in out_aval.shape):
+        return False
+    for a in fe.invars:
+        if a.aval.dtype != np.float32:
+            return False
+        if any(int(n) == 0 for n in a.aval.shape):
+            return False
+        # A rank-0 value produced by an equation comes out of an opaque
+        # segment promoted to shape (1,); affine statements cannot read
+        # it — the consumer joins the opaque segment instead.
+        if isinstance(a, Var) and a in eqn_produced \
+                and len(a.aval.shape) == 0:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Main lowering pass
+# ---------------------------------------------------------------------------
+def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
+               sub_consts: dict, fingerprint: str) -> LoweredJaxpr:
+    """Lower one flattened closed jaxpr into a :class:`LoweredJaxpr`."""
+    ctx = _Ctx(fingerprint)
+    jaxpr = closed.jaxpr
+
+    in_names = []
+    for i, v in enumerate(jaxpr.invars):
+        name = f"in{i}"
+        ctx.add_array(name, v.aval.shape, v.aval.dtype)
+        ctx.var_name[v] = name
+        in_names.append(name)
+    const_names = []
+    for i, v in enumerate(jaxpr.constvars):
+        name = f"c{i}"
+        ctx.add_array(name, v.aval.shape, v.aval.dtype)
+        ctx.var_name[v] = name
+        const_names.append(name)
+    for i, (v, val) in enumerate(sub_consts.items()):
+        name = f"sc{i}"
+        arr = np.asarray(val)
+        ctx.add_array(name, arr.shape, arr.dtype)
+        ctx.static[name] = jnp.asarray(val)
+        ctx.var_name[v] = name
+
+    eqn_produced: set = set()
+    n_supported = 0
+    pending: list[tuple[int, FlatEqn]] = []
+    # vars needed outside any opaque segment: read by a later equation or
+    # returned by the function
+    last_reader: dict[Var, int] = {}
+    for idx, fe in enumerate(flat_eqns):
+        for a in fe.invars:
+            if isinstance(a, Var):
+                last_reader[a] = idx
+    needed_late = {a for a in resolved_outs if isinstance(a, Var)}
+
+    def flush_opaque() -> None:
+        nonlocal pending
+        if not pending:
+            return
+        seg = pending
+        pending = []
+        seg_first, seg_last = seg[0][0], seg[-1][0]
+        feqns = [fe for (_, fe) in seg]
+        defined = {ov for fe in feqns for ov in fe.outvars}
+        # ordered unique external inputs
+        ins: list[Var] = []
+        for fe in feqns:
+            for a in fe.invars:
+                if isinstance(a, Var) and a not in defined and a not in ins:
+                    ins.append(a)
+        in_names_seg = tuple(ctx.name_of(a) for a in ins)
+        unpromote = tuple(n in ctx.promoted for n in in_names_seg)
+        # outputs needed beyond the segment
+        outs = []
+        for fi, fe in enumerate(feqns):
+            for ov in fe.outvars:
+                if ov in needed_late or last_reader.get(ov, -1) > seg_last:
+                    outs.append((fi, ov))
+        ctx.opaque_flops_est += sum(
+            float(np.prod(ov.aval.shape)) if ov.aval.shape else 1.0
+            for fe in feqns for ov in fe.outvars)
+        for k, (fi, ov) in enumerate(outs):
+            promote = len(ov.aval.shape) == 0
+            shape = (1,) if promote else tuple(int(n)
+                                               for n in ov.aval.shape)
+            name = ctx.fresh("opq")
+            digest = hashlib.sha256(
+                f"{fingerprint}:{seg_first}:{k}".encode()).hexdigest()
+            op = f"{OPAQUE_PREFIX}{digest[:24]}"
+            register_opaque(op, _segment_callable(
+                feqns[:fi + 1], tuple(ins), unpromote, ov, promote))
+            ctx.opaque_ops.append(op)
+            out_its = iter_names(name, len(shape))
+            stmt = Statement(
+                name=name, loops=out_its,
+                trip_counts={it: int(n)
+                             for it, n in zip(out_its, shape)},
+                reads=tuple(Access(n, ()) for n in in_names_seg),
+                writes=(Access(name, out_its),),
+                flops_per_iter=1.0, op=op)
+            ctx.emit(stmt, ov, shape=shape, dtype=ov.aval.dtype)
+            if promote:
+                ctx.promoted.add(name)
+
+    for idx, fe in enumerate(flat_eqns):
+        if _supported(fe, eqn_produced):
+            flush_opaque()
+            HANDLERS[fe.eqn.primitive.name](ctx, fe)
+            n_supported += 1
+            ctx.supported_flops += ctx.statements[-1].flops
+        else:
+            pending.append((idx, fe))
+        eqn_produced.update(fe.outvars)
+    flush_opaque()
+
+    # ---- function outputs -------------------------------------------------
+    produced = {s.writes[0].array for s in ctx.statements}
+    read_anywhere = {a.array for s in ctx.statements for a in s.reads}
+    out_specs: list[OutSpec] = []
+    out_avals: list[tuple] = []
+    copied: dict[str, str] = {}
+    for v in resolved_outs:
+        if isinstance(v, Literal):
+            name = ctx.name_of(v)
+            out_specs.append(OutSpec("binding", name))
+            val = np.asarray(v.val)
+            out_avals.append((val.shape, val.dtype))
+            continue
+        name = ctx.var_name[v]
+        aval = v.aval
+        out_avals.append((tuple(int(n) for n in aval.shape), aval.dtype))
+        promoted = name in ctx.promoted
+        if name not in produced:
+            out_specs.append(OutSpec("binding", name, promoted))
+            continue
+        if name in read_anywhere:
+            # consumed downstream: forward through a copy so the value
+            # stays a *final* graph output
+            cname = copied.get(name)
+            if cname is None:
+                cname = f"{name}_out"
+                arr = ctx.arrays[name]
+                its = iter_names(cname, len(arr.shape))
+                ctx.statements.append(copy_statement(
+                    cname, cname, name, its, its,
+                    dict(zip(its, arr.shape))))
+                ctx.arrays[cname] = intermediate(
+                    cname, arr.shape, dtype_bytes=arr.dtype_bytes)
+                copied[name] = cname
+                if promoted:
+                    ctx.promoted.add(cname)
+            out_specs.append(OutSpec("array", cname, promoted))
+        else:
+            out_specs.append(OutSpec("array", name, promoted))
+
+    graph = TaskGraph(name=graph_name_of(fingerprint),
+                      arrays=ctx.arrays, statements=ctx.statements)
+    coverage = Coverage(
+        n_eqns=len(flat_eqns), n_supported=n_supported,
+        supported_flops=ctx.supported_flops,
+        opaque_flops_est=ctx.opaque_flops_est)
+    return LoweredJaxpr(
+        fingerprint=fingerprint,
+        graph=graph,
+        in_names=tuple(in_names),
+        const_names=tuple(const_names),
+        static_bindings=dict(ctx.static),
+        in_avals=tuple((tuple(int(n) for n in v.aval.shape), v.aval.dtype)
+                       for v in jaxpr.invars),
+        out_specs=tuple(out_specs),
+        out_avals=tuple(out_avals),
+        coverage=coverage,
+        opaque_ops=tuple(ctx.opaque_ops),
+    )

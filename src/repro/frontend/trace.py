@@ -1,0 +1,204 @@
+"""``trace(fn, *args)``: capture a JAX callable into the Prometheus pipeline.
+
+``trace`` runs ``jax.make_jaxpr`` over the flattened callable, fingerprints
+the resulting jaxpr (structure + avals + inlined structural consts), and
+resolves the lowering through a process-wide bounded LRU **trace cache**
+keyed by that fingerprint — the front-door counterpart of the compiled
+program cache: two traces of the same structure share one
+:class:`~repro.frontend.lowering.LoweredJaxpr` (graph, coverage, solved
+plan), and because the shared graph fingerprints identically, they also
+share program-cache entries downstream.
+
+``traced_graph(name)`` resolves a ``traced:<fp16>`` graph name back to its
+graph — :func:`repro.core.solver.build_graph`'s hook for traced sources, so
+``measure_plan``/benchmarks treat traced workloads exactly like polybench
+kernels.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+
+import jax
+
+from .executable import TracedFunction
+from .lowering import (LoweredJaxpr, fingerprint_jaxpr, flatten_jaxpr,
+                       graph_name_of, lower_flat)
+
+#: Default LRU capacity of the process-wide trace cache.
+DEFAULT_TRACE_CACHE_SIZE = 64
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return max(1, int(os.environ.get(name, default)))
+    except ValueError:
+        return default
+
+
+class TraceCache:
+    """Bounded LRU of lowered jaxprs, keyed by jaxpr fingerprint.
+
+    Thread-safe (the serving engine registers functions from server
+    threads); the graph-name index lets :func:`traced_graph` resolve
+    ``traced:<fp16>`` names in O(1).
+    """
+
+    def __init__(self, capacity: int = DEFAULT_TRACE_CACHE_SIZE):
+        self.lock = threading.RLock()
+        self.capacity = max(1, capacity)
+        self._entries: OrderedDict[str, LoweredJaxpr] = OrderedDict()
+        self._by_name: dict[str, str] = {}      # graph name -> fingerprint
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self.lock:
+            return len(self._entries)
+
+    def get(self, fp: str) -> LoweredJaxpr | None:
+        with self.lock:
+            rec = self._entries.get(fp)
+            if rec is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(fp)
+            self.hits += 1
+            return rec
+
+    def put(self, fp: str, rec: LoweredJaxpr) -> LoweredJaxpr:
+        with self.lock:
+            self._entries[fp] = rec
+            self._by_name[rec.graph.name] = fp
+            self._entries.move_to_end(fp)
+            while len(self._entries) > self.capacity:
+                _, old = self._entries.popitem(last=False)
+                self._drop(old)
+            return rec
+
+    def put_if_absent(self, fp: str, rec: LoweredJaxpr) -> LoweredJaxpr:
+        """Admit ``rec`` unless a concurrent trace of the same structure
+        got there first — the winner's record is what every caller keeps,
+        so the shared plan cache stays shared (both lowerings register
+        identical opaque digests, so the loser leaves no orphans)."""
+        with self.lock:
+            cur = self._entries.get(fp)
+            if cur is not None:
+                self._entries.move_to_end(fp)
+                return cur
+            return self.put(fp, rec)
+
+    def _drop(self, rec: LoweredJaxpr) -> None:
+        """Eviction hook: the opaque-segment callables registered by this
+        record leave the codegen registry with it (a compiled program that
+        outlives the record only needs them again on a re-trace, which
+        re-registers identical semantics)."""
+        from ..codegen.reference import unregister_opaque
+        self._by_name.pop(rec.graph.name, None)
+        unregister_opaque(rec.opaque_ops)
+        self.evictions += 1
+
+    def by_graph_name(self, name: str) -> LoweredJaxpr | None:
+        with self.lock:
+            fp = self._by_name.get(name)
+            return self._entries.get(fp) if fp is not None else None
+
+    def resize(self, capacity: int) -> None:
+        with self.lock:
+            self.capacity = max(1, capacity)
+            while len(self._entries) > self.capacity:
+                _, old = self._entries.popitem(last=False)
+                self._drop(old)
+
+    def clear(self) -> None:
+        with self.lock:
+            from ..codegen.reference import unregister_opaque
+            for rec in self._entries.values():
+                unregister_opaque(rec.opaque_ops)
+            self._entries.clear()
+            self._by_name.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+
+    def stats(self) -> dict:
+        with self.lock:
+            return {"size": len(self._entries), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "graphs": sorted(self._by_name)}
+
+
+_CACHE = TraceCache(_env_int("REPRO_TRACE_CACHE_SIZE",
+                             DEFAULT_TRACE_CACHE_SIZE))
+
+
+def trace_cache() -> TraceCache:
+    """The process-wide trace cache."""
+    return _CACHE
+
+
+def trace_cache_stats() -> dict:
+    return _CACHE.stats()
+
+
+def clear_trace_cache() -> None:
+    """Drop every cached lowering, including the opaque-segment callables
+    the records registered with the codegen registry (re-tracing
+    re-registers identical semantics)."""
+    _CACHE.clear()
+
+
+def traced_graph(name: str):
+    """Resolve a ``traced:<fp16>`` graph name to its TaskGraph (the
+    :func:`repro.core.solver.build_graph` hook for traced sources)."""
+    rec = _CACHE.by_graph_name(name)
+    if rec is None:
+        raise KeyError(
+            f"traced graph {name!r} is not in this process's trace cache — "
+            "call repro.frontend.trace(fn, *example_inputs) first")
+    return rec.graph
+
+
+def trace(fn, *example_args, name: str | None = None) -> TracedFunction:
+    """Capture ``fn`` at the example arguments' shapes/dtypes.
+
+    Returns a :class:`TracedFunction` whose graph covers the affine subset
+    of the function (dot_general, elementwise add/sub/mul/neg, transpose,
+    broadcast_in_dim, full-axis reduce_sum — all at float32) as solver
+    statements and everything else as opaque passthrough segments, so *any*
+    function executes end-to-end with the supported core optimized.
+
+    The lowering is cached process-wide by jaxpr fingerprint; const values
+    captured by the closure are bound on the returned instance, so
+    structurally-identical closures share graphs, plans and compiled
+    programs while keeping their own values.
+    """
+    flat, in_tree = jax.tree_util.tree_flatten(tuple(example_args))
+    trees: list = []
+
+    def flat_fn(*vals):
+        args = jax.tree_util.tree_unflatten(in_tree, list(vals))
+        out = fn(*args)
+        flat_out, out_tree = jax.tree_util.tree_flatten(out)
+        trees.append(out_tree)
+        return flat_out
+
+    closed = jax.make_jaxpr(flat_fn)(*flat)
+    out_tree = trees[-1]
+    flat_eqns, resolved_outs, sub_consts = flatten_jaxpr(closed.jaxpr)
+    fp = fingerprint_jaxpr(closed, sub_consts)
+    rec = _CACHE.get(fp)
+    if rec is None:
+        # put_if_absent: if a concurrent trace of the same structure wins
+        # the race, keep ITS record so the shared plan cache stays shared
+        rec = _CACHE.put_if_absent(
+            fp, lower_flat(closed, flat_eqns, resolved_outs, sub_consts,
+                           fp))
+    assert rec.graph.name == graph_name_of(fp)
+    return TracedFunction(
+        fn=fn, record=rec, const_values=tuple(closed.consts),
+        in_tree=in_tree, out_tree=out_tree,
+        example_flat=tuple(flat), name=name or getattr(fn, "__name__", "fn"))

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import combine_terms
+from .ref import combine_terms, project_term
 from .spec import ContractionSpec, Operand
 
 
@@ -77,18 +77,20 @@ def _make_kernel(spec: ContractionSpec):
             # The joint contraction is linear in each reduction block, so
             # summing per-block einsums over the reduction grid is exact.
             return contrib(read_vals)
-        # "add": an operand missing a reduction iterator is constant across
-        # that reduction's blocks — count its term once (on the first
-        # visit), not once per block, matching the einsum projection.
+        # "add"/"sub": an operand missing a reduction iterator is constant
+        # across that reduction's blocks — count its term once (on the
+        # first visit), not once per block, matching the einsum projection.
         total = jnp.zeros(out_block, jnp.float32)
-        for sub, opnd, v in zip(read_subs, spec.reads, read_vals):
-            term = jnp.einsum(f"{sub}->{out_sub}", v,
-                              preferred_element_type=jnp.float32)
+        for i, (sub, opnd, v) in enumerate(zip(read_subs, spec.reads,
+                                               read_vals)):
+            term = project_term(sub, out_sub, v, out_block)
             missing = [d for d in red_dims
                        if loop_names[d] not in opnd.iters]
             pred = _at_zero(missing)
             if pred is not None:
                 term = jnp.where(pred, term, jnp.zeros_like(term))
+            if spec.op == "sub" and i > 0:
+                term = -term
             total += term
         return total
 

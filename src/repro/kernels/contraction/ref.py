@@ -5,9 +5,9 @@ operands; numerically identical (up to f32 association order) to the Pallas
 kernel, and to the statement-level reference executor.
 
 ``combine_terms`` is the single definition of the op semantics ("mul" =
-joint product contraction, "add" = sum of per-operand projections); the
-Pallas kernel body reuses it on VMEM blocks so oracle and kernel cannot
-drift apart.
+joint product contraction, "add"/"sub" = signed sum of per-operand
+projections); the Pallas kernel body reuses it on VMEM blocks so oracle and
+kernel cannot drift apart.
 """
 from __future__ import annotations
 
@@ -17,19 +17,44 @@ import jax.numpy as jnp
 from .spec import ContractionSpec, Operand
 
 
+def project_term(sub: str, out_sub: str, v: jax.Array,
+                 out_shape: tuple[int, ...]) -> jax.Array:
+    """Project one operand onto the output iterators.
+
+    Operand iterators absent from the output are summed out (einsum
+    projection); output iterators absent from the operand are broadcast —
+    the frontend's lowering of ``broadcast_in_dim`` and of size-1
+    elementwise operands relies on this (einsum alone cannot introduce an
+    output label its inputs lack).
+    """
+    keep = "".join(c for c in out_sub if c in sub)
+    term = jnp.einsum(f"{sub}->{keep}", v,
+                      preferred_element_type=jnp.float32)
+    if keep != out_sub:
+        missing = tuple(i for i, c in enumerate(out_sub) if c not in keep)
+        term = jnp.broadcast_to(jnp.expand_dims(term, missing), out_shape)
+    return term
+
+
 def combine_terms(subs: list[str], out_sub: str, op: str,
                   vals: list[jax.Array],
                   zero_shape: tuple[int, ...]) -> jax.Array:
-    """Combine operands per the op semantics (shared by oracle + kernel)."""
+    """Combine operands per the op semantics (shared by oracle + kernel).
+
+    ``"sub"`` is the sum-of-projections with the first operand positive and
+    every later operand negated (``a - b - c``) — the lowering of the
+    elementwise ``sub``/``neg`` primitives.
+    """
     if not vals:
         return jnp.zeros(zero_shape, jnp.float32)
     if op == "mul":
         return jnp.einsum(f"{','.join(subs)}->{out_sub}", *vals,
                           preferred_element_type=jnp.float32)
     total = None
-    for sub, v in zip(subs, vals):
-        term = jnp.einsum(f"{sub}->{out_sub}", v,
-                          preferred_element_type=jnp.float32)
+    for i, (sub, v) in enumerate(zip(subs, vals)):
+        term = project_term(sub, out_sub, v, zero_shape)
+        if op == "sub" and i > 0:
+            term = -term
         total = term if total is None else total + term
     return total
 

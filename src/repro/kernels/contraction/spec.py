@@ -14,7 +14,10 @@ Semantics (matching the reference oracle in ``repro.codegen.reference``):
 * ``op == "mul"``: the contribution is the product of all read operands,
   contracted over the reduction loops (an einsum).
 * ``op == "add"``: the contribution is the sum of the read operands, each
-  projected onto the output iterators (sum of single-operand einsums).
+  projected onto the output iterators (sum of single-operand einsums, with
+  output iterators absent from an operand broadcast).
+* ``op == "sub"``: like ``"add"`` but every operand after the first is
+  negated (the elementwise ``a - b`` / ``-x`` lowering of the frontend).
 * ``init_reads`` is the fused init statement's operand list (empty tuple
   means "initialise to zeros"); ``init_op`` combines them like ``op`` does.
   The init value is materialised on the *first* visit to an output tile —
@@ -78,7 +81,8 @@ class ContractionSpec:
             if len(set(opnd.iters)) != len(opnd.iters):
                 raise ValueError(f"operand {opnd} repeats an iterator "
                                  "(non-affine access)")
-        if self.op not in ("mul", "add") or self.init_op not in ("mul", "add"):
+        ops = ("mul", "add", "sub")
+        if self.op not in ops or self.init_op not in ops:
             raise ValueError(f"bad op {self.op!r}/{self.init_op!r}")
         # The kernel's single accumulator requires the reduction grid dims
         # to iterate fastest per output tile: reductions must form the

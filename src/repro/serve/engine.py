@@ -11,6 +11,12 @@ executions of solved plans through the whole-plan compiled-program cache
 (`repro.codegen.program`), so after the first request for a (graph, plan,
 impl) triple every subsequent request — including from a *new* PlanEngine —
 hits a fully compiled program with zero re-lowering or re-tracing.
+
+Workloads need not be hand-modeled graphs: ``register_function`` traces an
+arbitrary JAX callable through ``repro.frontend``, solves it, and serves it
+through the same cache/pool/warmup path — requests for function entries
+pass positional-argument tuples instead of array dicts and get the
+function's own result pytree back.
 """
 from __future__ import annotations
 
@@ -135,6 +141,9 @@ class PlanEngine:
         # per registration, not per request — submit() is pure dispatch
         self._keys: dict[tuple[str, str], tuple] = {}
         self._last_use: dict[str, float] = {}
+        # names registered through register_function: the TracedFunction
+        # binds positional args to graph arrays and rebuilds result pytrees
+        self._functions: dict[str, Any] = {}
         self.requests = 0
         self.per_name: dict[str, int] = {}
 
@@ -149,14 +158,43 @@ class PlanEngine:
                     self.unregister(lru)
             self._registry[name] = (graph, plan)
             self._last_use[name] = time.monotonic()
-            self._keys = {k: v for k, v in self._keys.items()
+            self._functions.pop(name, None)   # plain graphs shed any old
+            self._keys = {k: v for k, v in self._keys.items()  # traced glue
                           if k[0] != name}
+
+    def register_function(self, name: str, fn, example_inputs,
+                          *, solver_opts=None, hw=None):
+        """Trace an arbitrary JAX callable (``repro.frontend``), solve its
+        graph and register it for serving under ``name``.
+
+        ``example_inputs`` is the positional-argument tuple fixing shapes
+        and dtypes.  Requests for function entries pass the same tuple
+        shape to :meth:`submit` (or a dict of graph arrays, as for plain
+        registrations).  Returns the :class:`TracedFunction` so callers can
+        inspect coverage or validate against the ``jax.jit`` oracle.
+        """
+        from ..frontend import trace
+        tf = trace(fn, *example_inputs, name=name)
+        if not tf.graph.statements:
+            raise ValueError(
+                f"{name}: function lowered to an empty graph (pure "
+                "passthrough) — nothing to serve")
+        plan = tf.solve(hw=hw, opts=solver_opts)
+        with self._lock:
+            # registry entry + function-binding glue must appear atomically:
+            # a concurrent positional-tuple submit between the two would see
+            # the entry without the binder and hand the raw tuple to the
+            # program (the lock is reentrant, register() retakes it)
+            self.register(name, tf.graph, plan)
+            self._functions[name] = tf
+        return tf
 
     def unregister(self, name: str) -> None:
         with self._lock:
             self._registry.pop(name, None)
             self._last_use.pop(name, None)
             self.per_name.pop(name, None)
+            self._functions.pop(name, None)
             self._keys = {k: v for k, v in self._keys.items()
                           if k[0] != name}
 
@@ -181,7 +219,7 @@ class PlanEngine:
         from ..kernels import dispatch
         t0 = time.monotonic()
         out = self.submit(name, inputs)
-        for v in out.values():
+        for v in jax.tree_util.tree_leaves(out):
             v.block_until_ready()
         impl = self._impl or dispatch.current_impl()
         if self.sc.pool_size is not None:
@@ -195,7 +233,7 @@ class PlanEngine:
             clones = entry.program.pool_size if entry is not None else 1
         for _ in range(clones - 1):
             out = self.submit(name, inputs)
-            for v in out.values():
+            for v in jax.tree_util.tree_leaves(out):
                 v.block_until_ready()
         return time.monotonic() - t0
 
@@ -220,15 +258,29 @@ class PlanEngine:
         return compiled_program(graph, plan, impl,
                                 pool_size=self.sc.pool_size)
 
-    def submit(self, name: str, inputs: dict) -> dict:
-        """Execute one request; hits the compiled program for ``name``."""
+    def submit(self, name: str, inputs) -> Any:
+        """Execute one request; hits the compiled program for ``name``.
+
+        ``inputs`` is a dict of graph arrays for plain registrations.  For
+        ``register_function`` entries it may also be a tuple/list of
+        positional arguments matching the traced signature — the request is
+        bound through the TracedFunction and returns the function's result
+        pytree instead of a raw array dict.
+        """
         from ..kernels import dispatch
         impl = self._impl or dispatch.current_impl()
+        with self._lock:
+            tf = self._functions.get(name)
+        env = None
+        if tf is not None and not isinstance(inputs, dict):
+            env = tf.bind_args(tuple(inputs))
         prog = self._resolve(name, impl)
         with self._lock:
             self.requests += 1
             self.per_name[name] = self.per_name.get(name, 0) + 1
             self._last_use[name] = time.monotonic()
+        if env is not None:
+            return tf.unbind(prog(env), env)
         return prog(inputs)
 
     def stats(self) -> dict:
@@ -242,6 +294,7 @@ class PlanEngine:
             requests = self.requests
             registered = len(self._registry)
             per_name = dict(self.per_name)
+            functions = sorted(self._functions)
         pools = {}
         for (name, impl), key in keys.items():
             entry = cache.entry(key)
@@ -257,6 +310,7 @@ class PlanEngine:
         hit_rate = s["hits"] / max(1, s["hits"] + s["misses"])
         return {"requests": requests,
                 "registered": registered,
+                "functions": functions,
                 "per_name": per_name,
                 "hit_rate": round(hit_rate, 4),
                 "pools": pools,

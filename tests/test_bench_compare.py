@@ -213,3 +213,79 @@ def test_committed_concurrent_baseline_is_gateable():
         pytest.skip("no committed concurrent baseline")
     data = json.loads(path.read_text())
     assert bench_compare.compare_concurrent(data, data) == []
+
+
+# ---------------------------------------------------------------------------
+# Frontend trace gate
+# ---------------------------------------------------------------------------
+def _fbench(workloads: dict) -> dict:
+    return {"benchmark": "frontend_trace", "workloads": workloads,
+            "gmean_ratio": 0.0}
+
+
+def _w(ratio: float, validated: bool = True, cov_e: float = 1.0,
+       cov_f: float = 1.0) -> dict:
+    return {"ratio": ratio, "validated": validated,
+            "coverage_eqns": cov_e, "coverage_flops": cov_f}
+
+
+def test_frontend_gate_passes_on_equal_runs():
+    base = _fbench({"gemm_chain": _w(0.7), "mlp_block": _w(0.6, cov_f=0.99)})
+    assert bench_compare.compare_frontend(base, base) == []
+
+
+def test_frontend_gate_fails_validation_with_correctness_tag():
+    base = _fbench({"gemm_chain": _w(0.7)})
+    fresh = _fbench({"gemm_chain": _w(0.7, validated=False)})
+    failures = bench_compare.compare_frontend(base, fresh)
+    assert failures and all(
+        f.startswith(bench_compare.CORRECTNESS_TAG) for f in failures)
+
+
+def test_frontend_gate_fails_coverage_drop_with_correctness_tag():
+    base = _fbench({"mlp_block": _w(0.6, cov_f=0.99)})
+    fresh = _fbench({"mlp_block": _w(0.6, cov_f=0.80)})
+    failures = bench_compare.compare_frontend(base, fresh)
+    assert any("coverage_flops dropped" in f for f in failures)
+    assert all(f.startswith(bench_compare.CORRECTNESS_TAG) for f in failures)
+
+
+def test_frontend_gate_ratio_band():
+    base = _fbench({"gemm_chain": _w(0.70)})
+    # -43% is inside the deliberately wide 50% default band (the jit side
+    # of the ratio is XLA's own CPU timing, noisy run-to-run)
+    assert bench_compare.compare_frontend(
+        base, _fbench({"gemm_chain": _w(0.40)})) == []
+    failures = bench_compare.compare_frontend(
+        base, _fbench({"gemm_chain": _w(0.30)}))
+    assert any("ratio regressed" in f for f in failures)
+    # a tightened band is honoured
+    failures = bench_compare.compare_frontend(
+        base, _fbench({"gemm_chain": _w(0.40)}), max_regress=0.20)
+    assert any("ratio regressed" in f for f in failures)
+
+
+def test_frontend_cli(tmp_path):
+    fbase = tmp_path / "fbase.json"
+    ffresh = tmp_path / "ffresh.json"
+    fbase.write_text(json.dumps(_fbench({"gemm_chain": _w(0.7)})))
+    argv = ["--frontend-baseline", str(fbase),
+            "--frontend-fresh", str(ffresh)]
+    ffresh.write_text(json.dumps(
+        _fbench({"gemm_chain": _w(0.7, validated=False)})))
+    assert bench_compare.main(argv) == 2          # correctness: no retry
+    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(0.3)})))
+    assert bench_compare.main(argv) == 1          # timing: retryable
+    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(0.68)})))
+    assert bench_compare.main(argv) == 0
+
+
+def test_committed_frontend_baseline_is_gateable():
+    """The committed BENCH_frontend.json must pass its own gate: every
+    workload validated against the jax.jit oracle."""
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_frontend.json"
+    if not path.exists():
+        pytest.skip("no committed frontend baseline")
+    data = json.loads(path.read_text())
+    assert bench_compare.compare_frontend(data, data) == []

@@ -1,0 +1,338 @@
+"""repro.frontend: jaxpr capture -> TaskGraph -> solved whole-plan program.
+
+Coverage contract:
+* every supported primitive round-trips against the ``jax.jit`` oracle;
+* a function containing unsupported primitives still executes end-to-end
+  through opaque fallback partitioning (with coverage < 1);
+* the trace cache shares lowerings (and graphs) across identical traces;
+* a ``repro.models`` FFN block and a >=3-matmul chain execute correctly on
+  both the ``xla`` and ``pallas_interpret`` impls (the acceptance bar);
+* traced workloads serve through ``PlanEngine.register_function``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import frontend
+from repro.codegen import OPAQUE_PREFIX
+from repro.core.solver import SolverOptions, build_graph
+
+OPTS = SolverOptions(time_budget_s=6.0)
+
+
+def _arr(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _roundtrip(fn, *args, impl=None, full_coverage=True, opts=OPTS):
+    tf = frontend.trace(fn, *args)
+    if full_coverage:
+        assert tf.coverage.eqn_ratio == 1.0, tf.coverage.to_jsonable()
+    tf.validate(impl=impl, plan=tf.solve(opts=opts))
+    return tf
+
+
+# ---------------------------------------------------------------------------
+# Per-primitive round trips vs the jax.jit oracle
+# ---------------------------------------------------------------------------
+def test_dot_general_plain():
+    _roundtrip(lambda a, b: a @ b, _arr((17, 23)), _arr((23, 11), 1))
+
+
+def test_dot_general_batched():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)   # noqa: E731
+    _roundtrip(f, _arr((3, 8, 12)), _arr((3, 12, 6), 1))
+
+
+def test_dot_general_multi_contract():
+    f = lambda a, b: jnp.einsum("ikl,klj->ij", a, b)    # noqa: E731
+    _roundtrip(f, _arr((7, 5, 6)), _arr((5, 6, 9), 1))
+
+
+def test_elementwise_add_mul_sub():
+    f = lambda a, b: (a + b) * a - b                    # noqa: E731
+    _roundtrip(f, _arr((9, 14)), _arr((9, 14), 1))
+
+
+def test_elementwise_scalar_and_neg():
+    f = lambda a: -(a * 2.0) + 1.5                      # noqa: E731
+    _roundtrip(f, _arr((6, 10)))
+
+
+def test_broadcast_in_dim_vector_bias():
+    f = lambda a, b: a + b                              # noqa: E731
+    _roundtrip(f, _arr((12, 7)), _arr((7,), 1))
+
+
+def test_broadcast_size1_dim():
+    f = lambda a, b: a * b                              # noqa: E731
+    _roundtrip(f, _arr((5, 8)), _arr((1, 8), 1))
+
+
+def test_transpose():
+    f = lambda a: a.T @ a                               # noqa: E731
+    _roundtrip(f, _arr((13, 9)))
+
+
+def test_transpose_3d():
+    f = lambda a: jnp.transpose(a, (2, 0, 1))           # noqa: E731
+    _roundtrip(f, _arr((4, 5, 6)))
+
+
+def test_reduce_sum_axis():
+    f = lambda a: a.sum(axis=0)                         # noqa: E731
+    _roundtrip(f, _arr((11, 15)))
+
+
+def test_reduce_sum_multi_axis():
+    f = lambda a: a.sum(axis=(0, 2))                    # noqa: E731
+    _roundtrip(f, _arr((5, 7, 6)))
+
+
+def test_reduce_sum_to_scalar_goes_opaque():
+    tf = frontend.trace(lambda a: a.sum() * a, _arr((6, 7)))
+    assert tf.coverage.eqn_ratio < 1.0      # rank-0 result + its consumer
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+def test_pjit_inlining_sees_through_jax_nn():
+    x = _arr((8, 16))
+    tf = frontend.trace(jax.nn.silu, x)
+    # silu = x * logistic(x): the mul is supported, logistic is opaque
+    assert tf.coverage.n_supported >= 1
+    assert 0.0 < tf.coverage.eqn_ratio < 1.0
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+# ---------------------------------------------------------------------------
+# Fallback partitioning around unsupported primitives
+# ---------------------------------------------------------------------------
+def test_unsupported_primitive_fallback_partition():
+    def fn(a, b):
+        h = a @ b                 # supported
+        h = jnp.tanh(h)           # opaque
+        return h @ b.T            # supported again
+
+    a, b = _arr((10, 12)), _arr((12, 8), 1)
+    tf = frontend.trace(fn, a, b)
+    cov = tf.coverage
+    assert cov.n_supported == 3 and cov.n_eqns == 4
+    ops = [s.op for s in tf.graph.statements]
+    assert any(op.startswith(OPAQUE_PREFIX) for op in ops)
+    assert sum(op == "mul" for op in ops) == 2
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+def test_fully_opaque_function_still_runs():
+    fn = lambda a: jnp.sort(jnp.abs(a), axis=0)         # noqa: E731
+    tf = frontend.trace(fn, _arr((6, 4)))
+    assert tf.coverage.eqn_ratio == 0.0
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+def test_non_f32_dtypes_go_opaque_but_execute():
+    def fn(a):
+        h = a.astype(jnp.bfloat16)
+        return (h @ h.T).astype(jnp.float32)
+
+    tf = frontend.trace(fn, _arr((6, 9)))
+    assert tf.coverage.eqn_ratio == 0.0     # bf16 dot is outside the subset
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+def test_output_consumed_downstream_is_still_returned():
+    def fn(a, b):
+        e = a @ b
+        return e, e @ b.T         # e is both an output and consumed
+
+    tf = frontend.trace(fn, _arr((7, 5)), _arr((5, 9), 1))
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+def test_passthrough_and_constant_outputs():
+    def fn(a):
+        return a, jnp.float32(3.0), a @ a.T
+
+    tf = frontend.trace(fn, _arr((5, 5)))
+    out = tf.executable(opts=OPTS)(_arr((5, 5)))
+    ref = jax.jit(fn)(_arr((5, 5)))
+    for o, r in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-4, atol=2e-3)
+
+
+def test_closure_consts_are_hoisted_and_bound_per_trace():
+    w1 = _arr((6, 8), 3)
+    w2 = _arr((6, 8), 4)
+
+    def make(w):
+        return lambda x: x @ (w * 1.0)
+
+    tf1 = frontend.trace(make(w1), _arr((4, 6)))
+    tf2 = frontend.trace(make(w2), _arr((4, 6)))
+    # same structure -> same record/graph, different bound const values
+    assert tf1.record is tf2.record
+    tf1.validate(plan=tf1.solve(opts=OPTS))
+    tf2.validate(plan=tf2.solve(opts=OPTS))
+    x = _arr((4, 6), 5)
+    o1 = tf1.executable(opts=OPTS)(x)
+    o2 = tf2.executable(opts=OPTS)(x)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# Trace cache
+# ---------------------------------------------------------------------------
+def test_trace_cache_identity_and_stats():
+    frontend.clear_trace_cache()
+    fn = lambda a, b: a @ b + b.sum(axis=0)             # noqa: E731
+    args = (_arr((6, 7)), _arr((7, 9), 1))
+    t1 = frontend.trace(fn, *args)
+    before = frontend.trace_cache_stats()
+    t2 = frontend.trace(fn, *args)
+    after = frontend.trace_cache_stats()
+    assert t1.record is t2.record and t1.graph is t2.graph
+    assert after["hits"] == before["hits"] + 1
+    # different shapes -> different fingerprint -> new record
+    t3 = frontend.trace(fn, _arr((3, 7)), _arr((7, 9), 1))
+    assert t3.record is not t1.record
+    assert t3.graph.name != t1.graph.name
+
+
+def test_trace_cache_shares_solved_plan():
+    fn = lambda a: a @ a.T                              # noqa: E731
+    t1 = frontend.trace(fn, _arr((8, 6)))
+    p1 = t1.solve()
+    t2 = frontend.trace(fn, _arr((8, 6)))
+    assert t2.solve() is p1
+
+
+def test_trace_cache_eviction_releases_opaque_registry():
+    from repro.codegen.reference import opaque_fn
+    frontend.clear_trace_cache()
+    cache = frontend.trace_cache()
+    old_cap = cache.capacity
+    try:
+        cache.resize(1)
+        t1 = frontend.trace(lambda a: jnp.tanh(a) @ a, _arr((5, 5)))
+        ops = t1.record.opaque_ops
+        assert ops and all(opaque_fn(op) for op in ops)
+        # a second distinct trace evicts the first record -> its opaque
+        # callables leave the registry with it
+        frontend.trace(lambda a: jnp.sin(a) @ a, _arr((5, 5)))
+        with pytest.raises(KeyError, match="re-trace"):
+            opaque_fn(ops[0])
+        # re-tracing re-registers identical semantics
+        t3 = frontend.trace(lambda a: jnp.tanh(a) @ a, _arr((5, 5)))
+        assert t3.record.opaque_ops == ops
+        assert all(opaque_fn(op) for op in ops)
+    finally:
+        cache.resize(old_cap)
+
+
+def test_build_graph_resolves_traced_names():
+    fn = lambda a: a @ a.T                              # noqa: E731
+    tf = frontend.trace(fn, _arr((8, 6)))
+    assert build_graph(tf.graph.name) is tf.graph
+    with pytest.raises(KeyError):
+        frontend.traced_graph("traced:0000000000000000")
+
+
+def test_argument_contract_errors():
+    fn = lambda a, b: a @ b                             # noqa: E731
+    tf = frontend.trace(fn, _arr((6, 7)), _arr((7, 9), 1))
+    exe = tf.executable(opts=OPTS)
+    with pytest.raises(ValueError, match="re-trace"):
+        exe(_arr((5, 7)), _arr((7, 9)))
+    with pytest.raises(TypeError):
+        exe(_arr((6, 7)))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: FFN block + >=3-matmul chain on both impls
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_matmul_chain_both_impls(impl):
+    def chain(a, b, c, d):
+        return ((a @ b) @ c) @ d
+
+    args = (_arr((24, 32)), _arr((32, 20), 1), _arr((20, 28), 2),
+            _arr((28, 16), 3))
+    tf = frontend.trace(chain, *args)
+    assert tf.coverage.eqn_ratio == 1.0
+    plan = tf.solve(opts=OPTS)
+    tf.validate(*args, impl=impl, plan=plan)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_models_ffn_block_both_impls(impl):
+    from repro.models import ffn
+    params = ffn.init_swiglu(jax.random.PRNGKey(0), 32, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32), jnp.float32)
+
+    def block(p, v):
+        return ffn.swiglu(p, v, compute_dtype=jnp.float32)
+
+    tf = frontend.trace(block, params, x)
+    # the three projection matmuls and the gating mul are owned by the
+    # solver; silu's logistic stays opaque
+    assert tf.coverage.n_supported >= 4
+    assert tf.coverage.flop_ratio > 0.9
+    plan = tf.solve(opts=OPTS)
+    tf.validate(impl=impl, plan=plan)
+
+
+def test_models_gelu_mlp_block():
+    from repro.models import ffn
+    params = ffn.init_gelu(jax.random.PRNGKey(0), 24, 48)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 24), jnp.float32)
+
+    def block(p, v):
+        return ffn.gelu_mlp(p, v, compute_dtype=jnp.float32)
+
+    tf = frontend.trace(block, params, x)
+    assert tf.coverage.flop_ratio > 0.9
+    tf.validate(plan=tf.solve(opts=OPTS))
+
+
+# ---------------------------------------------------------------------------
+# Serving integration
+# ---------------------------------------------------------------------------
+def test_plan_engine_register_function_serves_and_warms():
+    from repro.serve import PlanEngine
+
+    a, b = _arr((16, 24)), _arr((24, 12), 1)
+
+    def fn(x, y):
+        return jnp.tanh(x @ y) @ y.T
+
+    eng = PlanEngine(impl="xla")
+    tf = eng.register_function("fn", fn, (a, b), solver_opts=OPTS)
+    assert "fn" in eng.names()
+    eng.warmup("fn", (a, b))
+    out = eng.submit("fn", (a, b))
+    ref = jax.jit(fn)(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-3)
+    st = eng.stats()
+    assert st["functions"] == ["fn"]
+    assert st["per_name"]["fn"] >= 2
+    # dict-of-arrays submission still works for function entries
+    env = tf.bind_args((a, b))
+    raw = eng.submit("fn", env)
+    assert set(raw) == set(tf.graph.final_outputs())
+    eng.unregister("fn")
+    assert eng.stats()["functions"] == []
+
+
+def test_register_function_rejects_empty_graph():
+    from repro.serve import PlanEngine
+    eng = PlanEngine(impl="xla")
+    with pytest.raises(ValueError, match="empty graph"):
+        eng.register_function("id", lambda x: x, (_arr((4, 4)),))
