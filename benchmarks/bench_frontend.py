@@ -5,8 +5,14 @@ solver/codegen pipeline; this benchmark prices that promise on two
 workloads nobody hand-modeled:
 
 * ``gemm_chain`` — a 3-matmul chain (the pure affine case: 100% coverage);
-* ``mlp_block``  — a float32 SwiGLU FFN block from ``repro.models``
-  (partial coverage: the silu ``logistic`` runs as an opaque segment).
+* ``mlp_block``  — a float32 SwiGLU FFN block from ``repro.models`` (the
+  silu chain lowers through the unary/pointwise statement families and
+  fuses into the producing dot's task);
+* ``gelu_mlp``   — a float32 GeLU FFN block (tanh/integer_pow/scalar-folding
+  coverage; the gelu tail fuses like silu);
+* ``bf16_chain`` — a 2-matmul bf16 chain with f32 accumulation
+  (``convert_element_type`` coverage: the converts alias away in the traced
+  program while plain jit executes them).
 
 For each workload it records the steady-state per-call seconds of the
 traced plan program (resolved through the serving program cache, exactly
@@ -16,9 +22,10 @@ plus the trace coverage, the program's unit census and a scale-aware
 validation of the traced outputs against the jit oracle.
 
 ``ratio`` is jit seconds over program seconds (>1 means the traced program
-beats plain jit).  On XLA:CPU the ratio hovers near parity — XLA already
-fuses these chains well — and the CI gate regresses the *same-run ratio*
-and the coverage fractions, not absolute runner speed.
+beats plain jit), computed as the *median of per-sample-pair ratios* so a
+contended host's drift and outlier windows cancel; ``jit_s``/``program_s``
+report the best windows.  The CI gate regresses the same-run ratio and the
+coverage fractions, not absolute runner speed.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_frontend \
@@ -56,28 +63,52 @@ def _workloads(seed: int = 0):
     def mlp_block(p, v):
         return ffn.swiglu(p, v, compute_dtype=jnp.float32)
 
+    gparams = ffn.init_gelu(jax.random.PRNGKey(seed + 2), 128, 256)
+
+    def gelu_mlp(p, v):
+        return ffn.gelu_mlp(p, v, compute_dtype=jnp.float32)
+
+    def barr(*shape):
+        return jnp.asarray(rng.normal(size=shape).astype(np.float32),
+                           dtype=jnp.bfloat16)
+
+    def bf16_chain(a, b, c):
+        h = jnp.dot(a, b,
+                    preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+        return jnp.dot(h, c,
+                       preferred_element_type=jnp.float32) \
+            .astype(jnp.bfloat16)
+
+    bf16_args = (barr(160, 192), barr(192, 144), barr(144, 128))
+
     return {
         "gemm_chain": (chain, chain_args),
         "mlp_block": (mlp_block, (params, x)),
+        "gelu_mlp": (gelu_mlp, (gparams, x)),
+        "bf16_chain": (bf16_chain, bf16_args),
     }
 
 
 def paired_steady_state_s(fns, *, batch: int = 10,
-                          samples: int = 7) -> list[float]:
-    """Best per-call seconds for each thunk in ``fns``, sampled alternately
-    (fn0 batch, fn1 batch, fn0 batch, ...) so drift cancels out of ratios."""
+                          samples: int = 7) -> list[list[float]]:
+    """Per-sample per-call seconds for each thunk in ``fns``, sampled
+    alternately (fn0 batch, fn1 batch, fn0 batch, ...) so slow host drift
+    hits adjacent windows of both thunks alike.  Callers take the best for
+    absolute numbers and the *median of per-sample ratios* for gates — a
+    contended host swings +-20% between windows, and best-vs-best lets one
+    lucky window of either side dominate the ratio."""
     import jax
     for fn in fns:                               # compile + warm up
         jax.block_until_ready(fn())
-    best = [float("inf")] * len(fns)
+    times: list[list[float]] = [[] for _ in fns]
     for _ in range(samples):
         for i, fn in enumerate(fns):
             t0 = time.perf_counter()
             for _ in range(batch):
                 out = fn()
             jax.block_until_ready(out)
-            best[i] = min(best[i], (time.perf_counter() - t0) / batch)
-    return best
+            times[i].append((time.perf_counter() - t0) / batch)
+    return times
 
 
 def bench(*, budget: float = 8.0, impl: str = "xla", batch: int = 10,
@@ -95,15 +126,20 @@ def bench(*, budget: float = 8.0, impl: str = "xla", batch: int = 10,
         plan = tf.solve(opts=SolverOptions(time_budget_s=budget))
         exe = tf.executable(plan=plan, impl=impl)
         jit_fn = jax.jit(fn)
-        jit_s, prog_s = paired_steady_state_s(
+        jit_t, prog_t = paired_steady_state_s(
             (lambda: jit_fn(*args), lambda: exe(*args)),
             batch=batch, samples=samples)
+        jit_s, prog_s = min(jit_t), min(prog_t)
+        pair_ratios = sorted(j / p for j, p in zip(jit_t, prog_t))
+        ratio = pair_ratios[len(pair_ratios) // 2]
         got = jax.tree_util.tree_leaves(exe(*args))
         want = jax.tree_util.tree_leaves(jit_fn(*args))
+        # half-precision graphs compare in the half-precision band (the
+        # oracle itself rounds at bf16 resolution between the dots)
+        rtol = 2e-2 if tf.record.precision_bytes <= 2 else 2e-4
         ok = len(got) == len(want) and all(
-            allclose(g, w) for g, w in zip(got, want))
+            allclose(g, w, rtol=rtol) for g, w in zip(got, want))
         program = exe.executor.program(impl)
-        ratio = jit_s / prog_s if prog_s else 0.0
         ratios.append(ratio)
         cov = tf.coverage
         entries[name] = {
@@ -118,6 +154,10 @@ def bench(*, budget: float = 8.0, impl: str = "xla", batch: int = 10,
             "program_s": prog_s,
             "ratio": round(ratio, 3),
             "model_latency_s": plan.latency_s,
+            # model-predicted over measured: the cost-model sanity band the
+            # unit tests assert on covered workloads
+            "model_ratio": round(plan.latency_s / prog_s, 3) if prog_s
+            else 0.0,
             "validated": bool(ok),
         }
     gmean = 1.0

@@ -89,7 +89,7 @@ def main() -> None:
     print(f"  {tf!r}")
     print(f"  coverage: {cov.n_supported}/{cov.n_eqns} equations "
           f"supported ({cov.flop_ratio:.0%} of est. FLOPs); the tanh "
-          "runs as an opaque passthrough segment")
+          "lowers through the unary pointwise family")
     plan_t = tf.solve(opts=SolverOptions(time_budget_s=10))
     print(f"  solved: {plan_t.latency_s * 1e6:.2f}us model latency, "
           f"{len(plan_t.configs)} tasks")

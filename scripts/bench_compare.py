@@ -36,13 +36,13 @@ Frontend gate (BENCH_frontend.json, via
 * the coverage fractions (``coverage_eqns``/``coverage_flops``) may not
   drop below the baseline — the lowering is deterministic, so any drop is
   a lowering regression, also tagged correctness;
-* no common workload's ``ratio`` (jit seconds over traced-program
-  seconds — a same-run paired ratio, robust to runner speed) may regress
-  more than ``--max-frontend-regress`` (default 50%) below baseline.  The
-  band is deliberately wide: unlike the per-task/program ratio (both
-  sides our code), the jit side is XLA's own schedule, whose CPU timing
-  swings run-to-run — the timing gate is a catastrophic-regression
-  tripwire, the correctness gates above carry the precision.
+* the fresh run's ``ratio`` fields (jit seconds over traced-program
+  seconds — a same-run paired median, robust to runner speed) gate
+  against HARD floors, not a baseline-relative band: the gmean over all
+  fresh workloads must be ≥ ``--frontend-gmean-floor`` (default 1.0 —
+  the traced program may never lose to plain ``jax.jit`` overall) and
+  every workload must be ≥ ``--frontend-workload-floor`` (default 0.95 —
+  one workload may sit inside the noise band, but not lose outright).
 
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
@@ -51,7 +51,8 @@ Usage:
         --concurrent-baseline BENCH_concurrent.json \
         --concurrent-fresh BENCH_concurrent_fresh.json \
         --frontend-baseline BENCH_frontend.json \
-        --frontend-fresh BENCH_frontend_fresh.json
+        --frontend-fresh BENCH_frontend_fresh.json \
+        --frontend-gmean-floor 1.0 --frontend-workload-floor 0.95
 """
 
 from __future__ import annotations
@@ -230,16 +231,22 @@ def compare_frontend(
     baseline: dict,
     fresh: dict,
     *,
-    max_regress: float = 0.50,
+    gmean_floor: float = 1.0,
+    workload_floor: float = 0.95,
 ) -> list[str]:
     """Frontend trace gate; returns failure messages (empty = pass).
 
     Validation and coverage gate absolutely (both are deterministic: a
     traced program that stops matching the ``jax.jit`` oracle, or a
     lowering that suddenly owns fewer equations, is a code regression, not
-    runner noise — tagged so CI never retries them).  The timing gate runs
-    on ``ratio`` — jit over traced-program seconds from the same paired
-    run — which cancels absolute machine speed like the kernel gate.
+    runner noise — tagged so CI never retries them).  The timing gate is a
+    HARD floor, not a baseline-relative band: the fresh run's gmean
+    ``ratio`` (jit seconds over traced-program seconds, a same-run paired
+    median so absolute machine speed cancels) must stay at or above
+    ``gmean_floor`` (default 1.0 — the traced program may never lose to
+    plain ``jax.jit``), and no single workload may fall below
+    ``workload_floor`` (default 0.95 — one workload may sit in the noise
+    band, but not lose outright).
     """
     failures: list[str] = []
     base_w = baseline["workloads"]
@@ -268,14 +275,21 @@ def compare_frontend(
                     f"{CORRECTNESS_TAG} {name}: {field} dropped "
                     f"{base_c:.4f} -> {new_c:.4f} (lowering regression)"
                 )
-        base_r = float(base_w[name].get("ratio", 0.0))
+    for name in sorted(fresh_w):
         new_r = float(fresh_w[name].get("ratio", 0.0))
-        if base_r > 0 and new_r < base_r * (1.0 - max_regress):
+        if new_r < workload_floor:
             failures.append(
-                f"{name}: jit/program ratio regressed "
-                f"{base_r:.3f}x -> {new_r:.3f}x "
-                f"(> {max_regress:.0%} below baseline)"
+                f"{name}: jit/program ratio {new_r:.3f}x below the "
+                f"{workload_floor:.2f}x per-workload floor"
             )
+    fresh_g = gmean([float(fresh_w[n].get("ratio", 0.0))
+                     for n in sorted(fresh_w)])
+    if fresh_g < gmean_floor:
+        failures.append(
+            f"gmean jit/program ratio {fresh_g:.3f}x below the "
+            f"{gmean_floor:.2f}x floor — the traced program must not "
+            f"lose to plain jax.jit"
+        )
     return failures
 
 
@@ -321,7 +335,8 @@ def main(argv: list[str] | None = None) -> int:
         default=None,
         help="freshly measured BENCH_frontend.json",
     )
-    ap.add_argument("--max-frontend-regress", type=float, default=0.50)
+    ap.add_argument("--frontend-gmean-floor", type=float, default=1.0)
+    ap.add_argument("--frontend-workload-floor", type=float, default=0.95)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -400,7 +415,10 @@ def main(argv: list[str] | None = None) -> int:
                 f"validated={e.get('validated')}"
             )
         failures += compare_frontend(
-            fbase, ffresh, max_regress=args.max_frontend_regress
+            fbase,
+            ffresh,
+            gmean_floor=args.frontend_gmean_floor,
+            workload_floor=args.frontend_workload_floor,
         )
 
     if failures:

@@ -32,7 +32,8 @@ from ..core.fusion import FusedGraph, FusedTask
 from ..core.padding import pad_to_multiple
 from ..core.plan import TaskConfig
 from ..core.taskgraph import Statement
-from ..kernels.contraction import ContractionSpec, LoopDim, Operand
+from ..kernels.contraction import (ACC, ContractionSpec, EpiOp, LoopDim,
+                                   Operand)
 from ..kernels.contraction import ops as contraction_ops
 from .reference import OPAQUE_PREFIX, eval_statement
 
@@ -168,6 +169,10 @@ def _unit_spec(cfg: TaskConfig, main: Statement,
         init_reads = [out]          # previous value of the output array
         init_op = "mul"
 
+    init_coeff, init_offset = 1.0, 0.0
+    if init is not None:
+        init_coeff, init_offset = init.coeff, init.offset
+
     tcs = dict(main.trip_counts)
     if init is not None:
         for l, n in init.trip_counts.items():
@@ -192,6 +197,10 @@ def _unit_spec(cfg: TaskConfig, main: Statement,
                          for a in init_reads),
         init_op=init_op,
         buffers=2 if overlapped else 1,
+        coeff=main.coeff,
+        offset=main.offset,
+        init_coeff=init_coeff,
+        init_offset=init_offset,
     )
 
 
@@ -285,10 +294,141 @@ def _make_unit(cfg: TaskConfig, main: Statement, init: Statement | None,
                        operands=operands, out_array=out)
 
 
+# ---------------------------------------------------------------------------
+# Epilogue folding (traced graphs): elementwise tails ride inside the kernel
+# ---------------------------------------------------------------------------
+def _epi_stmt_ok(stmt: Statement) -> bool:
+    """A statement foldable as one EpiOp: pointwise over its write domain
+    (no reduction or broadcast ``z`` loops), no self-read, an op from the
+    kernel's elementwise families."""
+    if not (stmt.op in ("mul", "add", "sub")
+            or stmt.op.startswith(("unary:", "binary:"))):
+        return False
+    if stmt.density != 1.0 or len(stmt.writes) != 1:
+        return False
+    w = stmt.writes[0]
+    if any(it is None for it in w.iters) or \
+            len(set(w.iters)) != len(w.iters):
+        return False
+    if set(stmt.loops) != set(w.iters):
+        return False
+    return not any(r.array == w.array for r in stmt.reads)
+
+
+def _fold_epilogues(fg: FusedGraph, task: FusedTask,
+                    units: list[LoweredUnit]) -> list[LoweredUnit]:
+    """Fold single-consumer elementwise units into the contraction unit that
+    produces their input: the tail becomes a :class:`EpiOp` on the producer's
+    spec, applied to the finished output tile at store time — one kernel,
+    no intermediate buffer.  Iterators are renamed onto the producer's
+    ``out_iters`` via the positional map of the tail's read of the producer
+    output; a tail that transposes, reduces, broadcasts, or whose input is
+    consumed anywhere else stays a separate unit."""
+    g = fg.graph
+    outside = set(g.final_outputs())
+    for t in fg.tasks:
+        if t.tid != task.tid:
+            for s in t.statements:
+                outside.update(a.array for a in s.reads)
+
+    def unit_reads(u: LoweredUnit) -> set[str]:
+        if u.kind == "contraction":
+            return set(u.operands)
+        return {a.array for s in u.statements for a in s.reads}
+
+    changed = True
+    while changed:
+        changed = False
+        for vi, V in enumerate(units):
+            if len(V.statements) != 1 or V.kind == "opaque":
+                continue
+            s = V.statements[0]
+            if not _epi_stmt_ok(s):
+                continue
+            fold = _try_fold(units, vi, s, outside, unit_reads)
+            if fold is not None:
+                ui, new_unit = fold
+                units[ui] = new_unit
+                del units[vi]
+                changed = True
+                break
+    return units
+
+
+def _try_fold(units: list[LoweredUnit], vi: int, s: Statement, outside,
+              unit_reads) -> tuple[int, LoweredUnit] | None:
+    read_arrays = {r.array for r in s.reads}
+    for ui in range(vi - 1, -1, -1):
+        U = units[ui]
+        if U.kind != "contraction" or U.spec is None:
+            continue
+        if U.out_array not in read_arrays or U.out_array in outside:
+            continue
+        if any(U.out_array in unit_reads(w)
+               for wi, w in enumerate(units) if wi != vi):
+            continue
+        spec = U.spec
+        # Positional rename: the tail's read of the producer output maps its
+        # iterators onto the spec's out_iters (must be consistent if read
+        # more than once).
+        m: dict[str, str] | None = None
+        ok = True
+        for r in s.reads:
+            if r.array != U.out_array:
+                continue
+            if len(r.iters) != len(spec.out_iters) \
+                    or any(it is None for it in r.iters) \
+                    or len(set(r.iters)) != len(r.iters):
+                ok = False
+                break
+            mm = dict(zip(r.iters, spec.out_iters))
+            if m is None:
+                m = mm
+            elif mm != m:
+                ok = False
+                break
+        if not ok or m is None or set(s.loops) != set(m):
+            continue
+        w = s.writes[0]
+        if tuple(m[it] for it in w.iters) != tuple(spec.out_iters):
+            continue                      # transposed store — keep separate
+        if any(s.trip_counts[it] != spec.dim(oit).ori
+               for it, oit in m.items()):
+            continue
+        # Extra operands must be elementwise-aligned and already available
+        # when the producer unit runs (task inputs or earlier units' outs).
+        later_outs = {units[k].out_array for k in range(ui, len(units))}
+        epi_ok = True
+        reads: list[Operand] = []
+        for r in s.reads:
+            if r.array == U.out_array:
+                reads.append(Operand(ACC, tuple(spec.out_iters)))
+                continue
+            if any(it is None or it not in m for it in r.iters) \
+                    or r.array in later_outs:
+                epi_ok = False
+                break
+            reads.append(Operand(r.array, tuple(m[it] for it in r.iters)))
+        if not epi_ok:
+            continue
+        new_spec = dataclasses.replace(
+            spec, epilogue=spec.epilogue + (EpiOp(
+                op=s.op, reads=tuple(reads),
+                coeff=s.coeff, offset=s.offset),))
+        return ui, LoweredUnit(
+            kind="contraction", spec=new_spec,
+            statements=U.statements + (s,),
+            operands=tuple(o.array for o in new_spec.all_reads),
+            out_array=w.array)
+    return None
+
+
 def lower_task(fg: FusedGraph, task: FusedTask, cfg: TaskConfig,
                impl: str) -> TaskLowering:
     """Lower one fused task to a single jitted callable honouring the plan."""
     units = _build_units(fg, task, cfg)
+    if fg.graph.traced:
+        units = _fold_epilogues(fg, task, units)
     out_array = task.output_array
 
     # Environment arrays consumed (external to the task body): everything an

@@ -293,6 +293,24 @@ class PlanProgram:
         ``calls % pool_size``)."""
         return self._calls
 
+    def entry(self):
+        """Direct single-dispatch call info for single-segment,
+        single-device programs: ``(in_arrays, out_arrays, body)`` where
+        ``body(*vals)`` is the *untraced* segment body.
+
+        Latency-critical wrappers (``TracedExecutable``) inline the body
+        into their own single ``jax.jit`` together with const binding and
+        output restoration, so one call costs exactly one jit dispatch —
+        the per-call env dict, counter lock and pool rotation of
+        ``__call__`` measured ~9us on the frontend benchmark, most of the
+        remaining traced-vs-jit gap.  Returns ``None`` for multi-segment
+        or multi-device programs (those need the env/transfer machinery).
+        """
+        if not self._single or self._multi:
+            return None
+        seg = self.segments[0]
+        return seg.in_arrays, seg.out_arrays, self._segment_body(seg)
+
     def unit_kinds(self) -> dict[str, int]:
         """Lowered-unit census: plan-tiled ``contraction`` kernels vs
         ``einsum`` fallback vs frontend ``opaque`` passthrough segments —

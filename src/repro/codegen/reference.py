@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.taskgraph import Statement, TaskGraph
-from ..kernels.contraction.ref import combine_terms
+from ..kernels.contraction.ref import combine_terms, scale_offset
 
 #: Marker prefix of opaque statement ops (the rest is a content digest).
 OPAQUE_PREFIX = "opaque:"
@@ -104,6 +104,7 @@ def eval_statement(stmt: Statement, env: dict) -> jax.Array:
         out_sub = "".join(letters[i] for i in out_acc.iters)
         val = combine_terms(subs, out_sub, stmt.op,
                             [env[acc.array] for acc in reads], out_shape)
+    val = scale_offset(val, stmt.coeff, stmt.offset)
     if accumulate and out_acc.array in env:
         val = env[out_acc.array] + val
     return val

@@ -61,12 +61,14 @@ class FusedTask:
         return sum(s.flops for s in self.statements)
 
     def read_arrays(self) -> list[str]:
+        written = {w.array for s in self.statements for w in s.writes}
         out: list[str] = []
         for s in self.statements:
             for a in s.reads:
-                # Output-stationary: reads of the own output (accumulator)
-                # stay in registers/VMEM — not a transfer.
-                if a.array != self.output_array and a.array not in out:
+                # Output-stationary: reads of arrays the task itself writes
+                # (the accumulator, or intermediates of a fused pointwise
+                # chain) stay in registers/VMEM — not a transfer.
+                if a.array not in written and a.array not in out:
                     out.append(a.array)
         return out
 
@@ -128,7 +130,11 @@ class FusedGraph:
 
 
 def fuse(graph: TaskGraph) -> FusedGraph:
-    """Merge statements with identical output arrays into fused tasks."""
+    """Merge statements with identical output arrays into fused tasks.
+
+    For traced graphs (``graph.traced``) a second pass then merges
+    all-pointwise consumer tasks into their producers (:func:`_fuse_pointwise`)
+    so activation chains ride inside the contraction task that feeds them."""
     tasks: list[FusedTask] = []
     owner: dict[str, FusedTask] = {}   # array -> fused task currently writing
     for s in graph.statements:
@@ -148,7 +154,15 @@ def fuse(graph: TaskGraph) -> FusedGraph:
             tasks.append(task)
             owner[key] = task
 
-    # Dataflow edges between fused tasks: RAW on arrays across tasks.
+    if graph.traced:
+        tasks = _fuse_pointwise(graph, tasks)
+    return FusedGraph(graph=graph, tasks=tasks,
+                      edges=_task_edges(graph, tasks))
+
+
+def _task_edges(graph: TaskGraph,
+                tasks: list[FusedTask]) -> list[tuple[int, int, str]]:
+    """(producer_tid, consumer_tid, array) RAW edges across fused tasks."""
     stmt_task: dict[str, int] = {}
     for t in tasks:
         for s in t.statements:
@@ -159,7 +173,78 @@ def fuse(graph: TaskGraph) -> FusedGraph:
         v = stmt_task[graph.statements[j].name]
         if u != v:
             edges.add((u, v, arr))
-    return FusedGraph(graph=graph, tasks=tasks, edges=sorted(edges))
+    return sorted(edges)
+
+
+_POINTWISE_OPS = ("add", "sub", "mul")
+
+
+def _pointwise_stmt(s: Statement) -> bool:
+    """True for elementwise statements a producer can absorb: no real
+    reductions (trip-1 broadcast ``z`` dims are fine), no accumulation,
+    no triangular density, and an op the kernels evaluate pointwise."""
+    if not (s.op in _POINTWISE_OPS or s.op.startswith(("unary:", "binary:"))):
+        return False
+    if s.density != 1.0:
+        return False
+    if any(s.trip_counts[l] > 1 for l in s.reduction_loops):
+        return False
+    written = set(s.output_arrays())
+    return not any(a.array in written for a in s.reads)
+
+
+def _fuse_pointwise(graph: TaskGraph,
+                    tasks: list[FusedTask]) -> list[FusedTask]:
+    """Merge all-pointwise consumer tasks into their producers (fixpoint).
+
+    A consumer task ``E`` whose statements are all pointwise merges into the
+    producer ``P`` of an array that *only* ``E`` reads — the activation /
+    scaling tail of a contraction then executes inside the producer's task
+    (one dataflow node, one kernel dispatch, no HBM bounce for the
+    intermediate).  Legality: the merge must not create a cycle, i.e. no
+    other predecessor of ``E`` may be reachable from ``P``.  Statements keep
+    their per-statement-unique iterators (the traced-frontend convention);
+    the solver pins non-dominant loops to their full extent, so the merged
+    search space stays the producer's.
+    """
+    while True:
+        edges = _task_edges(graph, tasks)
+        succs: dict[int, set[int]] = {}
+        consumers: dict[str, set[int]] = {}
+        for (u, v, a) in edges:
+            succs.setdefault(u, set()).add(v)
+            consumers.setdefault(a, set()).add(v)
+
+        def reachable(src: int, dst: int) -> bool:
+            seen, stack = set(), [src]
+            while stack:
+                n = stack.pop()
+                if n == dst:
+                    return True
+                for m in succs.get(n, ()):
+                    if m not in seen:
+                        seen.add(m)
+                        stack.append(m)
+            return False
+
+        merged = False
+        for (u, v, arr) in edges:
+            E = tasks[v]
+            if consumers.get(arr) != {v}:
+                continue
+            if not all(_pointwise_stmt(s) for s in E.statements):
+                continue
+            preds_e = {pu for (pu, pv, _) in edges if pv == v}
+            if any(p != u and reachable(u, p) for p in preds_e):
+                continue
+            tasks[u].statements.extend(E.statements)
+            del tasks[v]
+            for i, t in enumerate(tasks):
+                t.tid, t.name = i, f"FT{i}"
+            merged = True
+            break
+        if not merged:
+            return tasks
 
 
 def _no_intervening_reader(graph: TaskGraph, task: FusedTask,

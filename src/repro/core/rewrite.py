@@ -1,0 +1,166 @@
+"""Traced-graph rewrites that change the *work*, not just the schedule.
+
+The solver's tiling/fusion passes keep every statement's flop count fixed;
+the rewrites here run earlier, on the statement list itself, and exploit
+freedom the original program never encoded.  First (and currently only)
+pass: **matrix-chain reassociation** — a traced ``((a @ b) @ c) @ d``
+carries the user's association order, but matrix multiplication is
+associative, so the graph may legally re-parenthesize to the cheapest
+order (classic interval DP).  ``jax.jit`` executes the chain exactly as
+written; on chains with skewed dimensions the optimal order is 10-30%
+fewer flops, which is pure headroom for the traced program.
+
+Only exact product contractions participate: ``op == "mul"``, two reads,
+one 2-D output, one reduction loop, unit density and no folded
+scale/offset.  Intermediates must be single-consumer and must not escape
+(final outputs and multi-consumer values keep the user-visible
+association, bit-for-bit).  f32 accumulation order changes across a
+reassociation — the same rounding freedom XLA's own dot reordering
+already claims, well inside the oracle's 2e-4 band.
+"""
+from __future__ import annotations
+
+from .taskgraph import Access, Array, Statement, intermediate
+
+
+def _dot_pattern(s: Statement):
+    """``(i, k, j)`` iterators when ``s`` is a plain 2-D matmul
+    ``out[i, j] += a[i, k] * b[k, j]`` — else ``None``."""
+    if s.op != "mul" or s.coeff != 1.0 or s.offset != 0.0:
+        return None
+    if s.density != 1.0 or len(s.reads) != 2 or len(s.writes) != 1:
+        return None
+    w = s.writes[0]
+    if len(w.iters) != 2 or len(s.loops) != 3 or None in w.iters:
+        return None
+    i, j = w.iters
+    red = [l for l in s.loops if l not in (i, j)]
+    if len(red) != 1:
+        return None
+    k = red[0]
+    a, b = s.reads
+    if a.iters == (i, k) and b.iters == (k, j):
+        return (i, k, j)
+    return None
+
+
+def _chain_order(p: list[int]):
+    """Interval DP over dimension vector ``p`` (matrix t is p[t] x p[t+1]).
+    Returns (total_macs, split) where split[(lo, hi)] is the optimal last
+    multiplication boundary for the product of matrices lo..hi."""
+    n = len(p) - 1
+    cost = {(t, t): 0 for t in range(n)}
+    split: dict[tuple[int, int], int] = {}
+    for span in range(1, n):
+        for lo in range(n - span):
+            hi = lo + span
+            best = None
+            for m in range(lo, hi):
+                c = (cost[(lo, m)] + cost[(m + 1, hi)]
+                     + p[lo] * p[m + 1] * p[hi + 1])
+                if best is None or c < best:
+                    best, split[(lo, hi)] = c, m
+            cost[(lo, hi)] = best
+    return cost[(0, n - 1)], split
+
+
+def reassociate_matmul_chains(arrays: dict[str, Array],
+                              statements: list[Statement],
+                              protected: set[str]) -> int:
+    """Re-parenthesize left-associated matmul chains in place.
+
+    ``protected`` holds array names that must keep their exact producing
+    statement (graph final outputs).  Returns how many chains were
+    rewritten.
+    """
+    producer: dict[str, int] = {}
+    consumers: dict[str, list[tuple[int, int]]] = {}
+    for si, s in enumerate(statements):
+        for w in s.writes:
+            producer[w.array] = si
+        for ri, r in enumerate(s.reads):
+            consumers.setdefault(r.array, []).append((si, ri))
+
+    dots = {si: pat for si, s in enumerate(statements)
+            if (pat := _dot_pattern(s)) is not None}
+
+    rewritten = 0
+    chain_heads = []
+    for si in sorted(dots):
+        s = statements[si]
+        lhs = s.reads[0].array
+        lp = producer.get(lhs)
+        # chain head: the left operand is NOT itself a fusable chain link
+        if lp in dots and consumers.get(lhs) == [(si, 0)] \
+                and lhs not in protected:
+            continue
+        chain_heads.append(si)
+
+    for head in chain_heads:
+        links = [head]
+        while True:
+            out = statements[links[-1]].writes[0].array
+            if out in protected:
+                break
+            cons = consumers.get(out)
+            if cons is None or len(cons) != 1:
+                break
+            ci, ri = cons[0]
+            if ci not in dots or ri != 0:
+                break
+            links.append(ci)
+        if len(links) < 2:
+            continue
+        # matrices of the product, left to right
+        mats = [statements[links[0]].reads[0].array] + \
+               [statements[t].reads[1].array for t in links]
+        p = [arrays[mats[0]].shape[0]] + [arrays[m].shape[1] for m in mats]
+        left_cost = sum(p[0] * p[t] * p[t + 1] for t in range(1, len(mats)))
+        best_cost, split = _chain_order(p)
+        if best_cost >= left_cost:
+            continue
+
+        final = statements[links[-1]].writes[0].array
+        new_stmts: list[Statement] = []
+        counter = [0]
+
+        def emit(lo: int, hi: int) -> str:
+            if lo == hi:
+                return mats[lo]
+            m = split[(lo, hi)]
+            left, right = emit(lo, m), emit(m + 1, hi)
+            top = lo == 0 and hi == len(mats) - 1
+            name = f"{final}_ra{counter[0]}"
+            counter[0] += 1
+            out = final if top else name
+            rows, inner, cols = p[lo], p[m + 1], p[hi + 1]
+            i, j, k = f"{name}_d0", f"{name}_d1", f"{name}_r0"
+            if not top:
+                arrays[out] = intermediate(out, (rows, cols))
+            new_stmts.append(Statement(
+                name=name, loops=(i, j, k),
+                trip_counts={i: rows, j: cols, k: inner},
+                reads=(Access(left, (i, k)), Access(right, (k, j))),
+                writes=(Access(out, (i, j)),),
+                flops_per_iter=2.0))
+            return out
+
+        emit(0, len(mats) - 1)
+        # old intermediates die with their statements
+        for t in links[:-1]:
+            del arrays[statements[t].writes[0].array]
+        keep = set(links)
+        insert_at = links[-1]
+        rebuilt: list[Statement] = []
+        for si2, s2 in enumerate(statements):
+            if si2 == insert_at:
+                rebuilt.extend(new_stmts)
+            if si2 not in keep:
+                rebuilt.append(s2)
+        statements[:] = rebuilt
+        rewritten += 1
+        # indices moved: conservatively re-run on the updated list
+        if rewritten:
+            return rewritten + reassociate_matmul_chains(
+                arrays, statements, protected)
+    return rewritten

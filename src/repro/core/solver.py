@@ -136,6 +136,13 @@ def _candidate_tiles(task: FusedTask, opts: SolverOptions) \
     main = task.main
     for loop in task.loops:
         tc = tcs[loop]
+        if loop not in main.loops:
+            # Loops private to fused pointwise statements (traced chains keep
+            # per-statement iterators): pin to the full extent — the tail is
+            # evaluated whole per output tile, and enumerating tiles here
+            # would multiply the search space without changing the kernel.
+            out[loop] = [TileOption(tc, tc, tc)]
+            continue
         if not caps.tiling:
             if opts.mode == "streamhls":
                 # parallelism only via FIFO width on the innermost loop

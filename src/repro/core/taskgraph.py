@@ -66,11 +66,20 @@ class Statement:
     density: float = 1.0
     # How non-accumulator reads combine: "mul" = product (contracted over
     # reduction loops), "add" = elementwise sum of per-read projections,
-    # "sub" = like "add" with every read after the first negated, and
+    # "sub" = like "add" with every read after the first negated,
+    # "unary:<name>" = pointwise function of a single read (tanh, logistic,
+    # exp, ... — see repro.kernels.contraction.ref.unary_fn),
+    # "binary:<name>" = pointwise pairing of two reads (max/min/div), and
     # "opaque:<digest>" = passthrough segment whose semantics live in the
     # codegen opaque registry (repro.codegen.register_opaque).  Drives the
     # codegen lowering (repro.codegen) and the reference oracle.
     op: str = "mul"
+    # Affine post-scaling: the statement computes ``coeff * op(reads) +
+    # offset`` — how the frontend folds scalar literals (``x * 2.0``,
+    # ``x / c``, ``1.0 + tanh(e)``) into otherwise-affine statements
+    # instead of materializing rank-0 operands.
+    coeff: float = 1.0
+    offset: float = 0.0
 
     def __post_init__(self):
         for acc in self.reads + self.writes:
@@ -84,11 +93,16 @@ class Statement:
         """Hashable summary of everything semantically relevant — the shared
         basis for solver memo keys and codegen graph fingerprints (one
         definition so the two caches cannot drift)."""
-        return (self.name, tuple(self.loops),
-                tuple(sorted(self.trip_counts.items())),
-                tuple((a.array, tuple(a.iters)) for a in self.reads),
-                tuple((a.array, tuple(a.iters)) for a in self.writes),
-                self.flops_per_iter, self.density, self.op)
+        key = (self.name, tuple(self.loops),
+               tuple(sorted(self.trip_counts.items())),
+               tuple((a.array, tuple(a.iters)) for a in self.reads),
+               tuple((a.array, tuple(a.iters)) for a in self.writes),
+               self.flops_per_iter, self.density, self.op)
+        # Appended only when non-default so pre-existing fingerprints (and
+        # the persistent program cache keyed on them) stay stable.
+        if self.coeff != 1.0 or self.offset != 0.0:
+            key = key + (self.coeff, self.offset)
+        return key
 
     @property
     def reduction_loops(self) -> tuple[str, ...]:
@@ -122,6 +136,11 @@ class TaskGraph:
     name: str
     arrays: dict[str, Array]
     statements: list[Statement]
+    #: True for graphs lowered from a traced jaxpr (repro.frontend): their
+    #: statements carry per-statement-unique iterators and elementwise
+    #: chains, which unlocks the pointwise fusion pass and segment merging
+    #: (hand-built polybench graphs keep the conservative defaults).
+    traced: bool = False
 
     def __post_init__(self):
         names = [s.name for s in self.statements]

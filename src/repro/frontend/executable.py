@@ -157,8 +157,13 @@ class TracedFunction:
         e_flat, e_tree = jax.tree_util.tree_flatten(expect)
         g_flat, g_tree = jax.tree_util.tree_flatten(got)
         assert e_tree == g_tree, (e_tree, g_tree)
+        # When the trace carries half-precision values anywhere (inputs or
+        # intermediates), the oracle itself rounds at that resolution even
+        # if the outputs are f32 — compare in the narrowest band.
+        band = 2e-2 if self.record.precision_bytes <= 2 else 0.0
         for i, (e, g) in enumerate(zip(e_flat, g_flat)):
-            tol = rtol if rtol is not None else _default_rtol(e.dtype)
+            tol = rtol if rtol is not None else max(_default_rtol(e.dtype),
+                                                    band)
             assert_close(g, e, rtol=tol,
                          name=f"{self.name} output {i} vs jax.jit oracle")
         return True
@@ -185,12 +190,117 @@ class TracedExecutable:
                 raise ValueError(f"{tf.name}: no plan for non-empty graph")
             self._exe = plan_executor(tf.graph, plan, impl=impl, mode=mode,
                                       pool_size=pool_size)
+        # With an explicit impl the compiled program is immutable for this
+        # executable's lifetime: resolve it once and call it directly
+        # (impl=None keeps the per-call resolution so ``kernel_impl``
+        # scoping still applies).
+        self._run = self._exe
+        if self._exe is not None and impl is not None and mode == "program":
+            self._run = self._exe.program(impl)
+        # Precomputed fast-call structures: the steady-state serving path
+        # must cost dict work, not per-leaf jnp.asarray + aval formatting
+        # (measured ~80us/call on the frontend benchmark — larger than the
+        # entire jit-vs-program gap it was hiding).
+        rec = tf.record
+        self._in_tree = tf.in_tree
+        self._in_names = rec.in_names
+        self._in_avals = tuple((tuple(s), np.dtype(d))
+                               for s, d in rec.in_avals)
+        self._base_env = {**tf._consts, **rec.static_bindings}
+        self._out_info = tuple(
+            (sp.ref, sp.kind == "array", sp.promoted, np.dtype(d))
+            for sp, (_, d) in zip(rec.out_specs, rec.out_avals))
+        # Boundary restoration (rank-0 demotion, dtype cast back to the
+        # traced output dtype) as ONE jitted call: an eager ``astype`` per
+        # output costs a full dispatch (~70us/call measured on the frontend
+        # benchmark's bf16 chain — half the workload's runtime).
+        restore = tuple((promoted, dt)
+                        for _, _, promoted, dt in self._out_info)
+
+        def _restore(*vals):
+            out = []
+            for v, (promoted, dt) in zip(vals, restore):
+                if promoted:
+                    v = jnp.reshape(v, ())
+                if v.dtype != dt:
+                    v = v.astype(dt)
+                out.append(v)
+            return tuple(out)
+
+        self._finish = jax.jit(_restore)
+        # Whole-call jit: for single-segment single-device programs, the
+        # ENTIRE call — pytree/aval contract checks, const binding, the
+        # segment body and boundary restoration — traces into one jitted
+        # function over the original argument pytree.  The checks and dict
+        # work run at *trace* time (once per signature, raising the same
+        # TypeError/ValueError the slow path raises); a steady-state call
+        # is a single C++ jit dispatch, the exact price ``jax.jit(fn)``
+        # pays.  (The generic path through PlanProgram.__call__ adds an
+        # env dict, a counter lock and pool rotation: ~9us/call measured
+        # on the frontend benchmark.)
+        self._direct = None
+        entry = getattr(self._run, "entry", lambda: None)()
+        if entry is not None:
+            seg_in, seg_out, body = entry
+            base_env, in_names = self._base_env, self._in_names
+            in_tree, in_avals = self._in_tree, self._in_avals
+            out_info, out_tree, name = self._out_info, tf.out_tree, tf.name
+
+            def _direct(*call_args):
+                flat, tree = jax.tree_util.tree_flatten(call_args)
+                if tree != in_tree:
+                    raise TypeError(
+                        f"{name}: argument structure {tree} does not "
+                        f"match the traced structure {in_tree}")
+                for i, (v, (shape, dt)) in enumerate(zip(flat, in_avals)):
+                    if tuple(v.shape) != shape or v.dtype != dt:
+                        raise ValueError(
+                            f"{name}: argument {i} is {v.shape}/{v.dtype},"
+                            f" traced as {shape}/{dt} — re-trace the "
+                            "function for new shapes/dtypes")
+                env = dict(base_env)
+                env.update(zip(in_names, flat))
+                outs = dict(zip(seg_out,
+                                body(*[env[a] for a in seg_in])))
+                vals = []
+                for ref, is_array, promoted, dt in out_info:
+                    v = outs[ref] if is_array else env[ref]
+                    if promoted:
+                        v = jnp.reshape(v, ())
+                    if v.dtype != dt:
+                        v = v.astype(dt)
+                    vals.append(v)
+                return jax.tree_util.tree_unflatten(out_tree, vals)
+
+            self._direct = jax.jit(_direct)
 
     @property
     def executor(self):
         return self._exe
 
     def __call__(self, *args):
+        if self._direct is not None:
+            return self._direct(*args)
+        flat, tree = jax.tree_util.tree_flatten(args)
+        if tree == self._in_tree:
+            for v, (shape, dt) in zip(flat, self._in_avals):
+                if getattr(v, "shape", None) != shape \
+                        or getattr(v, "dtype", None) != dt:
+                    break
+            else:
+                env = dict(self._base_env)
+                env.update(zip(self._in_names, flat))
+                outs = self._run(env) if self._run is not None else {}
+                vals = [outs[ref] if is_array else env[ref]
+                        for ref, is_array, _, _ in self._out_info]
+                if any(promoted or getattr(v, "dtype", None) != dt
+                       for v, (_, _, promoted, dt)
+                       in zip(vals, self._out_info)):
+                    vals = list(self._finish(*vals))
+                return jax.tree_util.tree_unflatten(self.tf.out_tree,
+                                                    vals)
+        # slow path: normalizes non-array leaves and raises the contract
+        # errors (shape/dtype/pytree mismatch) with full context
         env = self.tf.bind_args(args)
         outs = self._exe(env) if self._exe is not None else {}
         return self.tf.unbind(outs, env)

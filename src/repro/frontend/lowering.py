@@ -7,34 +7,62 @@ seen through) and lowers the **affine subset** to
 :class:`~repro.core.taskgraph.Statement` objects the solver/codegen stack
 already understands:
 
-====================  =====================================================
-primitive             lowering
-====================  =====================================================
-``dot_general``       contraction statement (``op="mul"``): batch + free
-                      dims become output iterators, contracting dims become
-                      reduction iterators; ``flops_per_iter=2``
-``add``/``sub``       elementwise statement (``op="add"``/``"sub"``);
-                      size-1 operand dims read through a private trip-1
-                      reduction iterator (exact under the projection
-                      semantics), scalar operands read with rank-0 access
-``mul``               elementwise joint-product statement (``op="mul"``)
-``neg``               ``0 - x`` (``op="sub"`` seeded by a shared scalar
-                      zero constant)
-``transpose``         projection copy (``op="add"``, permuted read iters)
-``broadcast_in_dim``  projection copy; new output dims broadcast, size-1
-                      source dims read through a trip-1 iterator
-``reduce_sum``        projection statement with real reduction iterators
-                      (full-axis sums; rank-0 results fall back to opaque)
-====================  =====================================================
+========================  =================================================
+primitive                 lowering
+========================  =================================================
+``dot_general``           contraction statement (``op="mul"``): batch +
+                          free dims become output iterators, contracting
+                          dims become reduction iterators;
+                          ``flops_per_iter=2``
+``add``/``sub``           elementwise statement (``op="add"``/``"sub"``);
+                          size-1 operand dims read through a private
+                          trip-1 iterator (exact under the projection
+                          semantics); a scalar-*literal* operand folds
+                          into the statement's affine ``offset``
+``mul``                   elementwise joint-product statement
+                          (``op="mul"``); a scalar-literal operand folds
+                          into the statement ``coeff`` (``x * 2.0`` stays
+                          affine)
+``div``                   ``x / c`` folds to ``coeff = 1/c``; tensor
+                          divisors lower to ``op="binary:div"``
+``neg``                   affine copy with ``coeff = -1``
+``max``/``min``           scalar-literal bound folds to
+                          ``unary:max_const:<c>`` (relu's ``max(x, 0)``);
+                          tensor bounds lower to ``binary:max``/``min``
+``tanh``/``logistic``/
+``exp``/``log``/...       pointwise ``unary:<name>`` statement (see
+                          ``repro.kernels.contraction.ref``)
+``integer_pow``           ``unary:pow_<k>``
+``transpose``             projection copy (``op="add"``, permuted iters)
+``broadcast_in_dim``      projection copy; new output dims broadcast,
+                          size-1 source dims read through a trip-1 iter
+``reshape``/``squeeze``   projection copy when only size-1 dims are
+                          inserted/removed (the non-unit dim sequence is
+                          unchanged); other reshapes go opaque
+``convert_element_type``  float->float casts alias the operand (zero-cost
+                          passthrough: statements compute in f32 and the
+                          executable casts at function outputs only)
+``reduce_sum``            projection statement with real reduction
+                          iterators (rank-0 results fall back to opaque)
+========================  =================================================
 
-Everything else — transcendentals, comparisons, gathers, control flow,
-non-f32 dtypes — is carved into **opaque passthrough segments**: maximal
-runs of unsupported equations re-evaluated verbatim (``primitive.bind``)
-inside a single statement whose semantics live in the codegen opaque
-registry.  Opaque statements still participate in graph dependencies,
-scheduling and the whole-plan program; they are simply not tiled or
-permuted.  The per-trace :class:`Coverage` records how much of the function
-the optimizer actually owns.
+``pjit``, ``custom_jvp_call`` and ``custom_vjp_call`` sub-jaxprs are
+inlined (primal semantics), so ``jax.nn``-style helpers (relu/silu/gelu)
+are seen through.  Any floating dtype of at most 4 bytes is accepted —
+statements evaluate in f32 internally and the lowering records the
+narrowest traced float width (``precision_bytes``) so validation widens
+its tolerance accordingly.
+
+Everything else — comparisons, gathers, control flow, integer or f64
+dtypes — is carved into **opaque passthrough segments**: maximal runs of
+unsupported equations re-evaluated verbatim (``primitive.bind``) inside a
+single statement whose semantics live in the codegen opaque registry.
+Each opaque output statement reads only the segment inputs its own prefix
+actually uses, so unrelated outputs do not inflate consumer counts.
+Opaque statements still participate in graph dependencies, scheduling and
+the whole-plan program; they are simply not tiled or permuted.  The
+per-trace :class:`Coverage` records how much of the function the optimizer
+actually owns.
 
 Const values never enter the lowering result: jaxpr constvars become named
 off-chip input arrays whose values are bound per
@@ -60,9 +88,21 @@ try:                       # jax >= 0.4.36 moved the jaxpr types here
 except ImportError:        # pragma: no cover - older jax
     from jax.core import Literal, Var
 
+#: Pointwise primitives lowered to ``unary:<name>`` statements.
+UNARY_PRIMITIVES = ("tanh", "logistic", "exp", "log", "log1p", "expm1",
+                    "sqrt", "rsqrt", "cbrt", "erf", "sin", "cos", "abs",
+                    "sign", "floor", "ceil", "round")
+
 #: Primitives lowered to affine statements (everything else goes opaque).
-SUPPORTED_PRIMITIVES = ("dot_general", "add", "sub", "mul", "neg",
-                        "transpose", "broadcast_in_dim", "reduce_sum")
+SUPPORTED_PRIMITIVES = ("dot_general", "add", "sub", "mul", "div", "neg",
+                        "max", "min", "integer_pow", "transpose",
+                        "broadcast_in_dim", "reshape", "squeeze",
+                        "convert_element_type", "reduce_sum") \
+    + UNARY_PRIMITIVES
+
+#: Floating dtypes statements accept (computed in f32 internally; f64 stays
+#: opaque so the lowering never silently narrows a wider request).
+_FLOAT_OK = ("float32", "bfloat16", "float16")
 
 
 # ---------------------------------------------------------------------------
@@ -94,19 +134,36 @@ def flatten_jaxpr(jaxpr) -> tuple[list[FlatEqn], list[Any], dict]:
             a = subst[a]
         return a
 
+    def inline(closed, eqn) -> bool:
+        """Substitute a sub-jaxpr call in place; False if shapes mismatch."""
+        sj = closed.jaxpr
+        if len(sj.invars) != len(eqn.invars) \
+                or len(sj.outvars) < len(eqn.outvars):
+            return False
+        for cv, cval in zip(sj.constvars, closed.consts):
+            sub_consts[cv] = cval
+        for iv, a in zip(sj.invars, eqn.invars):
+            subst[iv] = resolve(a)
+        walk(sj)
+        for ov, sov in zip(eqn.outvars, sj.outvars):
+            subst[ov] = resolve(sov)
+        return True
+
     def walk(jx) -> None:
         for eqn in jx.eqns:
             if eqn.primitive.name == "pjit":
-                closed = eqn.params["jaxpr"]
-                sj = closed.jaxpr
-                for cv, cval in zip(sj.constvars, closed.consts):
-                    sub_consts[cv] = cval
-                for iv, a in zip(sj.invars, eqn.invars):
-                    subst[iv] = resolve(a)
-                walk(sj)
-                for ov, sov in zip(eqn.outvars, sj.outvars):
-                    subst[ov] = resolve(sov)
-                continue
+                if inline(eqn.params["jaxpr"], eqn):
+                    continue
+            elif eqn.primitive.name in ("custom_jvp_call",
+                                        "custom_vjp_call"):
+                # Primal semantics: the call_jaxpr IS the function being
+                # differentiated — inline it exactly like a pjit body (the
+                # jvp/fwd/bwd rules only matter under differentiation,
+                # which a traced executable never performs).
+                closed = eqn.params.get("call_jaxpr") \
+                    or eqn.params.get("fun_jaxpr")
+                if closed is not None and inline(closed, eqn):
+                    continue
             out.append(FlatEqn(eqn, tuple(resolve(a) for a in eqn.invars),
                                tuple(eqn.outvars)))
 
@@ -192,6 +249,11 @@ class LoweredJaxpr:
     out_avals: tuple[tuple[tuple[int, ...], Any], ...]
     coverage: Coverage
     opaque_ops: tuple[str, ...] = ()    # registry entries owned by this record
+    #: Narrowest floating itemsize among supported statements' avals —
+    #: statements compute in f32, so validation against the traced function
+    #: must widen its tolerance to this precision band (bf16 intermediates
+    #: in the jit baseline carry ~1e-2 relative error the f32 graph lacks).
+    precision_bytes: int = 4
     plan_cache: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -233,7 +295,13 @@ def _segment_callable(feqns: list[FlatEqn], in_vars: tuple,
     def run(*vals):
         env: dict = {}
         for v, val, unp in zip(in_vars, vals, unpromote):
-            env[v] = jnp.reshape(val, ()) if unp else val
+            val = jnp.reshape(val, ()) if unp else val
+            # Statements compute in f32 regardless of the traced dtype —
+            # restore the dtype the segment's jaxpr was traced with so its
+            # primitives see the avals they were bound against.
+            if val.dtype != v.aval.dtype:
+                val = val.astype(v.aval.dtype)
+            env[v] = val
         eval_flat_eqns(feqns, env)
         out = env[out_var]
         return jnp.reshape(out, (1,)) if promote_out else out
@@ -371,17 +439,129 @@ def _h_elementwise(op: str):
     return handler
 
 
-def _h_neg(ctx: _Ctx, fe: FlatEqn) -> None:
+def _scalar_literal(atom) -> float | None:
+    """The float value of a rank-0 numeric literal operand, else None —
+    the foldable subset (value is structure, not a bound input)."""
+    if isinstance(atom, Literal) and np.ndim(atom.val) == 0 \
+            and np.issubdtype(np.result_type(atom.val), np.number):
+        return float(atom.val)
+    return None
+
+
+def _emit_scaled_copy(ctx: _Ctx, fe: FlatEqn, src, coeff: float,
+                      offset: float, stem: str) -> None:
+    """``out = coeff * src + offset`` as a single-read affine statement —
+    scalar-literal mul/add/sub/div/neg all land here."""
     out_aval = fe.outvars[0].aval
-    name = ctx.fresh("neg")
+    name = ctx.fresh(stem)
     out_its = iter_names(name, len(out_aval.shape))
-    zero = ctx.static_scalar(0.0)
+    trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+    z_its: list[str] = []
+    read = _ew_access(ctx, src, out_its, out_aval.shape, name, z_its, trip)
     stmt = Statement(
-        name=name, loops=out_its,
-        trip_counts={it: int(n) for it, n in zip(out_its, out_aval.shape)},
-        reads=(Access(zero, ()), Access(ctx.name_of(fe.invars[0]), out_its)),
-        writes=(Access(name, out_its),), flops_per_iter=1.0, op="sub")
+        name=name, loops=tuple(out_its) + tuple(z_its), trip_counts=trip,
+        reads=(read,), writes=(Access(name, out_its),),
+        flops_per_iter=1.0, op="add", coeff=coeff, offset=offset)
     ctx.emit(stmt, fe.outvars[0])
+
+
+def _h_mul(ctx: _Ctx, fe: FlatEqn) -> None:
+    a, b = fe.invars
+    ca, cb = _scalar_literal(a), _scalar_literal(b)
+    if ca is not None and cb is None:
+        return _emit_scaled_copy(ctx, fe, b, ca, 0.0, "smul")
+    if cb is not None and ca is None:
+        return _emit_scaled_copy(ctx, fe, a, cb, 0.0, "smul")
+    _h_elementwise("mul")(ctx, fe)
+
+
+def _h_add_sub(op: str):
+    def handler(ctx: _Ctx, fe: FlatEqn) -> None:
+        a, b = fe.invars
+        ca, cb = _scalar_literal(a), _scalar_literal(b)
+        if cb is not None and ca is None:
+            return _emit_scaled_copy(
+                ctx, fe, a, 1.0, cb if op == "add" else -cb, "sadd")
+        if ca is not None and cb is None:
+            if op == "add":
+                return _emit_scaled_copy(ctx, fe, b, 1.0, ca, "sadd")
+            return _emit_scaled_copy(ctx, fe, b, -1.0, ca, "sadd")
+        _h_elementwise(op)(ctx, fe)
+    return handler
+
+
+def _h_neg(ctx: _Ctx, fe: FlatEqn) -> None:
+    _emit_scaled_copy(ctx, fe, fe.invars[0], -1.0, 0.0, "neg")
+
+
+def _h_binary(name: str):
+    """Pointwise two-operand family (``binary:max``/``min``/``div``) —
+    operand order preserved (division is not commutative)."""
+    def handler(ctx: _Ctx, fe: FlatEqn) -> None:
+        out_aval = fe.outvars[0].aval
+        sname = ctx.fresh(name)
+        out_its = iter_names(sname, len(out_aval.shape))
+        trip = {it: int(n) for it, n in zip(out_its, out_aval.shape)}
+        z_its: list[str] = []
+        reads = tuple(_ew_access(ctx, a, out_its, out_aval.shape, sname,
+                                 z_its, trip) for a in fe.invars)
+        stmt = Statement(
+            name=sname, loops=tuple(out_its) + tuple(z_its),
+            trip_counts=trip, reads=reads,
+            writes=(Access(sname, out_its),), flops_per_iter=1.0,
+            op=f"binary:{name}")
+        ctx.emit(stmt, fe.outvars[0])
+    return handler
+
+
+def _h_div(ctx: _Ctx, fe: FlatEqn) -> None:
+    c = _scalar_literal(fe.invars[1])
+    if c is not None and c != 0.0:
+        return _emit_scaled_copy(ctx, fe, fe.invars[0], 1.0 / c, 0.0,
+                                 "sdiv")
+    _h_binary("div")(ctx, fe)
+
+
+def _h_minmax(name: str):
+    def handler(ctx: _Ctx, fe: FlatEqn) -> None:
+        a, b = fe.invars
+        ca, cb = _scalar_literal(a), _scalar_literal(b)
+        src, c = (b, ca) if ca is not None else (a, cb)
+        if c is not None and (ca is None or cb is None):
+            # clamp against a folded constant: relu's ``max(x, 0.0)``
+            return _h_unary(f"{name}_const:{c!r}", stem=name)(
+                ctx, dataclasses.replace(fe, invars=(src,)))
+        _h_binary(name)(ctx, fe)
+    return handler
+
+
+def _h_unary(name: str, flops: float = 2.0, stem: str | None = None):
+    def handler(ctx: _Ctx, fe: FlatEqn) -> None:
+        out_aval = fe.outvars[0].aval
+        sname = ctx.fresh(stem or name)
+        out_its = iter_names(sname, len(out_aval.shape))
+        stmt = Statement(
+            name=sname, loops=out_its,
+            trip_counts={it: int(n)
+                         for it, n in zip(out_its, out_aval.shape)},
+            reads=(Access(ctx.name_of(fe.invars[0]), out_its),),
+            writes=(Access(sname, out_its),), flops_per_iter=flops,
+            op=f"unary:{name}")
+        ctx.emit(stmt, fe.outvars[0])
+    return handler
+
+
+def _h_integer_pow(ctx: _Ctx, fe: FlatEqn) -> None:
+    _h_unary(f"pow_{int(fe.eqn.params['y'])}", stem="pow")(ctx, fe)
+
+
+def _h_convert(ctx: _Ctx, fe: FlatEqn) -> None:
+    """float->float casts are pure aliases: statements compute in f32 and
+    the executable casts at function outputs, so the cast costs nothing
+    (the jit baseline pays a real convert here)."""
+    src = fe.invars[0]
+    name = ctx.name_of(src)
+    ctx.var_name[fe.outvars[0]] = name
 
 
 def _h_transpose(ctx: _Ctx, fe: FlatEqn) -> None:
@@ -420,6 +600,38 @@ def _h_broadcast_in_dim(ctx: _Ctx, fe: FlatEqn) -> None:
     ctx.emit(stmt, fe.outvars[0])
 
 
+def _h_reshape(ctx: _Ctx, fe: FlatEqn) -> None:
+    """Singleton-insert/remove reshapes (and ``squeeze``) as projection
+    copies: non-unit dims keep their order, so each non-unit source dim
+    reads the matching output iterator; size-1 source dims read through a
+    trip-1 iterator and size-1 output dims are broadcast."""
+    src = fe.invars[0]
+    out_aval = fe.outvars[0].aval
+    out_shape = tuple(int(n) for n in out_aval.shape)
+    src_shape = tuple(int(n) for n in src.aval.shape)
+    name = ctx.fresh("rs")
+    out_its = iter_names(name, len(out_shape))
+    trip = {it: int(n) for it, n in zip(out_its, out_shape)}
+    nz_out = [i for i, n in enumerate(out_shape) if n != 1]
+    z_its: list[str] = []
+    src_its: list[str] = []
+    k = 0
+    for s in src_shape:
+        if s == 1:
+            z = f"{name}_z{len(z_its)}"
+            z_its.append(z)
+            trip[z] = 1
+            src_its.append(z)
+        else:
+            src_its.append(out_its[nz_out[k]])
+            k += 1
+    stmt = Statement(
+        name=name, loops=tuple(out_its) + tuple(z_its), trip_counts=trip,
+        reads=(Access(ctx.name_of(src), tuple(src_its)),),
+        writes=(Access(name, out_its),), flops_per_iter=0.0, op="add")
+    ctx.emit(stmt, fe.outvars[0])
+
+
 def _h_reduce_sum(ctx: _Ctx, fe: FlatEqn) -> None:
     axes = tuple(fe.eqn.params["axes"])
     src = fe.invars[0]
@@ -447,14 +659,43 @@ def _h_reduce_sum(ctx: _Ctx, fe: FlatEqn) -> None:
 
 HANDLERS: dict[str, Callable[[_Ctx, FlatEqn], None]] = {
     "dot_general": _h_dot_general,
-    "add": _h_elementwise("add"),
-    "sub": _h_elementwise("sub"),
-    "mul": _h_elementwise("mul"),
+    "add": _h_add_sub("add"),
+    "sub": _h_add_sub("sub"),
+    "mul": _h_mul,
+    "div": _h_div,
     "neg": _h_neg,
+    "max": _h_minmax("max"),
+    "min": _h_minmax("min"),
+    "integer_pow": _h_integer_pow,
     "transpose": _h_transpose,
     "broadcast_in_dim": _h_broadcast_in_dim,
+    "reshape": _h_reshape,
+    "squeeze": _h_reshape,
+    "convert_element_type": _h_convert,
     "reduce_sum": _h_reduce_sum,
+    **{p: _h_unary(p) for p in UNARY_PRIMITIVES},
 }
+
+
+def _float_ok(dtype) -> bool:
+    return str(np.dtype(dtype)) in _FLOAT_OK
+
+
+def _nonunit(shape) -> tuple[int, ...]:
+    return tuple(int(n) for n in shape if int(n) != 1)
+
+
+def _prim_supported(fe: FlatEqn) -> bool:
+    """Per-primitive structural constraints beyond the generic gate."""
+    name = fe.eqn.primitive.name
+    if name == "reshape":
+        if fe.eqn.params.get("dimensions") is not None:
+            return False                     # fused transpose-reshape
+        return _nonunit(fe.invars[0].aval.shape) == \
+            _nonunit(fe.outvars[0].aval.shape)
+    if name == "squeeze":
+        return True
+    return True
 
 
 def _supported(fe: FlatEqn, eqn_produced: set) -> bool:
@@ -463,13 +704,16 @@ def _supported(fe: FlatEqn, eqn_produced: set) -> bool:
     if len(fe.outvars) != 1:
         return False
     out_aval = fe.outvars[0].aval
-    if out_aval.dtype != np.float32 or len(out_aval.shape) == 0:
+    if not _float_ok(out_aval.dtype) or len(out_aval.shape) == 0:
         return False
     if any(int(n) == 0 for n in out_aval.shape):
         return False
     for a in fe.invars:
-        if a.aval.dtype != np.float32:
-            return False
+        if not _float_ok(a.aval.dtype):
+            # non-float operands are only acceptable as foldable scalar
+            # literals (``x * 2`` with an int literal)
+            if _scalar_literal(a) is None:
+                return False
         if any(int(n) == 0 for n in a.aval.shape):
             return False
         # A rank-0 value produced by an equation comes out of an opaque
@@ -478,7 +722,7 @@ def _supported(fe: FlatEqn, eqn_produced: set) -> bool:
         if isinstance(a, Var) and a in eqn_produced \
                 and len(a.aval.shape) == 0:
             return False
-    return True
+    return _prim_supported(fe)
 
 
 # ---------------------------------------------------------------------------
@@ -530,14 +774,6 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
         seg_first, seg_last = seg[0][0], seg[-1][0]
         feqns = [fe for (_, fe) in seg]
         defined = {ov for fe in feqns for ov in fe.outvars}
-        # ordered unique external inputs
-        ins: list[Var] = []
-        for fe in feqns:
-            for a in fe.invars:
-                if isinstance(a, Var) and a not in defined and a not in ins:
-                    ins.append(a)
-        in_names_seg = tuple(ctx.name_of(a) for a in ins)
-        unpromote = tuple(n in ctx.promoted for n in in_names_seg)
         # outputs needed beyond the segment
         outs = []
         for fi, fe in enumerate(feqns):
@@ -548,6 +784,19 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
             float(np.prod(ov.aval.shape)) if ov.aval.shape else 1.0
             for fe in feqns for ov in fe.outvars)
         for k, (fi, ov) in enumerate(outs):
+            # Each output statement re-runs only its own prefix, so it
+            # reads only the external inputs that prefix actually uses —
+            # otherwise every segment output would count as a consumer of
+            # every segment input and inflate materialization boundaries.
+            prefix = feqns[:fi + 1]
+            ins: list[Var] = []
+            for pfe in prefix:
+                for a in pfe.invars:
+                    if isinstance(a, Var) and a not in defined \
+                            and a not in ins:
+                        ins.append(a)
+            in_names_seg = tuple(ctx.name_of(a) for a in ins)
+            unpromote = tuple(n in ctx.promoted for n in in_names_seg)
             promote = len(ov.aval.shape) == 0
             shape = (1,) if promote else tuple(int(n)
                                                for n in ov.aval.shape)
@@ -556,7 +805,7 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
                 f"{fingerprint}:{seg_first}:{k}".encode()).hexdigest()
             op = f"{OPAQUE_PREFIX}{digest[:24]}"
             register_opaque(op, _segment_callable(
-                feqns[:fi + 1], tuple(ins), unpromote, ov, promote))
+                prefix, tuple(ins), unpromote, ov, promote))
             ctx.opaque_ops.append(op)
             out_its = iter_names(name, len(shape))
             stmt = Statement(
@@ -570,12 +819,21 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
             if promote:
                 ctx.promoted.add(name)
 
+    precision_bytes = 4
     for idx, fe in enumerate(flat_eqns):
         if _supported(fe, eqn_produced):
             flush_opaque()
+            n_before = len(ctx.statements)
             HANDLERS[fe.eqn.primitive.name](ctx, fe)
             n_supported += 1
-            ctx.supported_flops += ctx.statements[-1].flops
+            # dtype aliases (convert_element_type) emit no statement
+            ctx.supported_flops += sum(
+                s.flops for s in ctx.statements[n_before:])
+            for a in tuple(fe.invars) + tuple(fe.outvars):
+                dt = np.dtype(a.aval.dtype)
+                # jnp.issubdtype: ml_dtypes (bfloat16) are not numpy floats
+                if jnp.issubdtype(dt, jnp.floating):
+                    precision_bytes = min(precision_bytes, dt.itemsize)
         else:
             pending.append((idx, fe))
         eqn_produced.update(fe.outvars)
@@ -621,8 +879,16 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
         else:
             out_specs.append(OutSpec("array", name, promoted))
 
+    # Work-reducing rewrites before the graph freezes: matmul chains keep
+    # the user's association order in the jaxpr, but the graph may legally
+    # re-parenthesize to the cheapest order (final outputs stay put).
+    from ..core.rewrite import reassociate_matmul_chains
+    reassociate_matmul_chains(
+        ctx.arrays, ctx.statements,
+        protected={spec.ref for spec in out_specs if spec.kind == "array"})
     graph = TaskGraph(name=graph_name_of(fingerprint),
-                      arrays=ctx.arrays, statements=ctx.statements)
+                      arrays=ctx.arrays, statements=ctx.statements,
+                      traced=True)
     coverage = Coverage(
         n_eqns=len(flat_eqns), n_supported=n_supported,
         supported_flops=ctx.supported_flops,
@@ -639,4 +905,5 @@ def lower_flat(closed, flat_eqns: list[FlatEqn], resolved_outs: list,
         out_avals=tuple(out_avals),
         coverage=coverage,
         opaque_ops=tuple(ctx.opaque_ops),
+        precision_bytes=precision_bytes,
     )

@@ -124,11 +124,24 @@ class TraceCache:
             self.evictions = 0
 
     def stats(self) -> dict:
+        """Cache counters plus a per-entry coverage census — what fraction
+        of each cached lowering the solver actually owns (the rest runs as
+        opaque passthrough segments)."""
         with self.lock:
+            entries = {}
+            for rec in self._entries.values():
+                c = rec.coverage
+                entries[rec.graph.name] = {
+                    "n_eqns": c.n_eqns,
+                    "n_supported": c.n_supported,
+                    "coverage_eqns": round(c.eqn_ratio, 4),
+                    "coverage_flops": round(c.flop_ratio, 4),
+                }
             return {"size": len(self._entries), "capacity": self.capacity,
                     "hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
-                    "graphs": sorted(self._by_name)}
+                    "graphs": sorted(self._by_name),
+                    "entries": entries}
 
 
 _CACHE = TraceCache(_env_int("REPRO_TRACE_CACHE_SIZE",

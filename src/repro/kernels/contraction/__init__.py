@@ -6,7 +6,8 @@
 ``ops.py``     jit'd wrapper with padding + impl dispatch;
 ``ref.py``     pure-einsum oracle (the ``xla`` impl).
 """
-from .spec import ContractionSpec, LoopDim, Operand
+from .spec import ACC, ContractionSpec, EpiOp, LoopDim, Operand
 from .ops import contract
 
-__all__ = ["ContractionSpec", "LoopDim", "Operand", "contract"]
+__all__ = ["ACC", "ContractionSpec", "EpiOp", "LoopDim", "Operand",
+           "contract"]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import combine_terms, project_term
+from .ref import apply_epilogue, combine_terms, project_term, scale_offset
 from .spec import ContractionSpec, Operand
 
 
@@ -36,6 +36,7 @@ def _index_map(loop_names: tuple[str, ...], opnd: Operand):
 def _make_kernel(spec: ContractionSpec):
     n_reads = len(spec.reads)
     n_init = len(spec.init_reads)
+    n_epi = len(spec.epi_reads)
     red_dims = spec.reduction_dims
     n_red = {d: spec.grid[d] for d in red_dims}
     out_sub = spec.out_subscript
@@ -50,16 +51,30 @@ def _make_kernel(spec: ContractionSpec):
     def init_val(init_vals):
         if not spec.init_reads:
             return jnp.zeros(out_block, jnp.float32)
-        return combine_terms(init_subs, out_sub, spec.init_op, init_vals,
-                             out_block)
+        return scale_offset(
+            combine_terms(init_subs, out_sub, spec.init_op, init_vals,
+                          out_block),
+            spec.init_coeff, spec.init_offset)
+
+    def split(refs):
+        reads = [r[...].astype(jnp.float32) for r in refs[:n_reads]]
+        inits = [r[...].astype(jnp.float32)
+                 for r in refs[n_reads:n_reads + n_init]]
+        epis = [r[...].astype(jnp.float32)
+                for r in refs[n_reads + n_init:n_reads + n_init + n_epi]]
+        return reads, inits, epis, refs[n_reads + n_init + n_epi]
+
+    def finish(total, inits, epis):
+        """total -> stored value: scale, add init, run the fused tail."""
+        val = scale_offset(total, spec.coeff, spec.offset)
+        if spec.init_reads:
+            val = val + init_val(inits)
+        return apply_epilogue(spec, val, epis)
 
     if not red_dims:
         def kernel(*refs):
-            reads = [r[...].astype(jnp.float32) for r in refs[:n_reads]]
-            inits = [r[...].astype(jnp.float32)
-                     for r in refs[n_reads:n_reads + n_init]]
-            o_ref = refs[n_reads + n_init]
-            o_ref[...] = (init_val(inits) + contrib(reads)) \
+            reads, inits, epis, o_ref = split(refs)
+            o_ref[...] = finish(contrib(reads), inits, epis) \
                 .astype(o_ref.dtype)
         return kernel, False
 
@@ -95,11 +110,8 @@ def _make_kernel(spec: ContractionSpec):
         return total
 
     def kernel(*refs):
-        reads = [r[...].astype(jnp.float32) for r in refs[:n_reads]]
-        inits = [r[...].astype(jnp.float32)
-                 for r in refs[n_reads:n_reads + n_init]]
-        o_ref = refs[n_reads + n_init]
-        acc_ref = refs[n_reads + n_init + 1]
+        reads, inits, epis, o_ref = split(refs[:-1])
+        acc_ref = refs[-1]
 
         first = _at_zero(red_dims)
         last = None
@@ -107,15 +119,20 @@ def _make_kernel(spec: ContractionSpec):
             l = pl.program_id(d) == n_red[d] - 1
             last = l if last is None else jnp.logical_and(last, l)
 
+        # The accumulator holds the raw contribution sum; scaling, the init
+        # value and the elementwise epilogue are applied once, at store time
+        # on the final reduction step (the init block's index map depends
+        # only on output dims, so its value is the same at every step).
         @pl.when(first)
         def _seed():
-            acc_ref[...] = init_val(inits)
+            acc_ref[...] = jnp.zeros(out_block, jnp.float32)
 
         acc_ref[...] += red_contrib(reads)
 
         @pl.when(last)
         def _store():
-            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+            o_ref[...] = finish(acc_ref[...], inits, epis) \
+                .astype(o_ref.dtype)
 
     return kernel, True
 
@@ -132,14 +149,15 @@ def _dimension_semantics(spec: ContractionSpec) -> tuple[str, ...]:
 def build_contraction(spec: ContractionSpec, interpret: bool = False):
     """Build (and cache) the pallas_call for one spec.
 
-    The returned callable takes the *padded* operands (spec.reads then
-    spec.init_reads order) and returns the padded output.
+    The returned callable takes the *padded* operands (spec.reads, then
+    spec.init_reads, then spec.epi_reads order) and returns the padded
+    output.
     """
     body, has_scratch = _make_kernel(spec)
     loop_names = spec.loop_names
     in_specs = [
         pl.BlockSpec(spec.block_shape(o), _index_map(loop_names, o))
-        for o in spec.reads + spec.init_reads
+        for o in spec.all_reads
     ]
     out_spec = pl.BlockSpec(spec.out_block,
                             _index_map(loop_names,

@@ -31,7 +31,7 @@ def _run_kernel(spec: ContractionSpec, interpret: bool,
                 *operands: jax.Array) -> jax.Array:
     padded = [
         _pad_operand(a, spec.ori_shape(o), spec.padded_shape(o))
-        for a, o in zip(operands, spec.reads + spec.init_reads)
+        for a, o in zip(operands, spec.all_reads)
     ]
     out = kernel.contract(spec, *padded, interpret=interpret)
     return out[tuple(slice(0, n) for n in spec.out_ori)]

@@ -22,11 +22,24 @@ Semantics (matching the reference oracle in ``repro.codegen.reference``):
   means "initialise to zeros"); ``init_op`` combines them like ``op`` does.
   The init value is materialised on the *first* visit to an output tile —
   this is what makes init+accumulate fusion a single kernel.
+* ``coeff``/``offset`` post-scale the contribution sum (``coeff * total +
+  offset``) and ``init_coeff``/``init_offset`` the init value — the folded
+  scalar literals of the frontend (``x * 2.0`` etc.).
+* ``epilogue`` is an ordered chain of elementwise :class:`EpiOp` steps
+  applied to the finished output tile *inside the kernel* (at store time):
+  each step combines the running value (the :data:`ACC` sentinel operand)
+  with extra elementwise operands under an op from the statement op
+  families (``mul``/``add``/``sub``/``unary:*``/``binary:*``).  This is how
+  small elementwise consumers of a contraction execute as a fused tail of
+  the producer kernel instead of a separate dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
 import string
+
+#: Sentinel operand array name: "the value accumulated so far" in an EpiOp.
+ACC = "<acc>"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +74,22 @@ class Operand:
 
 
 @dataclasses.dataclass(frozen=True)
+class EpiOp:
+    """One elementwise epilogue step over the finished output tile.
+
+    ``reads`` may include the :data:`ACC` sentinel operand (the running
+    value); every other operand is an extra kernel input, block-mapped on
+    the output iterators.  The step computes
+    ``coeff * op(reads) + offset``.
+    """
+
+    op: str
+    reads: tuple[Operand, ...]
+    coeff: float = 1.0
+    offset: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ContractionSpec:
     loops: tuple[LoopDim, ...]        # grid order; reduction loops innermost
     reduction: tuple[str, ...]        # names of contracted loops
@@ -70,6 +99,11 @@ class ContractionSpec:
     init_reads: tuple[Operand, ...] = ()
     init_op: str = "mul"
     buffers: int = 2                  # N_a: >=2 enables pipelined overlap
+    coeff: float = 1.0                # out = coeff * sum(contrib) + offset
+    offset: float = 0.0
+    init_coeff: float = 1.0           # ... + init_coeff * init + init_offset
+    init_offset: float = 0.0
+    epilogue: tuple[EpiOp, ...] = ()  # fused elementwise tail (store time)
 
     def __post_init__(self):
         names = {l.name for l in self.loops}
@@ -84,6 +118,21 @@ class ContractionSpec:
         ops = ("mul", "add", "sub")
         if self.op not in ops or self.init_op not in ops:
             raise ValueError(f"bad op {self.op!r}/{self.init_op!r}")
+        out_set = set(self.out_iters)
+        for epi in self.epilogue:
+            if epi.op not in ops and not epi.op.startswith(("unary:",
+                                                            "binary:")):
+                raise ValueError(f"bad epilogue op {epi.op!r}")
+            for opnd in epi.reads:
+                bad = [it for it in opnd.iters if it not in out_set]
+                if bad:
+                    # Epilogue steps run on the finished *output tile*: every
+                    # operand must be block-mappable on the output iterators.
+                    raise ValueError(f"epilogue operand {opnd} uses "
+                                     f"non-output iterators {bad}")
+                if len(set(opnd.iters)) != len(opnd.iters):
+                    raise ValueError(f"epilogue operand {opnd} repeats an "
+                                     "iterator")
         # The kernel's single accumulator requires the reduction grid dims
         # to iterate fastest per output tile: reductions must form the
         # innermost suffix of the loop order (the solver pins them there).
@@ -109,6 +158,18 @@ class ContractionSpec:
     def reduction_dims(self) -> tuple[int, ...]:
         names = self.loop_names
         return tuple(names.index(r) for r in self.reduction)
+
+    @property
+    def epi_reads(self) -> tuple[Operand, ...]:
+        """Extra kernel operands of the epilogue chain (ACC excluded), in
+        application order — appended after init_reads in the operand list."""
+        return tuple(o for e in self.epilogue for o in e.reads
+                     if o.array != ACC)
+
+    @property
+    def all_reads(self) -> tuple[Operand, ...]:
+        """Full kernel operand order: reads, init_reads, epilogue reads."""
+        return self.reads + self.init_reads + self.epi_reads
 
     def dim(self, name: str) -> LoopDim:
         for l in self.loops:

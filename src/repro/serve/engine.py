@@ -285,9 +285,12 @@ class PlanEngine:
 
     def stats(self) -> dict:
         """Serving statistics: engine request counts, the global program
-        cache (size/capacity, hits/misses/evictions, per-entry detail) and
-        per-pool occupancy of every program this engine serves."""
+        cache (size/capacity, hits/misses/evictions, per-entry detail),
+        per-pool occupancy of every program this engine serves, and the
+        frontend trace cache (hits, size, per-entry coverage) feeding
+        ``register_function`` entries."""
         from ..codegen import cache_stats, persistent_cache_dir, program_cache
+        from ..frontend import trace_cache_stats
         cache = program_cache()
         with self._lock:
             keys = dict(self._keys)
@@ -315,4 +318,5 @@ class PlanEngine:
                 "hit_rate": round(hit_rate, 4),
                 "pools": pools,
                 "persistent_cache_dir": persistent_cache_dir(),
+                "trace_cache": trace_cache_stats(),
                 **s}

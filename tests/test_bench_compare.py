@@ -230,53 +230,60 @@ def _w(ratio: float, validated: bool = True, cov_e: float = 1.0,
 
 
 def test_frontend_gate_passes_on_equal_runs():
-    base = _fbench({"gemm_chain": _w(0.7), "mlp_block": _w(0.6, cov_f=0.99)})
+    base = _fbench({"gemm_chain": _w(1.12), "mlp_block": _w(0.96,
+                                                            cov_f=0.99)})
     assert bench_compare.compare_frontend(base, base) == []
 
 
 def test_frontend_gate_fails_validation_with_correctness_tag():
-    base = _fbench({"gemm_chain": _w(0.7)})
-    fresh = _fbench({"gemm_chain": _w(0.7, validated=False)})
+    base = _fbench({"gemm_chain": _w(1.1)})
+    fresh = _fbench({"gemm_chain": _w(1.1, validated=False)})
     failures = bench_compare.compare_frontend(base, fresh)
     assert failures and all(
         f.startswith(bench_compare.CORRECTNESS_TAG) for f in failures)
 
 
 def test_frontend_gate_fails_coverage_drop_with_correctness_tag():
-    base = _fbench({"mlp_block": _w(0.6, cov_f=0.99)})
-    fresh = _fbench({"mlp_block": _w(0.6, cov_f=0.80)})
+    base = _fbench({"mlp_block": _w(1.1, cov_f=0.99)})
+    fresh = _fbench({"mlp_block": _w(1.1, cov_f=0.80)})
     failures = bench_compare.compare_frontend(base, fresh)
     assert any("coverage_flops dropped" in f for f in failures)
     assert all(f.startswith(bench_compare.CORRECTNESS_TAG) for f in failures)
 
 
-def test_frontend_gate_ratio_band():
-    base = _fbench({"gemm_chain": _w(0.70)})
-    # -43% is inside the deliberately wide 50% default band (the jit side
-    # of the ratio is XLA's own CPU timing, noisy run-to-run)
+def test_frontend_gate_hard_floors():
+    base = _fbench({"gemm_chain": _w(1.1), "mlp_block": _w(1.1)})
+    # the floors are absolute, not baseline-relative: a workload inside
+    # the noise band (>= 0.95) passes as long as the gmean holds >= 1.0
+    ok = _fbench({"gemm_chain": _w(1.10), "mlp_block": _w(0.96)})
+    assert bench_compare.compare_frontend(base, ok) == []
+    # one workload losing outright trips the per-workload floor
+    failures = bench_compare.compare_frontend(
+        base, _fbench({"gemm_chain": _w(1.30), "mlp_block": _w(0.90)}))
+    assert any("per-workload floor" in f for f in failures)
+    # everything in the noise band but the gmean below 1.0 trips the
+    # gmean floor: the traced program must not lose to jax.jit overall
+    failures = bench_compare.compare_frontend(
+        base, _fbench({"gemm_chain": _w(0.97), "mlp_block": _w(0.96)}))
+    assert any("gmean" in f for f in failures)
+    # floors are tunable
     assert bench_compare.compare_frontend(
-        base, _fbench({"gemm_chain": _w(0.40)})) == []
-    failures = bench_compare.compare_frontend(
-        base, _fbench({"gemm_chain": _w(0.30)}))
-    assert any("ratio regressed" in f for f in failures)
-    # a tightened band is honoured
-    failures = bench_compare.compare_frontend(
-        base, _fbench({"gemm_chain": _w(0.40)}), max_regress=0.20)
-    assert any("ratio regressed" in f for f in failures)
+        base, _fbench({"gemm_chain": _w(0.97), "mlp_block": _w(0.96)}),
+        gmean_floor=0.9, workload_floor=0.9) == []
 
 
 def test_frontend_cli(tmp_path):
     fbase = tmp_path / "fbase.json"
     ffresh = tmp_path / "ffresh.json"
-    fbase.write_text(json.dumps(_fbench({"gemm_chain": _w(0.7)})))
+    fbase.write_text(json.dumps(_fbench({"gemm_chain": _w(1.1)})))
     argv = ["--frontend-baseline", str(fbase),
             "--frontend-fresh", str(ffresh)]
     ffresh.write_text(json.dumps(
-        _fbench({"gemm_chain": _w(0.7, validated=False)})))
+        _fbench({"gemm_chain": _w(1.1, validated=False)})))
     assert bench_compare.main(argv) == 2          # correctness: no retry
-    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(0.3)})))
+    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(0.9)})))
     assert bench_compare.main(argv) == 1          # timing: retryable
-    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(0.68)})))
+    ffresh.write_text(json.dumps(_fbench({"gemm_chain": _w(1.05)})))
     assert bench_compare.main(argv) == 0
 
 

@@ -169,6 +169,43 @@ def test_plan_engine_stats_pools_and_hit_rate():
     assert any(e["pool_size"] == 2 for e in s["entries"].values())
 
 
+def test_plan_engine_surfaces_trace_cache_stats():
+    """stats() exposes the frontend trace cache feeding register_function:
+    hits, size, and per-entry coverage of every cached lowering."""
+    import jax.numpy as jnp
+
+    from repro import frontend
+    from repro.core import SolverOptions
+    from repro.serve import PlanEngine
+
+    frontend.clear_trace_cache()
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))
+    fn = lambda x, y: x @ y                     # noqa: E731
+
+    eng = PlanEngine(impl="xla")
+    eng.register_function("mm", fn, (a, b),
+                          solver_opts=SolverOptions(time_budget_s=2.0))
+    out = eng.submit("mm", (a, b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=2e-4)
+
+    tc = eng.stats()["trace_cache"]
+    assert tc["size"] == 1 and tc["misses"] >= 1
+    (entry,) = tc["entries"].values()           # fully covered single dot
+    assert entry["n_supported"] == entry["n_eqns"] >= 1
+    assert entry["coverage_eqns"] == 1.0
+    assert entry["coverage_flops"] == 1.0
+
+    # re-registering the same structure is a trace-cache hit, not a new
+    # lowering — replicas share one record
+    eng.register_function("mm2", fn, (a, b),
+                          solver_opts=SolverOptions(time_budget_s=2.0))
+    tc2 = eng.stats()["trace_cache"]
+    assert tc2["hits"] > tc["hits"] and tc2["size"] == 1
+
+
 def test_plan_engine_reasserts_its_pool_contract():
     """Another caller rebuilding the cache entry with a different pool must
     not silently downgrade an engine configured for a larger pool."""
