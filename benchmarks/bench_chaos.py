@@ -1,0 +1,228 @@
+"""BENCH_chaos.json emitter: availability and p99 under injected faults.
+
+The resilient request path (``repro.serve.PlanEngine`` + ``repro.ft``)
+claims that a broken optimized path never becomes a wrong or dropped
+answer: failures degrade to the plain-jit fallback, miscompiles are caught
+by canary validation, quarantined entries re-solve in the background, and
+corrupted persistent artifacts are discarded and regenerated.  This
+benchmark *measures* that claim.  Two scenarios drive the same engine with
+the same thread load:
+
+* ``clean``   — no injected faults (the baseline request path);
+* ``faulted`` — a :class:`repro.ft.ChaosPlan` injects a compile failure,
+  runtime execute failures and a silent miscompile (NaN-corrupted kernel
+  outputs, caught only by the per-request canary) mid-run, plus a
+  corrupted persistent calibration artifact exercised through the real
+  load/quarantine/regenerate path.
+
+Every response in both scenarios is validated against the reference
+oracle; **availability** is the fraction of submits that returned a
+correct answer (an exception or a wrong value both count against it).
+The CI gate (``scripts/bench_compare.py --chaos-fresh``) holds the
+faulted scenario to availability >= 0.99 with the breaker closed again
+after background re-solve.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_chaos \
+        --kernel 3-madd --threads 2 --requests 30 --out BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+from .common import build_graph, solve_kernel
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def _chaos_plan(name: str):
+    from repro.ft import ChaosPlan
+    return ChaosPlan(
+        compile_fail_at=(1,),           # re-resolve blows up mid-run
+        execute_fail_at=(3, 7),         # runtime faults (device-loss-ish)
+        corrupt_at=(5,),                # silent miscompile: NaN outputs
+        only=name,
+    )
+
+
+def _artifact_round_trip() -> dict:
+    """Corrupt a persistent calibration profile on disk and prove the
+    loader quarantines + regenerates instead of crashing (fault 3)."""
+    from repro.calibrate import CalibratedHardware, cached_profile
+    from repro.ft import ChaosPlan
+    profile = CalibratedHardware(
+        backend="bench", n_devices=1, cpu_count=os.cpu_count() or 1,
+        dispatch_s=5e-5, ici_bw=8e9, hbm_bw=12e9,
+        hbm_share=(1.0, 0.7, 0.55),
+        gflops={"small": 20.0, "medium": 40.0, "large": 60.0})
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bench-profile.json")
+        profile.save(path)
+        ChaosPlan.corrupt_file(path)
+        survived = cached_profile(path=path) is None    # no crash, no lie
+        quarantined = os.path.exists(path + ".corrupt")
+        profile.save(path)                              # regenerate
+        regenerated = cached_profile(path=path) is not None
+    return {"survived_corrupt_load": bool(survived),
+            "quarantined": bool(quarantined),
+            "regenerated": bool(regenerated)}
+
+
+def _drive(eng, name: str, ins, ref, *, threads: int, requests: int):
+    """N threads x M blocking submits, validating EVERY response; returns
+    (latencies, correct_count, error_strings)."""
+    import jax
+
+    from repro.codegen import allclose
+
+    latencies: list[list[float]] = [[] for _ in range(threads)]
+    correct = [0] * threads
+    errors: list[str] = []
+    barrier = threading.Barrier(threads)
+
+    def worker(i: int) -> None:
+        barrier.wait()
+        for _ in range(requests):
+            t0 = time.perf_counter()
+            try:
+                out = eng.submit(name, ins)
+                jax.block_until_ready(list(out.values()))
+            except Exception as e:          # dropped request: unavailable
+                errors.append(f"thread {i}: {type(e).__name__}: {e}")
+                continue
+            latencies[i].append(time.perf_counter() - t0)
+            if all(allclose(out[k], ref[k]) for k in ref):
+                correct[i] += 1
+            else:                           # wrong answer: worse than none
+                errors.append(f"thread {i}: response failed validation")
+
+    workers = [threading.Thread(target=worker, args=(i,))
+               for i in range(threads)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    return (sorted(t for per in latencies for t in per), sum(correct),
+            errors)
+
+
+def bench(kernel: str = "3-madd", *, threads: int = 2, requests: int = 30,
+          scale: int = 1, budget: float = 4.0, impl: str = "xla") -> dict:
+    """Measure serving availability/latency with and without chaos."""
+    import jax
+
+    from repro.codegen import (clear_program_cache, random_inputs,
+                               reference_executor)
+    from repro.serve import PlanEngine, ServeConfig
+
+    g = build_graph(kernel, scale)
+    plan = solve_kernel(kernel, "prometheus", scale=scale, budget=budget)
+    ins = random_inputs(g, seed=0)
+    ref = reference_executor(g)(ins)
+
+    scenarios: dict[str, dict] = {}
+    for label in ("clean", "faulted"):
+        clear_program_cache()
+        chaos = _chaos_plan(kernel) if label == "faulted" else None
+        eng = PlanEngine(impl=impl, sc=ServeConfig(
+            pool_size=2, chaos=chaos,
+            canary_every=1, nan_guard="canary",     # catch miscompiles
+            breaker_threshold=2, breaker_reset_s=1e9,
+            resolve_backoff_s=0.05, resolve_backoff_mult=2.0,
+            resolve_max_retries=6))
+        eng.register(kernel, g, plan)
+        eng.warmup(kernel, ins)
+        lat, correct, errors = _drive(eng, kernel, ins, ref,
+                                      threads=threads, requests=requests)
+        total = threads * requests
+        health = eng._health_for(kernel)
+        recovered = True
+        if health.breaker.stats()["state"] != "closed":
+            # injected faults opened the breaker: wait for the background
+            # re-solve to close it (bounded by the backoff schedule)
+            recovered = health.recovered_event.wait(120.0)
+        s = eng.stats()
+        h = s["resilience"]["entries"].get(kernel, {})
+        scenarios[label] = {
+            "requests": total,
+            "correct": correct,
+            "availability": round(correct / max(1, total), 4),
+            "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+            "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+            "errors": errors[:10],
+            "injected": sorted(chaos.events) if chaos else [],
+            "failures": h.get("failures", 0),
+            "fallbacks": h.get("fallbacks", 0),
+            "canaries": h.get("canaries", 0),
+            "recovered": h.get("recovered", 0),
+            "breaker_closed_after_recovery": bool(
+                recovered
+                and eng._health_for(kernel).breaker.stats()["state"]
+                == "closed"),
+            "final_state": eng.stats()["resilience"]["entries"]
+                           [kernel]["state"],
+        }
+        eng.shutdown()
+
+    clean, faulted = scenarios["clean"], scenarios["faulted"]
+    return {
+        "benchmark": "chaos_serving",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "impl": impl,
+        "kernel": kernel,
+        "scale": scale,
+        "threads": threads,
+        "requests_per_thread": requests,
+        "scenarios": scenarios,
+        "artifact_recovery": _artifact_round_trip(),
+        "p99_ratio_faulted_vs_clean": round(
+            faulted["p99_ms"] / clean["p99_ms"], 4)
+        if clean["p99_ms"] else 0.0,
+    }
+
+
+def emit(path: str, **kw) -> dict:
+    result = bench(**kw)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernel", default="3-madd")
+    ap.add_argument("--threads", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=30,
+                    help="requests per thread")
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--budget", type=float, default=4.0)
+    ap.add_argument("--impl", default="xla")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+    result = emit(args.out, kernel=args.kernel, threads=args.threads,
+                  requests=args.requests, scale=args.scale,
+                  budget=args.budget, impl=args.impl)
+    for label, s in result["scenarios"].items():
+        print(f"{label:8s}: availability={s['availability']:.4f} "
+              f"p50={s['p50_ms']:7.2f}ms p99={s['p99_ms']:7.2f}ms "
+              f"failures={s['failures']} fallbacks={s['fallbacks']} "
+              f"state={s['final_state']}")
+    print(f"artifact_recovery={result['artifact_recovery']} "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,18 @@ Frontend gate (BENCH_frontend.json, via
   every workload must be ≥ ``--frontend-workload-floor`` (default 0.95 —
   one workload may sit inside the noise band, but not lose outright).
 
+Chaos gate (BENCH_chaos.json, via ``--chaos-fresh`` — fresh-run-only,
+absolute floors, no baseline file):
+
+* availability (fraction of submits answered correctly, wrong values and
+  dropped requests both counting against it) must stay at or above
+  ``--chaos-availability-floor`` (default 0.99) in both the clean and the
+  fault-injected scenario — in the faulted run that is the resilience
+  contract itself, so a miss is correctness-tagged and never retried;
+* the faulted scenario must actually have injected faults, the entry's
+  breaker must have closed again after background re-solve, and the
+  corrupted-artifact round trip (quarantine + regenerate) must survive.
+
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
         --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
@@ -76,6 +88,16 @@ def load_concurrent(path: str) -> dict:
         data = json.load(f)
     if "pools" not in data:
         raise SystemExit(f"{path}: not a BENCH_concurrent.json (no 'pools')")
+    return data
+
+
+def load_chaos(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "scenarios" not in data:
+        raise SystemExit(
+            f"{path}: not a BENCH_chaos.json (no 'scenarios')"
+        )
     return data
 
 
@@ -293,6 +315,61 @@ def compare_frontend(
     return failures
 
 
+def compare_chaos(
+    fresh: dict,
+    *,
+    availability_floor: float = 0.99,
+) -> list[str]:
+    """Chaos-serving gate (BENCH_chaos.json); fresh-run absolute floors.
+
+    There is no baseline file: the resilience contract is absolute, not
+    relative.  Availability (fraction of submits answered *correctly* —
+    a wrong value counts against it the same as a dropped request) must
+    stay at or above ``availability_floor`` in BOTH scenarios; in the
+    faulted scenario that means every injected fault was absorbed by the
+    fallback path, so a miss is a correctness failure CI must never retry
+    away.  The breaker must have closed again after background re-solve,
+    and the corrupted-artifact round trip (quarantine + regenerate) must
+    have survived.
+    """
+    failures: list[str] = []
+    scenarios = fresh.get("scenarios", {})
+    for label in ("clean", "faulted"):
+        s = scenarios.get(label)
+        if s is None:
+            failures.append(
+                f"{CORRECTNESS_TAG} chaos: scenario {label!r} missing"
+            )
+            continue
+        avail = float(s.get("availability", 0.0))
+        if avail < availability_floor:
+            failures.append(
+                f"{CORRECTNESS_TAG} chaos/{label}: availability "
+                f"{avail:.4f} below the {availability_floor:.2f} floor "
+                f"({s.get('correct')}/{s.get('requests')} correct; "
+                f"errors {s.get('errors', [])[:2]})"
+            )
+        if not s.get("breaker_closed_after_recovery", False):
+            failures.append(
+                f"chaos/{label}: breaker did not close after background "
+                f"re-solve (final state {s.get('final_state')!r})"
+            )
+    faulted = scenarios.get("faulted", {})
+    if faulted and not faulted.get("injected"):
+        failures.append(
+            f"{CORRECTNESS_TAG} chaos/faulted: no faults were actually "
+            f"injected — the scenario measured nothing"
+        )
+    art = fresh.get("artifact_recovery", {})
+    for field in ("survived_corrupt_load", "quarantined", "regenerated"):
+        if not art.get(field, False):
+            failures.append(
+                f"{CORRECTNESS_TAG} chaos: artifact recovery failed "
+                f"({field}=false)"
+            )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -337,6 +414,13 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--frontend-gmean-floor", type=float, default=1.0)
     ap.add_argument("--frontend-workload-floor", type=float, default=0.95)
+    ap.add_argument(
+        "--chaos-fresh",
+        default=None,
+        help="freshly measured BENCH_chaos.json (absolute floors, "
+        "no baseline)",
+    )
+    ap.add_argument("--chaos-availability-floor", type=float, default=0.99)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -355,11 +439,12 @@ def main(argv: list[str] | None = None) -> int:
         args.baseline is None
         and args.concurrent_baseline is None
         and args.frontend_baseline is None
+        and args.chaos_fresh is None
     ):
         ap.error(
             "nothing to compare: give BASELINE FRESH and/or "
             "--concurrent-baseline/--concurrent-fresh and/or "
-            "--frontend-baseline/--frontend-fresh"
+            "--frontend-baseline/--frontend-fresh and/or --chaos-fresh"
         )
 
     failures: list[str] = []
@@ -419,6 +504,22 @@ def main(argv: list[str] | None = None) -> int:
             ffresh,
             gmean_floor=args.frontend_gmean_floor,
             workload_floor=args.frontend_workload_floor,
+        )
+
+    if args.chaos_fresh is not None:
+        chaos = load_chaos(args.chaos_fresh)
+        for label, s in sorted(chaos["scenarios"].items()):
+            print(
+                f"chaos/{label:8s} availability="
+                f"{s.get('availability', 0):.4f} "
+                f"p99={s.get('p99_ms', 0):8.2f}ms "
+                f"failures={s.get('failures')} "
+                f"fallbacks={s.get('fallbacks')} "
+                f"state={s.get('final_state')}"
+            )
+        print(f"chaos/artifacts {chaos.get('artifact_recovery')}")
+        failures += compare_chaos(
+            chaos, availability_floor=args.chaos_availability_floor
         )
 
     if failures:

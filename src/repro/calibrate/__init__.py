@@ -59,8 +59,11 @@ def calibrate(*, force: bool = False, bench=None, path: str | None = None,
     if not force and os.path.exists(path):
         try:
             cached = CalibratedHardware.load(path)
-        except (ValueError, OSError, json.JSONDecodeError):
-            pass                    # stale schema / corrupt file: re-measure
+        except (ValueError, OSError, json.JSONDecodeError) as exc:
+            # stale schema / corrupt file (checksum mismatch, torn write):
+            # move it aside and re-measure — startup never crashes on it
+            from ..ft.artifacts import quarantine_file
+            quarantine_file(path, reason=repr(exc))
         else:
             # a cached smoke-quality (quick) profile must not satisfy a
             # full-fidelity request — re-measure and overwrite it
@@ -128,7 +131,11 @@ def cached_profile(path: str | None = None) -> CalibratedHardware | None:
         return hit[1]
     try:
         profile = CalibratedHardware.load(path)
-    except (ValueError, OSError, json.JSONDecodeError):
+    except (ValueError, OSError, json.JSONDecodeError) as exc:
+        # corrupt on the quiet path too: quarantine so the next explicit
+        # calibrate() regenerates instead of tripping over it again
+        from ..ft.artifacts import quarantine_file
+        quarantine_file(path, reason=repr(exc))
         return None
     _PROFILE_MEMO[path] = (mtime, profile)
     return profile

@@ -26,7 +26,6 @@ without touching the runtime; only measuring needs ``microbench``.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 
 SCHEMA_VERSION = 1
@@ -89,18 +88,20 @@ class CalibratedHardware:
         return CalibratedHardware(**kw)
 
     def save(self, path: str) -> str:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(self.to_jsonable(), f, indent=2)
-            f.write("\n")
-        os.replace(tmp, path)   # atomic: concurrent calibrators race safe
-        return path
+        # atomic (tmp + rename, concurrent calibrators race safe) AND
+        # checksummed: a torn/bit-rotted profile is detected at load time
+        # instead of silently feeding garbage rates to the solver
+        from ..ft.artifacts import atomic_write_json
+        return atomic_write_json(path, self.to_jsonable(), checksum=True)
 
     @staticmethod
     def load(path: str) -> "CalibratedHardware":
-        with open(path) as f:
-            return CalibratedHardware.from_jsonable(json.load(f))
+        """Load + validate a profile; raises ``ValueError`` (via
+        ``ArtifactError``) on unparsable content, a checksum mismatch, or
+        a stale schema.  Pre-checksum profiles (no embedded digest) still
+        load — the schema field gates their shape."""
+        from ..ft.artifacts import load_json
+        return CalibratedHardware.from_jsonable(load_json(path))
 
     # -- consumption ------------------------------------------------------
     def hardware(self, n_slices: int = 3, chips_per_slice: int = 1,

@@ -122,6 +122,29 @@ def enable_persistent_cache(path: str) -> str:
     than once; the last directory wins process-wide.
     """
     global _persistent_dir
+    # Crash hygiene before trusting the directory: a replica killed
+    # mid-write leaves zero-byte entries / orphaned temp files that would
+    # otherwise surface as deserialization errors on the next warm start.
+    # Scrubbed entries are simply recompiled (logged by the scrubber).
+    from ..ft.artifacts import (ArtifactError, atomic_write_json,
+                                load_json, quarantine_file, scrub_cache_dir)
+    scrub_cache_dir(path)
+    # Checksummed ownership metadata rides alongside the cache entries: a
+    # torn/corrupt metadata file is quarantined and rewritten (never fatal
+    # at startup), and a jax-version change is recorded — entries are keyed
+    # by jax's own compilation fingerprint, so stale ones are merely dead
+    # weight, not a correctness hazard.
+    meta_path = os.path.join(path, "repro-cache-metadata.json")
+    meta = {"schema": 1, "jax": jax.__version__}
+    try:
+        seen = load_json(meta_path, require_checksum=True)
+        if seen != meta:
+            atomic_write_json(meta_path, meta)
+    except FileNotFoundError:
+        atomic_write_json(meta_path, meta)
+    except (ArtifactError, OSError) as exc:
+        quarantine_file(meta_path, reason=repr(exc))
+        atomic_write_json(meta_path, meta)
     jax.config.update("jax_compilation_cache_dir", path)
     jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
@@ -261,6 +284,10 @@ class PlanProgram:
         # index) and `calls`/`trace_count` never lose updates
         self._counter_lock = threading.Lock()
         self._calls = 0
+        # clones rotated out of round-robin (straggler mitigation): the
+        # serving layer disables a persistently slow clone so requests
+        # stop landing on it; at least one clone always stays enabled
+        self._disabled: set[int] = set()
         if os.environ.get("REPRO_PROGRAM_SEGMENT", "1") == "0":
             # debug escape hatch: single-executable lowering, barrier-pinned
             self.segments = [Segment(0, tuple(self.schedule.order),
@@ -396,12 +423,50 @@ class PlanProgram:
 
         return body
 
-    # -- execution --------------------------------------------------------
-    def __call__(self, inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    # -- pool-clone health (straggler rotation) ---------------------------
+    def disable_clone(self, clone: int) -> bool:
+        """Rotate a pool clone out of round-robin (persistently slow —
+        see ``repro.ft.StragglerMonitor``).  Refuses to disable the last
+        enabled clone; returns whether the clone is now disabled."""
+        with self._counter_lock:
+            if not 0 <= clone < self.pool_size:
+                return False
+            if len(self._disabled) >= self.pool_size - 1 \
+                    and clone not in self._disabled:
+                return False
+            self._disabled.add(clone)
+            return True
+
+    def enable_clone(self, clone: int) -> None:
+        with self._counter_lock:
+            self._disabled.discard(clone)
+
+    @property
+    def disabled_clones(self) -> tuple[int, ...]:
+        with self._counter_lock:
+            return tuple(sorted(self._disabled))
+
+    def _next_clone(self) -> int:
         with self._counter_lock:
             i = self._calls
             self._calls = i + 1
-        fns = self._pool[i % self.pool_size]
+            if not self._disabled:
+                return i % self.pool_size
+            enabled = [c for c in range(self.pool_size)
+                       if c not in self._disabled]
+            return enabled[i % len(enabled)]
+
+    # -- execution --------------------------------------------------------
+    def run(self, inputs: dict[str, jax.Array]
+            ) -> tuple[dict[str, jax.Array], int]:
+        """Execute one request and report which pool clone served it —
+        the serving layer's entry (clone-attributed timing feeds the
+        straggler monitor)."""
+        clone = self._next_clone()
+        return self._run_on(inputs, self._pool[clone]), clone
+
+    def _run_on(self, inputs: dict[str, jax.Array],
+                fns: tuple[Callable, ...]) -> dict[str, jax.Array]:
         if self._single:
             seg = self.segments[0]
             outs = fns[0](*[inputs[a] for a in seg.in_arrays])
@@ -411,6 +476,9 @@ class PlanProgram:
             res = fn(*[env[a] for a in seg.in_arrays])
             env.update(zip(seg.out_arrays, res))
         return {a: env[a] for a in self.out_names}
+
+    def __call__(self, inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        return self.run(inputs)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -512,6 +580,14 @@ class ProgramCache:
                 self._entries.popitem(last=False)
                 self.evictions += 1
             return program
+
+    def invalidate(self, key: tuple) -> bool:
+        """Drop one entry (quarantine path: a program whose outputs failed
+        canary validation must not be served again — the next resolve
+        rebuilds from scratch).  Not counted as an eviction; returns
+        whether the key was present."""
+        with self.lock:
+            return self._entries.pop(key, None) is not None
 
     def resize(self, capacity: int) -> None:
         with self.lock:

@@ -1,6 +1,26 @@
+"""Fault tolerance: training-side restarts + serve-side degradation.
+
+``supervisor``/``straggler`` are the training-loop skeleton (checkpoint
+restart, per-host straggler demotion); ``serve`` carries the request-path
+contract (chaos injection, circuit breakers, backoff, the serving error
+taxonomy) that ``repro.serve.PlanEngine`` threads through every submit;
+``artifacts`` validates the persistent files both sides trust at startup.
+"""
+from .artifacts import (ArtifactError, atomic_write_json, load_json,
+                        payload_checksum, quarantine_file, scrub_cache_dir)
+from .serve import (BackoffPolicy, BreakerState, ChaosPlan, CircuitBreaker,
+                    DeadlineExceeded, EngineOverloaded, MiscompileError,
+                    ServingError)
 from .straggler import StragglerConfig, StragglerMonitor
 from .supervisor import (FailurePlan, InjectedFailure, RestartStats,
                          run_with_restarts)
 
-__all__ = ["StragglerConfig", "StragglerMonitor", "FailurePlan",
-           "InjectedFailure", "RestartStats", "run_with_restarts"]
+__all__ = [
+    "StragglerConfig", "StragglerMonitor", "FailurePlan",
+    "InjectedFailure", "RestartStats", "run_with_restarts",
+    "ChaosPlan", "CircuitBreaker", "BreakerState", "BackoffPolicy",
+    "ServingError", "EngineOverloaded", "DeadlineExceeded",
+    "MiscompileError",
+    "ArtifactError", "atomic_write_json", "load_json", "payload_checksum",
+    "quarantine_file", "scrub_cache_dir",
+]

@@ -1,0 +1,286 @@
+"""Serve-side fault tolerance: chaos injection, breakers, backoff.
+
+The training-side skeleton (``repro.ft.supervisor``) restarts a step loop
+from checkpoints; the *serving* layer needs a different contract — a
+request must be answered now, correctly, even while the optimized path is
+broken.  This module holds the pieces :class:`repro.serve.PlanEngine`
+threads through its request path:
+
+* :class:`ChaosPlan` — deterministic serve-side failure injection (the
+  ``FailurePlan`` idea extended to the request path): compile failures,
+  kernel-output corruption ("miscompiles"), slow executions pinned to a
+  pool clone, and corrupted persistent artifacts.  Every degradation path
+  in the engine is exercised by tests and ``benchmarks/bench_chaos.py``
+  through this one object, so chaos runs are reproducible bit-for-bit.
+* :class:`CircuitBreaker` — per-entry closed → open → half-open state
+  machine.  Consecutive optimized-path failures open the breaker
+  (quarantine); after ``reset_s`` one probe request is allowed through
+  (half-open); a success closes it again.  The clock is injectable so
+  transition tests are deterministic.
+* :class:`BackoffPolicy` — the deterministic exponential schedule the
+  background re-solve loop sleeps on between recovery attempts.
+* The serving **error taxonomy**: admission rejections
+  (:class:`EngineOverloaded`), deadline rejections
+  (:class:`DeadlineExceeded`) and canary-detected miscompiles
+  (:class:`MiscompileError`), all rooted at :class:`ServingError` so
+  callers can distinguish "the engine said no" from a workload bug.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import logging
+import os
+import threading
+import time
+from typing import Callable
+
+from .supervisor import InjectedFailure
+
+log = logging.getLogger("repro.ft.serve")
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+class ServingError(RuntimeError):
+    """Root of engine-originated request failures (vs workload bugs)."""
+
+
+class EngineOverloaded(ServingError):
+    """Admission control rejected the request: the bounded in-flight depth
+    stayed full past the admission timeout (backpressure)."""
+
+
+class DeadlineExceeded(ServingError):
+    """The request's deadline budget expired before it was admitted."""
+
+
+class MiscompileError(ServingError):
+    """Canary validation caught the optimized path producing wrong values
+    (corrupted kernel output / NaN / inf) — the entry is quarantined."""
+
+
+# ---------------------------------------------------------------------------
+# Deterministic serve-side chaos injection
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChaosPlan:
+    """Deterministic fault injection for the serving request path.
+
+    Sites are counted **per entry name** (every engine hook passes the
+    entry's name), and each configured index fires exactly once — the same
+    determinism contract as ``repro.ft.FailurePlan``:
+
+    * ``compile_fail_at`` — the i-th program resolution for an entry
+      raises :class:`InjectedFailure` (an XLA compile error stand-in);
+    * ``execute_fail_at`` — the i-th execution raises before dispatch
+      (device loss / runtime error stand-in);
+    * ``corrupt_at`` — the i-th execution's outputs are silently replaced
+      with garbage (NaN) *after* the kernel ran — a miscompile the engine
+      can only catch with canary validation / NaN guards;
+    * ``slow_at`` — the i-th execution sleeps ``slow_s`` seconds (a
+      degraded kernel / thermal throttle stand-in); ``slow_clone`` instead
+      pins the delay to one executable-pool clone index, whatever the
+      request index (the straggler-rotation scenario).
+
+    ``only`` restricts injection to one entry name so multi-entry engines
+    can break a single workload.  ``events`` records every injection as
+    ``(site, name, index)`` for test/bench introspection.
+    """
+
+    compile_fail_at: tuple[int, ...] = ()
+    execute_fail_at: tuple[int, ...] = ()
+    corrupt_at: tuple[int, ...] = ()
+    slow_at: tuple[int, ...] = ()
+    slow_s: float = 0.0
+    slow_clone: int | None = None
+    only: str | None = None
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._counts: dict[tuple[str, str], int] = {}
+        self._pending = {
+            "compile": set(self.compile_fail_at),
+            "execute": set(self.execute_fail_at),
+            "corrupt": set(self.corrupt_at),
+            "slow": set(self.slow_at),
+        }
+        self.events: list[tuple[str, str, int]] = []
+
+    def _fires(self, site: str, name: str) -> bool:
+        if self.only is not None and name != self.only:
+            return False
+        with self._lock:
+            idx = self._counts.get((site, name), 0)
+            self._counts[(site, name)] = idx + 1
+            if idx in self._pending[site]:
+                self._pending[site].discard(idx)
+                self.events.append((site, name, idx))
+                return True
+        return False
+
+    # -- engine hooks -----------------------------------------------------
+    def on_compile(self, name: str) -> None:
+        """Hook before program resolution; raises on an injected compile
+        failure."""
+        if self._fires("compile", name):
+            raise InjectedFailure(f"injected compile failure for {name!r}")
+
+    def on_execute(self, name: str) -> None:
+        """Hook before program execution; raises on an injected runtime
+        failure."""
+        if self._fires("execute", name):
+            raise InjectedFailure(f"injected execute failure for {name!r}")
+
+    def corrupt_outputs(self, name: str, outputs: dict) -> dict:
+        """Hook after execution: on an injected miscompile, return the
+        output dict with every value poisoned to NaN (same shapes/dtypes,
+        so only value validation can catch it)."""
+        if not self._fires("corrupt", name):
+            return outputs
+        import jax.numpy as jnp
+        return {k: jnp.full_like(v, float("nan")) if jnp.issubdtype(
+                    v.dtype, jnp.floating) else v
+                for k, v in outputs.items()}
+
+    def execute_delay(self, name: str, clone: int | None = None) -> float:
+        """Seconds of injected slowness for this execution (0.0 = none)."""
+        if self.slow_clone is not None and clone == self.slow_clone \
+                and (self.only is None or name == self.only):
+            with self._lock:
+                self.events.append(("slow_clone", name, clone))
+            return self.slow_s
+        if self._fires("slow", name):
+            return self.slow_s
+        return 0.0
+
+    # -- persistent-artifact corruption -----------------------------------
+    @staticmethod
+    def corrupt_file(path: str, mode: str = "garbage") -> str:
+        """Corrupt a persistent artifact on disk (calibration profile,
+        compilation-cache entry, metadata file): ``garbage`` overwrites
+        with non-JSON bytes that keep the old length, ``truncate`` leaves
+        a zero-byte file — the two corruption shapes crash recovery has to
+        survive."""
+        if mode == "truncate":
+            with open(path, "wb"):
+                pass
+        else:
+            try:
+                size = max(os.path.getsize(path), 16)
+            except OSError:
+                size = 16
+            with open(path, "wb") as f:
+                f.write(b"\x00CORRUPT" * (size // 8 + 1))
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker (per served entry)
+# ---------------------------------------------------------------------------
+class BreakerState(enum.Enum):
+    CLOSED = "closed"          # healthy: optimized path serves
+    OPEN = "open"              # quarantined: every request falls back
+    HALF_OPEN = "half_open"    # probing: one request tries the plan again
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker guarding one entry's optimized path.
+
+    ``threshold`` consecutive failures open it; after ``reset_s`` the next
+    :meth:`allow` transitions to half-open and admits exactly one probe
+    (others fall back until the probe reports).  ``record_success`` closes
+    from any state; ``record_failure`` re-opens.  ``clock`` is injectable
+    for deterministic transition tests.  Thread-safe.
+    """
+
+    def __init__(self, threshold: int = 3, reset_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.threshold = max(1, threshold)
+        self.reset_s = reset_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._state = BreakerState.CLOSED
+        self._failures = 0          # consecutive
+        self._opened_at = 0.0
+        self._probing = False
+        self.transitions: list[str] = []
+
+    @property
+    def state(self) -> BreakerState:
+        with self._lock:
+            return self._state
+
+    def _set(self, state: BreakerState) -> None:
+        if state != self._state:
+            self._state = state
+            self.transitions.append(state.value)
+
+    def allow(self) -> bool:
+        """May this request try the optimized path?"""
+        with self._lock:
+            if self._state is BreakerState.CLOSED:
+                return True
+            if self._state is BreakerState.OPEN:
+                if self.clock() - self._opened_at < self.reset_s:
+                    return False
+                self._set(BreakerState.HALF_OPEN)
+                self._probing = True
+                return True
+            # HALF_OPEN: exactly one in-flight probe
+            if self._probing:
+                return False
+            self._probing = True
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._probing = False
+            self._set(BreakerState.CLOSED)
+
+    def record_failure(self) -> bool:
+        """Returns True when this failure (re-)opened the breaker."""
+        with self._lock:
+            was_open = self._state is BreakerState.OPEN
+            self._failures += 1
+            self._probing = False
+            if self._state is BreakerState.HALF_OPEN \
+                    or self._failures >= self.threshold:
+                self._set(BreakerState.OPEN)
+                self._opened_at = self.clock()
+                return not was_open
+            return False
+
+    def force_open(self) -> None:
+        """Quarantine immediately (registration-time failures)."""
+        with self._lock:
+            self._failures = max(self._failures, self.threshold)
+            self._set(BreakerState.OPEN)
+            self._opened_at = self.clock()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"state": self._state.value,
+                    "consecutive_failures": self._failures,
+                    "transitions": list(self.transitions)}
+
+
+# ---------------------------------------------------------------------------
+# Backoff schedule (background re-solve)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Deterministic exponential backoff: ``base_s * mult**i`` capped at
+    ``max_s``, for ``retries`` attempts.  Pure — the schedule is a
+    function of the policy alone, so recovery timing is testable."""
+
+    base_s: float = 0.05
+    mult: float = 2.0
+    max_s: float = 5.0
+    retries: int = 8
+
+    def delays(self) -> list[float]:
+        return [min(self.base_s * self.mult ** i, self.max_s)
+                for i in range(self.retries)]

@@ -56,6 +56,38 @@ class StragglerMonitor:
                 flagged.append(i)
         return flagged
 
+    def observe_one(self, host: int, t: float) -> bool:
+        """Single-host observation — the serving-side entry point, where
+        each request lands on ONE executable-pool clone ("host") and only
+        that clone's wall time is known.
+
+        EMA/streak update for ``host`` alone, flagged against the median
+        EMA of its *peers* (other live clones) rather than the whole-fleet
+        step median ``observe`` uses — with one sample per step there is
+        no fleet snapshot, and excluding the observed clone keeps a
+        2-clone pool flaggable (its own slow EMA cannot drag the median
+        up to hide it).  Returns True once the clone crosses the patience
+        bar; the caller rotates it out (``PlanProgram.disable_clone``).
+        """
+        if host in self.reassigned:
+            return False
+        self._steps += 1
+        prev = self._ema[host]
+        self._ema[host] = t if prev is None else \
+            self.cfg.ema * prev + (1 - self.cfg.ema) * t
+        peers = sorted(e for i, e in enumerate(self._ema)
+                       if e is not None and i != host
+                       and i not in self.reassigned)
+        if not peers or self._steps <= self.cfg.min_steps:
+            self._slow_streak[host] = 0
+            return False
+        median = peers[len(peers) // 2]
+        if t > self.cfg.threshold * max(median, 1e-9):
+            self._slow_streak[host] += 1
+        else:
+            self._slow_streak[host] = 0
+        return self._slow_streak[host] >= self.cfg.patience
+
     def demote(self, host: int) -> dict[int, float]:
         """Remove a host from the data assignment; returns the new shard
         fractions per remaining host."""

@@ -1,3 +1,9 @@
+from ..ft.serve import (DeadlineExceeded, EngineOverloaded, MiscompileError,
+                        ServingError)
 from .engine import Engine, PlanEngine, ServeConfig, throughput_stats
 
-__all__ = ["Engine", "PlanEngine", "ServeConfig", "throughput_stats"]
+__all__ = [
+    "Engine", "PlanEngine", "ServeConfig", "throughput_stats",
+    "ServingError", "EngineOverloaded", "DeadlineExceeded",
+    "MiscompileError",
+]

@@ -17,10 +17,25 @@ arbitrary JAX callable through ``repro.frontend``, solves it, and serves it
 through the same cache/pool/warmup path — requests for function entries
 pass positional-argument tuples instead of array dicts and get the
 function's own result pytree back.
+
+Fault tolerance (the ``repro.ft`` contract): the request path never
+*assumes* success.  Admission control bounds the in-flight depth
+(:class:`~repro.ft.EngineOverloaded` backpressure) and enforces per-submit
+deadline budgets; any failure in trace/solve/compile/execute — including
+miscompiles caught by sampled canary validation against the plain-jit
+oracle and NaN/inf output guards — degrades that request to the plain-jit
+fallback path, quarantines the entry behind a per-entry circuit breaker,
+and re-solves in the background with exponential backoff.  A
+:class:`~repro.ft.ChaosPlan` in ``ServeConfig.chaos`` deterministically
+injects every one of those failures for tests and
+``benchmarks/bench_chaos.py``.  The happy path stays one dispatch: with a
+closed breaker and no chaos configured the additions are a dict lookup
+and two branch checks.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from functools import partial
@@ -30,7 +45,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..ft.serve import (BreakerState, ChaosPlan, CircuitBreaker,
+                        DeadlineExceeded, EngineOverloaded, MiscompileError)
+from ..ft.straggler import StragglerConfig, StragglerMonitor
 from ..models import model as M
+
+log = logging.getLogger("repro.serve")
 
 
 @dataclasses.dataclass
@@ -54,6 +74,46 @@ class ServeConfig:
     # Admission policy: max (graph, plan) pairs registered at once; the
     # least-recently-used registration is evicted past this.  None = no cap.
     max_plans: int | None = None
+    # -- resilience knobs (PlanEngine) ------------------------------------
+    # Default per-submit deadline budget in seconds (None = unbounded).  A
+    # request that cannot be admitted before its budget expires is rejected
+    # with DeadlineExceeded; one that finishes late counts a deadline miss.
+    deadline_s: float | None = None
+    # Bounded in-flight depth: at most this many submits execute at once;
+    # excess callers wait up to admission_timeout_s (backpressure) and are
+    # then rejected with EngineOverloaded.  None = unbounded.
+    max_inflight: int | None = None
+    admission_timeout_s: float = 0.1
+    # Sampled canary validation: every Nth optimized execution per entry is
+    # synchronously validated against the plain-jit oracle (jax.jit(fn)
+    # for function entries, the statement reference oracle for graphs); a
+    # mismatch is a miscompile -> immediate quarantine + fallback.  0 = off
+    # (the happy path stays one asynchronous dispatch).
+    canary_every: int = 0
+    # NaN/inf output guard: "canary" checks finiteness on canary-sampled
+    # requests, "always" on every request (forces a device sync per
+    # submit), "off" never.
+    nan_guard: str = "canary"
+    # Graceful degradation: failures fall back to the plain-jit path for
+    # that request instead of raising.  False re-raises (debugging).
+    fallback: bool = True
+    # Per-entry circuit breaker: this many consecutive optimized-path
+    # failures quarantine the entry (every request falls back); after
+    # breaker_reset_s one probe request tries the optimized path again.
+    breaker_threshold: int = 3
+    breaker_reset_s: float = 30.0
+    # Background re-solve backoff schedule for quarantined entries.
+    resolve_backoff_s: float = 0.05
+    resolve_backoff_mult: float = 2.0
+    resolve_backoff_max_s: float = 5.0
+    resolve_max_retries: int = 8
+    # Deterministic fault injection (repro.ft.ChaosPlan) — tests/benches.
+    chaos: ChaosPlan | None = None
+    # Per-pool-clone straggler rotation (repro.ft.StragglerConfig): when
+    # set, optimized executions are timed per clone and a persistently
+    # slow clone is rotated out of round-robin.  Timing implies a device
+    # sync per submit, so this is opt-in.
+    straggler: StragglerConfig | None = None
 
 
 class Engine:
@@ -104,6 +164,60 @@ def throughput_stats(n_tokens: int, seconds: float) -> dict:
             "tokens_per_s": n_tokens / max(seconds, 1e-9)}
 
 
+def _rtol_for(dtype) -> float:
+    """Canary tolerance per dtype (mirrors the frontend oracle bands)."""
+    return 2e-2 if np.dtype(dtype).itemsize <= 2 else 2e-4
+
+
+@dataclasses.dataclass
+class _EntryHealth:
+    """Per-entry resilience state: breaker, counters, recovery plumbing.
+
+    Counter conservation contract (the accounting tests pin it down):
+    ``ok + fallbacks == per_name[name]`` — every admitted request ends in
+    exactly one bucket, whatever failed along the way.
+    """
+
+    breaker: CircuitBreaker
+    ok: int = 0                     # optimized-path successes
+    failures: int = 0               # optimized-path failures (any site)
+    fallbacks: int = 0              # requests served by the plain-jit path
+    attempts: int = 0               # optimized-path tries (canary cadence)
+    canaries: int = 0
+    canary_failures: int = 0
+    deadline_misses: int = 0
+    resolve_attempts: int = 0       # background re-solve tries
+    recovered: int = 0              # successful background recoveries
+    recovering: bool = False
+    rotated: tuple[int, ...] = ()   # pool clones rotated out (straggler)
+    straggler: StragglerMonitor | None = None
+    last_error: str | None = None
+    recovered_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    recovery_thread: threading.Thread | None = None
+
+    def state(self, has_plan: bool) -> str:
+        if not has_plan:
+            return "fallback"       # registration-time failure: plain jit
+        return {BreakerState.CLOSED: "ok",
+                BreakerState.OPEN: "quarantined",
+                BreakerState.HALF_OPEN: "half_open"}[self.breaker.state]
+
+    def stats(self, has_plan: bool = True) -> dict:
+        return {"state": self.state(has_plan),
+                "ok": self.ok, "failures": self.failures,
+                "fallbacks": self.fallbacks,
+                "canaries": self.canaries,
+                "canary_failures": self.canary_failures,
+                "deadline_misses": self.deadline_misses,
+                "resolve_attempts": self.resolve_attempts,
+                "recovered": self.recovered,
+                "recovering": self.recovering,
+                "rotated_clones": list(self.rotated),
+                "breaker": self.breaker.stats(),
+                "last_error": self.last_error}
+
+
 class PlanEngine:
     """Serve repeated plan executions off the compiled-program cache.
 
@@ -116,8 +230,10 @@ class PlanEngine:
 
     ``ServeConfig`` carries the serving knobs: persistent AOT compilation
     cache directory (cross-replica artifact sharing / warm start),
-    program-cache bound, executable-pool size, and the registration
-    admission cap.
+    program-cache bound, executable-pool size, the registration admission
+    cap — and the resilience contract (deadlines, bounded in-flight depth,
+    canary validation, circuit breakers, background re-solve, chaos
+    injection; see the module docstring).
 
     Thread-safe: N server threads may ``submit`` (and register/unregister)
     against one engine concurrently — registry, key table and request
@@ -146,7 +262,27 @@ class PlanEngine:
         self._functions: dict[str, Any] = {}
         self.requests = 0
         self.per_name: dict[str, int] = {}
+        # -- resilience state ---------------------------------------------
+        self._health: dict[str, _EntryHealth] = {}
+        # entries whose trace/solve failed at registration: served by the
+        # plain-jit fallback alone until background re-solve succeeds
+        self._fallback_only: dict[str, Any] = {}
+        self._fallback_fns: dict[str, Any] = {}     # name -> jit(fn)
+        self._reference_fns: dict[str, Any] = {}    # name -> ref executor
+        # register_function provenance so background re-solve can retry
+        # with the caller's solver budget/hardware
+        self._reg_meta: dict[str, dict] = {}
+        self.rejected = 0             # admission (overload) rejections
+        self.deadline_rejected = 0    # deadline expired before admission
+        self.deadline_misses = 0      # admitted but finished past budget
+        self._inflight_now = 0
+        self._inflight_sem = (
+            threading.BoundedSemaphore(self.sc.max_inflight)
+            if self.sc.max_inflight else None)
+        self._stop = threading.Event()
+        self._clock = time.monotonic
 
+    # -- registration -----------------------------------------------------
     def register(self, name: str, graph, plan) -> None:
         """Admit a (graph, plan) pair; past ``sc.max_plans`` registrations
         the least-recently-submitted name is evicted first."""
@@ -161,6 +297,10 @@ class PlanEngine:
             self._functions.pop(name, None)   # plain graphs shed any old
             self._keys = {k: v for k, v in self._keys.items()  # traced glue
                           if k[0] != name}
+            self._health.pop(name, None)      # fresh entry, fresh health
+            self._fallback_only.pop(name, None)
+            self._fallback_fns.pop(name, None)
+            self._reference_fns.pop(name, None)
 
     def register_function(self, name: str, fn, example_inputs,
                           *, solver_opts=None, hw=None):
@@ -172,14 +312,38 @@ class PlanEngine:
         shape to :meth:`submit` (or a dict of graph arrays, as for plain
         registrations).  Returns the :class:`TracedFunction` so callers can
         inspect coverage or validate against the ``jax.jit`` oracle.
+
+        With ``sc.fallback`` (the default), a trace/solve failure does NOT
+        raise: the entry is registered in degraded mode — every submit is
+        served by plain ``jax.jit(fn)`` — quarantined in :meth:`stats`,
+        and re-traced/re-solved in the background with exponential
+        backoff.  Returns ``None`` in that case.
         """
         from ..frontend import trace
-        tf = trace(fn, *example_inputs, name=name)
-        if not tf.graph.statements:
-            raise ValueError(
-                f"{name}: function lowered to an empty graph (pure "
-                "passthrough) — nothing to serve")
-        plan = tf.solve(hw=hw, opts=solver_opts)
+        try:
+            tf = trace(fn, *example_inputs, name=name)
+            if not tf.graph.statements:
+                raise ValueError(
+                    f"{name}: function lowered to an empty graph (pure "
+                    "passthrough) — nothing to serve")
+            plan = tf.solve(hw=hw, opts=solver_opts)
+        except Exception as exc:
+            if not self.sc.fallback:
+                raise
+            log.warning("%s: trace/solve failed (%s); registering the "
+                        "plain-jit fallback and re-solving in background",
+                        name, exc)
+            with self._lock:
+                self.register(name, None, None)
+                self._fallback_only[name] = jax.jit(fn)
+                self._reg_meta[name] = {
+                    "fn": fn, "example_inputs": tuple(example_inputs),
+                    "solver_opts": solver_opts, "hw": hw}
+                health = self._health_for(name)
+                health.last_error = f"{type(exc).__name__}: {exc}"
+            health.breaker.force_open()
+            self._start_recovery(name, self._current_impl())
+            return None
         with self._lock:
             # registry entry + function-binding glue must appear atomically:
             # a concurrent positional-tuple submit between the two would see
@@ -187,6 +351,9 @@ class PlanEngine:
             # program (the lock is reentrant, register() retakes it)
             self.register(name, tf.graph, plan)
             self._functions[name] = tf
+            self._reg_meta[name] = {
+                "fn": fn, "example_inputs": tuple(example_inputs),
+                "solver_opts": solver_opts, "hw": hw}
         return tf
 
     def unregister(self, name: str) -> None:
@@ -197,11 +364,30 @@ class PlanEngine:
             self._functions.pop(name, None)
             self._keys = {k: v for k, v in self._keys.items()
                           if k[0] != name}
+            self._health.pop(name, None)
+            self._fallback_only.pop(name, None)
+            self._fallback_fns.pop(name, None)
+            self._reference_fns.pop(name, None)
+            self._reg_meta.pop(name, None)
 
     def names(self) -> list[str]:
         with self._lock:
             return sorted(self._registry)
 
+    def shutdown(self, timeout: float = 60.0) -> None:
+        """Stop background recovery threads and wait for any in-flight
+        re-solve to finish (an attempt mid-solve cannot be interrupted,
+        only not-followed-by-another).  Daemon threads also die with the
+        process — this is for tests and orderly replica teardown, so a
+        stopped engine leaves the process-wide program cache alone."""
+        self._stop.set()
+        with self._lock:
+            threads = [h.recovery_thread for h in self._health.values()
+                       if h.recovery_thread is not None]
+        for t in threads:
+            t.join(timeout)
+
+    # -- warmup -----------------------------------------------------------
     def warmup(self, name: str, inputs: dict) -> float:
         """Compile-and-first-run; returns seconds spent (the cold cost the
         cache amortizes away for every later request).
@@ -216,12 +402,11 @@ class PlanEngine:
         replica already compiled deserializes the artifact instead of
         re-lowering — the warm-start path."""
         from ..codegen import program_cache
-        from ..kernels import dispatch
         t0 = time.monotonic()
         out = self.submit(name, inputs)
         for v in jax.tree_util.tree_leaves(out):
             v.block_until_ready()
-        impl = self._impl or dispatch.current_impl()
+        impl = self._current_impl()
         if self.sc.pool_size is not None:
             # the engine's own pool contract — valid even if the entry was
             # already evicted again by a concurrent replica
@@ -236,6 +421,21 @@ class PlanEngine:
             for v in jax.tree_util.tree_leaves(out):
                 v.block_until_ready()
         return time.monotonic() - t0
+
+    # -- request path -----------------------------------------------------
+    def _current_impl(self) -> str:
+        from ..kernels import dispatch
+        return self._impl or dispatch.current_impl()
+
+    def _health_for(self, name: str) -> _EntryHealth:
+        with self._lock:
+            health = self._health.get(name)
+            if health is None:
+                health = self._health[name] = _EntryHealth(
+                    breaker=CircuitBreaker(self.sc.breaker_threshold,
+                                           self.sc.breaker_reset_s,
+                                           clock=self._clock))
+            return health
 
     def _resolve(self, name: str, impl: str):
         from ..codegen import compiled_program, program_cache, program_key
@@ -258,7 +458,8 @@ class PlanEngine:
         return compiled_program(graph, plan, impl,
                                 pool_size=self.sc.pool_size)
 
-    def submit(self, name: str, inputs) -> Any:
+    def submit(self, name: str, inputs, *,
+               deadline_s: float | None = None) -> Any:
         """Execute one request; hits the compiled program for ``name``.
 
         ``inputs`` is a dict of graph arrays for plain registrations.  For
@@ -266,29 +467,374 @@ class PlanEngine:
         positional arguments matching the traced signature — the request is
         bound through the TracedFunction and returns the function's result
         pytree instead of a raw array dict.
+
+        ``deadline_s`` overrides ``sc.deadline_s`` for this request.
+        Raises :class:`~repro.ft.EngineOverloaded` when the bounded
+        in-flight depth stays full past the admission timeout, and
+        :class:`~repro.ft.DeadlineExceeded` when the budget expires before
+        admission; any post-admission failure degrades to the plain-jit
+        fallback (``sc.fallback``) instead of raising.
         """
-        from ..kernels import dispatch
-        impl = self._impl or dispatch.current_impl()
+        t0 = time.monotonic()
+        deadline = deadline_s if deadline_s is not None \
+            else self.sc.deadline_s
+        sem = self._inflight_sem
+        if sem is not None:
+            timeout = self.sc.admission_timeout_s
+            if deadline is not None:
+                timeout = min(timeout, deadline)
+            if not sem.acquire(timeout=max(0.0, timeout)):
+                if deadline is not None \
+                        and time.monotonic() - t0 >= deadline:
+                    with self._lock:
+                        self.deadline_rejected += 1
+                    raise DeadlineExceeded(
+                        f"{name}: deadline {deadline:.3f}s expired before "
+                        "admission (engine at max_inflight="
+                        f"{self.sc.max_inflight})")
+                with self._lock:
+                    self.rejected += 1
+                raise EngineOverloaded(
+                    f"{name}: {self.sc.max_inflight} requests in flight; "
+                    f"none drained within {timeout:.3f}s")
+        try:
+            with self._lock:
+                self._inflight_now += 1
+            return self._submit_admitted(name, inputs, t0, deadline)
+        finally:
+            with self._lock:
+                self._inflight_now -= 1
+            if sem is not None:
+                sem.release()
+
+    def _submit_admitted(self, name: str, inputs, t0: float,
+                         deadline: float | None) -> Any:
+        impl = self._current_impl()
         with self._lock:
+            if name not in self._registry:
+                raise KeyError(name)
             tf = self._functions.get(name)
+            has_plan = self._registry[name][1] is not None
+        health = self._health_for(name)
         env = None
         if tf is not None and not isinstance(inputs, dict):
+            # argument-contract errors (bad pytree/shape/dtype) are caller
+            # bugs: they raise before the request is counted and never
+            # touch the breaker
             env = tf.bind_args(tuple(inputs))
-        prog = self._resolve(name, impl)
         with self._lock:
             self.requests += 1
             self.per_name[name] = self.per_name.get(name, 0) + 1
             self._last_use[name] = time.monotonic()
-        if env is not None:
-            return tf.unbind(prog(env), env)
-        return prog(inputs)
+        if has_plan and health.breaker.allow():
+            try:
+                out = self._run_optimized(
+                    name, impl, tf, env if env is not None else inputs,
+                    health)
+            except Exception as exc:
+                self._note_failure(name, impl, health, exc)
+                if not self.sc.fallback:
+                    raise
+            else:
+                with self._lock:
+                    health.ok += 1
+                health.breaker.record_success()
+                self._note_deadline(t0, deadline, health)
+                if env is not None:
+                    return tf.unbind(out, env)
+                return out
+        out = self._run_fallback(name, tf, env, inputs, health)
+        self._note_deadline(t0, deadline, health)
+        return out
 
+    def _run_optimized(self, name: str, impl: str, tf, env: dict,
+                       health: _EntryHealth) -> dict:
+        """The one-dispatch path; raises on any failure (compile, execute,
+        injected chaos, NaN guard, canary mismatch)."""
+        chaos = self.sc.chaos
+        if chaos is not None:
+            chaos.on_compile(name)
+        prog = self._resolve(name, impl)
+        if chaos is not None:
+            chaos.on_execute(name)
+        with self._lock:
+            attempt = health.attempts
+            health.attempts += 1
+        canary = self.sc.canary_every > 0 \
+            and attempt % self.sc.canary_every == 0
+        timed = canary or (self.sc.straggler is not None
+                           and prog.pool_size > 1) \
+            or self.sc.nan_guard == "always"
+        t_run = time.monotonic()
+        out, clone = prog.run(env)
+        if chaos is not None:
+            delay = chaos.execute_delay(name, clone)
+            if delay > 0.0:
+                time.sleep(delay)
+            out = chaos.corrupt_outputs(name, out)
+        if timed:
+            jax.block_until_ready(list(out.values()))
+        elapsed = time.monotonic() - t_run
+        if self.sc.straggler is not None and prog.pool_size > 1:
+            self._observe_clone(name, health, prog, clone, elapsed)
+        guard_nan = self.sc.nan_guard == "always" \
+            or (canary and self.sc.nan_guard == "canary")
+        if canary:
+            with self._lock:
+                health.canaries += 1
+        if guard_nan:
+            self._guard_finite(name, out)
+        if canary:
+            self._validate_canary(name, tf, env, out, health)
+        return out
+
+    def _guard_finite(self, name: str, out: dict) -> None:
+        for k, v in out.items():
+            if jnp.issubdtype(v.dtype, jnp.floating) \
+                    and not bool(jnp.all(jnp.isfinite(v))):
+                raise MiscompileError(
+                    f"{name}: output {k!r} contains NaN/inf — optimized "
+                    "path quarantined")
+
+    def _validate_canary(self, name: str, tf, env: dict, out: dict,
+                         health: _EntryHealth) -> None:
+        """Compare the optimized outputs against the plain-jit oracle;
+        a mismatch is a miscompile (wrong kernel output) — the entry is
+        quarantined and this request re-served by the oracle path."""
+        from ..codegen import allclose
+        try:
+            if tf is not None:
+                got = tf.unbind(out, env)
+                flat = [env[n] for n in tf.record.in_names]
+                args = jax.tree_util.tree_unflatten(tf.in_tree, list(flat))
+                expect = self._fallback_fn(name, tf)(*args)
+                g_flat = jax.tree_util.tree_leaves(got)
+                e_flat = jax.tree_util.tree_leaves(expect)
+                bad = len(g_flat) != len(e_flat) or any(
+                    not allclose(g, e, rtol=_rtol_for(e.dtype))
+                    for g, e in zip(g_flat, e_flat))
+            else:
+                expect = self._reference_fn(name)(env)
+                bad = any(not allclose(out[k], expect[k],
+                                       rtol=_rtol_for(expect[k].dtype))
+                          for k in expect)
+        except MiscompileError:
+            raise
+        except Exception as exc:
+            # the oracle itself failing is an engine problem, not proof of
+            # a miscompile; treat as an optimized-path failure all the same
+            raise MiscompileError(
+                f"{name}: canary oracle execution failed: {exc}") from exc
+        if bad:
+            with self._lock:
+                health.canary_failures += 1
+            raise MiscompileError(
+                f"{name}: canary validation mismatch vs the plain-jit "
+                "oracle — corrupted kernel output")
+
+    def _fallback_fn(self, name: str, tf):
+        with self._lock:
+            fn = self._fallback_fns.get(name)
+            if fn is None:
+                fn = self._fallback_fns[name] = jax.jit(tf.fn)
+            return fn
+
+    def _reference_fn(self, name: str):
+        from ..codegen import reference_executor
+        with self._lock:
+            fn = self._reference_fns.get(name)
+            if fn is None:
+                graph, _ = self._registry[name]
+                fn = self._reference_fns[name] = reference_executor(graph)
+            return fn
+
+    def _run_fallback(self, name: str, tf, env, inputs,
+                      health: _EntryHealth) -> Any:
+        """Serve the request on the plain-jit path (guaranteed-correct
+        baseline): ``jax.jit(fn)`` for function entries, the statement
+        reference oracle for graph registrations."""
+        with self._lock:
+            health.fallbacks += 1
+            fb = self._fallback_only.get(name)
+        if fb is not None:
+            return fb(*tuple(inputs))
+        if tf is not None:
+            fn = self._fallback_fn(name, tf)
+            if env is not None:
+                return fn(*tuple(inputs))
+            flat = [inputs[n] for n in tf.record.in_names]
+            args = jax.tree_util.tree_unflatten(tf.in_tree, list(flat))
+            return fn(*args)
+        return self._reference_fn(name)(inputs)
+
+    def _note_deadline(self, t0: float, deadline: float | None,
+                       health: _EntryHealth) -> None:
+        if deadline is not None and time.monotonic() - t0 > deadline:
+            with self._lock:
+                self.deadline_misses += 1
+                health.deadline_misses += 1
+
+    def _observe_clone(self, name: str, health: _EntryHealth, prog,
+                       clone: int, elapsed: float) -> None:
+        with self._lock:
+            mon = health.straggler
+            if mon is None or mon.n_hosts != prog.pool_size:
+                mon = health.straggler = StragglerMonitor(
+                    prog.pool_size, self.sc.straggler)
+            flagged = mon.observe_one(clone, elapsed)
+            if flagged and clone not in mon.reassigned:
+                if prog.disable_clone(clone):
+                    mon.demote(clone)
+                    health.rotated = tuple(
+                        sorted(set(health.rotated) | {clone}))
+                    log.warning(
+                        "%s: pool clone %d persistently slow "
+                        "(%.1fms) — rotated out of round-robin",
+                        name, clone, elapsed * 1e3)
+
+    # -- quarantine + background re-solve ---------------------------------
+    def _note_failure(self, name: str, impl: str, health: _EntryHealth,
+                      exc: Exception) -> None:
+        with self._lock:
+            health.failures += 1
+            health.last_error = f"{type(exc).__name__}: {exc}"
+        if isinstance(exc, MiscompileError):
+            # wrong values are never a transient: quarantine immediately
+            health.breaker.force_open()
+            opened = True
+        else:
+            opened = health.breaker.record_failure()
+        if health.breaker.state is BreakerState.OPEN:
+            # the quarantined program must not be served again on recovery:
+            # drop it from the process-wide cache so re-solve starts clean
+            from ..codegen import program_cache
+            with self._lock:
+                key = self._keys.pop((name, impl), None)
+            if key is not None:
+                program_cache().invalidate(key)
+        if opened:
+            log.warning("%s: optimized path quarantined (%s); serving "
+                        "plain-jit fallback, re-solving in background",
+                        name, health.last_error)
+            self._start_recovery(name, impl)
+
+    def _start_recovery(self, name: str, impl: str) -> None:
+        health = self._health_for(name)
+        with self._lock:
+            if health.recovering or self._stop.is_set():
+                return
+            health.recovering = True
+            health.recovered_event.clear()
+        t = threading.Thread(target=self._recovery_loop, args=(name, impl),
+                             daemon=True, name=f"repro-resolve-{name}")
+        with self._lock:
+            health.recovery_thread = t
+        t.start()
+
+    def _recovery_loop(self, name: str, impl: str) -> None:
+        from ..ft.serve import BackoffPolicy
+        health = self._health_for(name)
+        policy = BackoffPolicy(
+            base_s=self.sc.resolve_backoff_s,
+            mult=self.sc.resolve_backoff_mult,
+            max_s=self.sc.resolve_backoff_max_s,
+            retries=self.sc.resolve_max_retries)
+        for delay in policy.delays():
+            if self._stop.wait(delay):
+                break
+            with self._lock:
+                if name not in self._registry:
+                    break               # unregistered while quarantined
+                health.resolve_attempts += 1
+            try:
+                self._rebuild(name, impl)
+            except Exception as exc:
+                with self._lock:
+                    health.last_error = f"{type(exc).__name__}: {exc}"
+                log.info("%s: background re-solve attempt failed (%s)",
+                         name, exc)
+                continue
+            health.breaker.record_success()     # closes: next submit is
+            with self._lock:                    # optimized again
+                health.recovered += 1
+                health.recovering = False
+            health.recovered_event.set()
+            log.info("%s: background re-solve succeeded; breaker closed",
+                     name)
+            return
+        with self._lock:
+            health.recovering = False
+
+    def _rebuild(self, name: str, impl: str) -> None:
+        """One recovery attempt: re-trace/re-solve as needed, compile the
+        program eagerly, and validate it against the plain-jit oracle on
+        probe inputs before the breaker may close."""
+        from ..codegen import (allclose, compiled_program, program_key,
+                               random_inputs, reference_executor)
+        with self._lock:
+            meta = self._reg_meta.get(name)
+            graph, plan = self._registry.get(name, (None, None))
+            tf = self._functions.get(name)
+            fallback_only = name in self._fallback_only
+        if fallback_only or (tf is None and graph is None):
+            # registration never succeeded: retry the full trace + solve
+            from ..frontend import trace
+            tf = trace(meta["fn"], *meta["example_inputs"], name=name)
+            if not tf.graph.statements:
+                raise ValueError(f"{name}: still lowers to an empty graph")
+            plan = tf.solve(hw=meta["hw"], opts=meta["solver_opts"])
+            graph = tf.graph
+        elif tf is not None:
+            # quarantined traced entry: re-solve fresh (calibration may
+            # have drifted; the old plan produced the failure)
+            from ..core.solver import SolverOptions, solve
+            opts = (meta or {}).get("solver_opts") \
+                or SolverOptions(time_budget_s=20.0)
+            plan = solve(graph, (meta or {}).get("hw"), opts)
+        # graph-only entries keep their externally supplied plan: the
+        # rebuild recompiles and revalidates the program
+        prog = compiled_program(graph, plan, impl,
+                                pool_size=self.sc.pool_size)
+        if tf is not None:
+            env = tf.bind(list(tf.example_flat))
+            out = prog(env)
+            got = jax.tree_util.tree_leaves(tf.unbind(out, env))
+            args = jax.tree_util.tree_unflatten(tf.in_tree,
+                                                list(tf.example_flat))
+            expect = jax.tree_util.tree_leaves(jax.jit(tf.fn)(*args))
+            if len(got) != len(expect) or any(
+                    not allclose(g, e, rtol=_rtol_for(e.dtype))
+                    for g, e in zip(got, expect)):
+                raise MiscompileError(
+                    f"{name}: rebuilt program still fails oracle "
+                    "validation")
+        else:
+            env = random_inputs(graph, seed=0)
+            out = prog(env)
+            expect = reference_executor(graph)(env)
+            if any(not allclose(out[k], expect[k]) for k in expect):
+                raise MiscompileError(
+                    f"{name}: rebuilt program still fails oracle "
+                    "validation")
+        with self._lock:
+            self._registry[name] = (graph, plan)
+            self._keys = {k: v for k, v in self._keys.items()
+                          if k[0] != name}
+            self._keys[(name, impl)] = program_key(graph, plan, impl)
+            if tf is not None:
+                self._functions[name] = tf
+                self._fallback_only.pop(name, None)
+            self._reference_fns.pop(name, None)
+
+    # -- statistics -------------------------------------------------------
     def stats(self) -> dict:
         """Serving statistics: engine request counts, the global program
         cache (size/capacity, hits/misses/evictions, per-entry detail),
-        per-pool occupancy of every program this engine serves, and the
+        per-pool occupancy of every program this engine serves, the
         frontend trace cache (hits, size, per-entry coverage) feeding
-        ``register_function`` entries."""
+        ``register_function`` entries, and the ``resilience`` block —
+        admission rejections, deadline accounting, and per-entry health
+        (breaker state, fallbacks, canary results, recovery progress)."""
         from ..codegen import cache_stats, persistent_cache_dir, program_cache
         from ..frontend import trace_cache_stats
         cache = program_cache()
@@ -298,6 +844,18 @@ class PlanEngine:
             registered = len(self._registry)
             per_name = dict(self.per_name)
             functions = sorted(self._functions)
+            health = {name: h.stats(
+                has_plan=self._registry.get(name, (None, None))[1]
+                is not None)
+                for name, h in self._health.items()}
+            resilience = {
+                "rejected": self.rejected,
+                "deadline_rejected": self.deadline_rejected,
+                "deadline_misses": self.deadline_misses,
+                "inflight": self._inflight_now,
+                "max_inflight": self.sc.max_inflight,
+                "entries": health,
+            }
         pools = {}
         for (name, impl), key in keys.items():
             entry = cache.entry(key)
@@ -308,6 +866,7 @@ class PlanEngine:
                     "next": p.calls % p.pool_size,
                     "calls": p.calls,
                     "n_segments": p.n_segments,
+                    "disabled_clones": list(p.disabled_clones),
                 }
         s = cache_stats(detail=True)
         hit_rate = s["hits"] / max(1, s["hits"] + s["misses"])
@@ -319,4 +878,5 @@ class PlanEngine:
                 "pools": pools,
                 "persistent_cache_dir": persistent_cache_dir(),
                 "trace_cache": trace_cache_stats(),
+                "resilience": resilience,
                 **s}

@@ -296,3 +296,76 @@ def test_committed_frontend_baseline_is_gateable():
         pytest.skip("no committed frontend baseline")
     data = json.loads(path.read_text())
     assert bench_compare.compare_frontend(data, data) == []
+
+
+# ---------------------------------------------------------------------------
+# Chaos gate: availability floors, recovery, artifact round trip
+# ---------------------------------------------------------------------------
+def _chaos(clean_avail=1.0, faulted_avail=1.0, *, recovered=True,
+           injected=(("compile", "m", 1),), artifacts=True) -> dict:
+    def scenario(avail):
+        return {"requests": 60, "correct": int(60 * avail),
+                "availability": avail, "p50_ms": 10.0, "p99_ms": 30.0,
+                "errors": [], "failures": 2, "fallbacks": 2,
+                "breaker_closed_after_recovery": recovered,
+                "final_state": "ok" if recovered else "quarantined"}
+    s_clean, s_faulted = scenario(clean_avail), scenario(faulted_avail)
+    s_faulted["injected"] = [list(e) for e in injected]
+    return {"benchmark": "chaos_serving",
+            "scenarios": {"clean": s_clean, "faulted": s_faulted},
+            "artifact_recovery": {"survived_corrupt_load": artifacts,
+                                  "quarantined": artifacts,
+                                  "regenerated": artifacts}}
+
+
+def test_chaos_gate_passes_on_healthy_run():
+    assert bench_compare.compare_chaos(_chaos()) == []
+
+
+def test_chaos_gate_fails_availability_below_floor_as_correctness():
+    failures = bench_compare.compare_chaos(_chaos(faulted_avail=0.95))
+    assert any("chaos/faulted" in f and "availability" in f
+               for f in failures)
+    assert all(f.startswith(bench_compare.CORRECTNESS_TAG)
+               for f in failures)
+    # the floor is configurable
+    assert bench_compare.compare_chaos(
+        _chaos(faulted_avail=0.95), availability_floor=0.9) == []
+
+
+def test_chaos_gate_fails_when_breaker_stays_open():
+    failures = bench_compare.compare_chaos(_chaos(recovered=False))
+    assert any("breaker did not close" in f for f in failures)
+    # recovery timing can be runner noise: NOT correctness-tagged
+    assert not any(f.startswith(bench_compare.CORRECTNESS_TAG)
+                   for f in failures)
+
+
+def test_chaos_gate_fails_when_nothing_was_injected():
+    failures = bench_compare.compare_chaos(_chaos(injected=()))
+    assert any("no faults were actually injected" in f for f in failures)
+
+
+def test_chaos_gate_fails_on_artifact_recovery():
+    failures = bench_compare.compare_chaos(_chaos(artifacts=False))
+    assert sum("artifact recovery failed" in f for f in failures) == 3
+
+
+def test_chaos_cli_exit_codes(tmp_path):
+    good, bad = tmp_path / "good.json", tmp_path / "bad.json"
+    good.write_text(json.dumps(_chaos()))
+    bad.write_text(json.dumps(_chaos(faulted_avail=0.5)))
+    assert bench_compare.main(["--chaos-fresh", str(good)]) == 0
+    # availability misses are correctness failures: exit 2, never retried
+    assert bench_compare.main(["--chaos-fresh", str(bad)]) == 2
+
+
+def test_committed_chaos_baseline_is_gateable():
+    """The committed BENCH_chaos.json must pass its own gate: the
+    resilience contract held when the artifact was generated."""
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_chaos.json"
+    if not path.exists():
+        pytest.skip("no committed chaos baseline")
+    data = json.loads(path.read_text())
+    assert bench_compare.compare_chaos(data) == []

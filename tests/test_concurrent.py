@@ -230,3 +230,42 @@ def test_warmed_plan_is_mru_not_eviction_victim():
     finally:
         set_program_cache_size(old)
         clear_program_cache()
+
+
+def test_concurrent_submits_with_injected_failures_keep_accounting():
+    """Failures mid-submit under concurrency must not corrupt engine
+    accounting: request totals, per-entry ok/fallback buckets and pool
+    cursors all stay conservation-clean, and every caller still gets a
+    correct answer (failed optimized executions fall back, they do not
+    raise or return garbage)."""
+    from repro.ft import ChaosPlan
+
+    clear_program_cache()
+    g, plan = _solved("2-madd")
+    ins = random_inputs(g, seed=0)
+    ref = reference_executor(g)(ins)
+    chaos = ChaosPlan(execute_fail_at=tuple(range(3, 60, 7)))
+    eng = PlanEngine(impl="xla", sc=ServeConfig(
+        pool_size=2, chaos=chaos, breaker_threshold=1_000_000))
+    eng.register("m", g, plan)
+    warm = eng.stats()["requests"]
+
+    def worker(_):
+        for _ in range(N_SUBMITS):
+            out = eng.submit("m", ins)
+            assert all(allclose(out[k], ref[k]) for k in ref)
+
+    _run_threads(N_THREADS, worker)
+    s = eng.stats()
+    total = N_THREADS * N_SUBMITS
+    assert s["requests"] == warm + total
+    assert s["per_name"]["m"] == warm + total
+    h = s["resilience"]["entries"]["m"]
+    # conservation: every admitted request in exactly one bucket, every
+    # injected fault matched by exactly one fallback
+    assert h["ok"] + h["fallbacks"] == warm + total
+    assert h["failures"] == len(chaos.events) > 0
+    assert h["fallbacks"] == h["failures"]
+    # the pool cursor advanced once per completed optimized execution
+    # (injected execute faults fire before the kernel dispatches)
+    assert s["pools"]["m/xla"]["calls"] == h["ok"]

@@ -418,7 +418,16 @@ def test_plan_engine_register_function_serves_and_warms():
 
 
 def test_register_function_rejects_empty_graph():
-    from repro.serve import PlanEngine
-    eng = PlanEngine(impl="xla")
+    from repro.serve import PlanEngine, ServeConfig
+    # strict mode surfaces the unservable function to the caller
+    eng = PlanEngine(impl="xla", sc=ServeConfig(fallback=False))
     with pytest.raises(ValueError, match="empty graph"):
         eng.register_function("id", lambda x: x, (_arr((4, 4)),))
+    # default (graceful) mode registers the plain-jit fallback instead —
+    # the resilience contract in tests/test_ft_serve.py pins the rest
+    eng2 = PlanEngine(impl="xla")
+    assert eng2.register_function("id", lambda x: x,
+                                  (_arr((4, 4)),)) is None
+    assert eng2.stats()["resilience"]["entries"]["id"]["state"] \
+        == "fallback"
+    eng2.shutdown()
