@@ -1,23 +1,37 @@
-"""BENCH_concurrent.json emitter: ``PlanEngine.submit`` under thread load.
+"""BENCH_concurrent.json emitter: ``PlanEngine`` under thread load.
 
-The executable pool exists for multi-threaded servers (N callers
-round-robin onto N cloned executables), but until now only single-caller
-steady state was ever measured (ROADMAP open item).  This benchmark drives
-one shared ``PlanEngine`` from ``--threads`` OS threads, each submitting
-``--requests`` back-to-back requests (block per request — a request is
-done when its outputs are ready), against pool sizes {1, 2, 4}, and
-records throughput and p50/p99 latency per pool size — the measured
-answer to "does pool > 1 pay, and what should the default be?".
+Two experiments share this emitter:
 
+**Closed loop** (the ``pools`` section): the executable pool exists for
+multi-threaded servers (N callers round-robin onto N cloned executables).
+This part drives one shared ``PlanEngine`` from ``--threads`` OS threads,
+each submitting ``--requests`` back-to-back requests (block per request —
+a request is done when its outputs are ready), against pool sizes
+{1, 2, 4}, and records throughput and p50/p99 latency per pool size — the
+measured answer to "does pool > 1 pay, and what should the default be?".
 Every pool's section also doubles as a served-under-load correctness
 check: the last response is validated against the reference oracle and the
 engine/cache counters are checked for lost updates (the thread-safety
 stress signal the CI gate reads).
 
+**Open loop** (the ``open_loop`` section): requests arrive on a
+deterministic Poisson-like schedule (:func:`arrival_schedule` — seeded
+exponential inter-arrival gaps), *independent of completions*, at offered
+rates derived from the measured sequential capacity.  Each rate is served
+two ways — ``sequential`` (a thread pool of blocking ``submit`` calls: one
+dispatch per request) and ``batched`` (``submit_async`` through the
+continuous-batching tier: same-entry requests coalesced into power-of-two
+buckets, one dispatch per bucket) — and the section records
+per-rate throughput, p50/p99 latency (scheduled arrival → result ready),
+full request accounting (``ok + fallbacks + expired + rejected + errors
+== issued``, the CI gate's correctness invariant) and the
+``batched_vs_sequential`` throughput ratio the gate's ``>= 1.2x`` floor
+reads at the overload rate.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_concurrent \
         --kernel 3-madd --threads 4 --pools 1 2 4 --requests 40 \
-        --out BENCH_concurrent.json
+        --open-loop-requests 200 --out BENCH_concurrent.json
 """
 from __future__ import annotations
 
@@ -26,10 +40,16 @@ import json
 import os
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from .common import build_graph, solve_kernel
 
 DEFAULT_POOLS = (1, 2, 4)
+#: Offered open-loop rates as multipliers of measured sequential capacity:
+#: comfortable (0.8x) and overloaded (2.0x — where coalescing must pay).
+DEFAULT_RATE_MULTS = (0.8, 2.0)
+#: The rate the CI gate reads the batched/sequential ratio at.
+GATE_RATE = "2.0x"
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -143,8 +163,307 @@ def bench(kernel: str = "3-madd", *, pool_sizes=DEFAULT_POOLS,
     }
 
 
-def emit(path: str, **kw) -> dict:
-    result = bench(**kw)
+# ---------------------------------------------------------------------------
+# Open-loop offered-load sweep: batched vs sequential serving
+# ---------------------------------------------------------------------------
+def arrival_schedule(n: int, rate_rps: float, seed: int = 0):
+    """Deterministic Poisson-like arrival offsets: ``n`` cumulative
+    exponential inter-arrival gaps at mean rate ``rate_rps``, from a
+    seeded generator — the same (n, rate, seed) always yields the same
+    schedule, so open-loop runs are reproducible bit-for-bit."""
+    import numpy as np
+
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if rate_rps <= 0.0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def _mlp_workload(seed: int = 0, n_inputs: int = 8):
+    """The open-loop serving workload: a small residual fan-out network
+    (traced as a function entry) plus ``n_inputs`` cycling input batches.
+
+    Each block's input feeds two matmuls — a multi-consumer producer, so
+    the compiled plan program splits at those boundaries into several
+    segments (several dispatches per request).  Small per-request compute
+    with real per-request dispatch/host overhead is exactly the regime
+    continuous batching exists for: a coalesced bucket pays the per-flush
+    overhead once instead of once per request."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    ws = [jnp.asarray(rng.standard_normal((128, 128), dtype=np.float32)
+                      * 0.05) for _ in range(8)]
+
+    def mlp(x):
+        for w_a, w_b in zip(ws[0::2], ws[1::2]):
+            x = (x @ w_a) * (x @ w_b) + x
+        return x
+
+    xs = [jnp.asarray(rng.standard_normal((16, 128), dtype=np.float32))
+          for _ in range(n_inputs)]
+    return mlp, xs
+
+
+def _measure_capacity(eng, name: str, xs, *, threads: int,
+                      requests: int) -> float:
+    """Closed-loop sequential capacity (requests/s) of the plain blocking
+    ``submit`` path — the anchor the offered open-loop rates scale from,
+    so the sweep adapts to however fast this runner actually is."""
+    import jax
+
+    done = [0] * threads
+    barrier = threading.Barrier(threads + 1)
+
+    def worker(i: int) -> None:
+        barrier.wait()
+        for k in range(requests):
+            out = eng.submit(name, (xs[k % len(xs)],))
+            jax.block_until_ready(out)
+            done[i] += 1
+
+    workers = [threading.Thread(target=worker, args=(i,))
+               for i in range(threads)]
+    for w in workers:
+        w.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for w in workers:
+        w.join()
+    wall = time.perf_counter() - t0
+    return sum(done) / max(wall, 1e-9)
+
+
+def _open_loop_drive(eng, name: str, xs, schedule, *, mode: str,
+                     threads: int, deadline_s: float) -> dict:
+    """Issue one request per schedule offset (sleeping to the schedule,
+    never waiting on completions) and account for every one of them.
+
+    ``sequential`` serves each request with a blocking ``submit`` on a
+    ``threads``-wide pool (one dispatch per request); ``batched`` enqueues
+    through ``submit_async`` (the continuous-batching tier).  Latency is
+    scheduled arrival -> result ready, so driver lateness and queueing
+    both count against the server — the open-loop contract.
+    """
+    import jax
+
+    from repro.ft import DeadlineExceeded, EngineOverloaded
+
+    lock = threading.Lock()
+    counts = {"ok": 0, "fallbacks": 0, "expired": 0, "rejected": 0,
+              "errors": 0}
+    latencies: list[float] = []
+    done_at: list[float] = []
+
+    def record(kind: str, sched: float) -> None:
+        with lock:
+            counts[kind] += 1
+            if kind in ("ok", "fallbacks"):
+                now = time.perf_counter()
+                latencies.append(now - sched)
+                done_at.append(now)
+
+    def run_blocking(i: int, sched: float) -> None:
+        info: dict = {}
+        try:
+            out = eng.submit(name, (xs[i % len(xs)],),
+                             deadline_s=deadline_s, _info=info)
+            jax.block_until_ready(out)
+        except DeadlineExceeded:
+            record("expired", sched)
+        except EngineOverloaded:
+            record("rejected", sched)
+        except Exception:
+            record("errors", sched)
+        else:
+            record("fallbacks" if info.get("path") == "fallback"
+                   else "ok", sched)
+
+    def on_done(sched: float):
+        # done-callback, runs on the batcher thread the instant the future
+        # resolves: stamping here (instead of a pool of waiter threads
+        # each blocking per request) keeps the measurement machinery off
+        # the GIL during the run.  Stamps are future-resolution times;
+        # device completion is synced in bulk below, so throughput error
+        # is bounded by one flush's device time.
+        def cb(fut) -> None:
+            now = time.perf_counter()
+            try:
+                fut.result()
+            except DeadlineExceeded:
+                record("expired", sched)
+            except Exception:
+                record("errors", sched)
+            else:
+                with lock:
+                    counts["ok"] += 1    # ok/fallback split refined below
+                    latencies.append(now - sched)
+                    done_at.append(now)
+        return cb
+
+    workers = ThreadPoolExecutor(max_workers=max(threads, 1)) \
+        if mode == "sequential" else None
+    pending = []
+    max_late = 0.0
+    t0 = time.perf_counter()
+    for i, offset in enumerate(schedule):
+        target = t0 + float(offset)
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        max_late = max(max_late, time.perf_counter() - target)
+        if mode == "sequential":
+            pending.append(workers.submit(run_blocking, i, target))
+        else:
+            try:
+                fut = eng.submit_async(name, (xs[i % len(xs)],),
+                                       deadline_s=deadline_s)
+            except EngineOverloaded:
+                record("rejected", target)
+            else:
+                fut.add_done_callback(on_done(target))
+                pending.append(fut)
+    outs = []
+    for p in pending:
+        try:
+            outs.append(p.result())
+        except Exception:
+            pass                        # already counted by the callback
+    jax.block_until_ready(outs)
+    if workers is not None:
+        workers.shutdown()
+    issued = len(schedule)
+    if mode == "batched":
+        # the batcher's own accounting knows which completed requests were
+        # served by the optimized vs the plain-jit path; totals must agree
+        # with what the driver observed
+        bs = eng.batcher().stats()
+        counts["ok"] = bs["ok"]
+        counts["fallbacks"] = bs["fallbacks"]
+    lat = sorted(latencies)
+    span = (max(done_at) - t0) if done_at else 0.0
+    completed = counts["ok"] + counts["fallbacks"]
+    return {
+        "mode": mode,
+        "issued": issued,
+        "throughput_rps": round(completed / span, 3) if span else 0.0,
+        "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+        "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+        "max_driver_lateness_ms": round(max_late * 1e3, 4),
+        **counts,
+    }
+
+
+def bench_open_loop(*, requests: int = 200, threads: int = 4,
+                    max_batch: int = 16, max_wait_ms: float = 2.0,
+                    deadline_ms: float = 2000.0, seed: int = 0,
+                    budget: float = 3.0,
+                    rate_mults=DEFAULT_RATE_MULTS) -> dict:
+    """The ``open_loop`` section: offered-load sweep of batched vs
+    sequential serving of one traced workload, plus full accounting."""
+    import numpy as np
+    import jax
+
+    from repro.codegen import clear_program_cache
+    from repro.core.solver import SolverOptions
+    from repro.serve import BatchConfig, PlanEngine, ServeConfig
+
+    fn, xs = _mlp_workload(seed)
+    oracle = jax.jit(fn)
+    opts = SolverOptions(time_budget_s=budget)
+    deadline_s = deadline_ms / 1e3
+
+    def validate(eng) -> bool:
+        out = eng.submit("mlp", (xs[0],))
+        return bool(np.allclose(np.asarray(out),
+                                np.asarray(oracle(xs[0])),
+                                rtol=2e-4, atol=1e-5))
+
+    # -- anchor: closed-loop sequential capacity on a plain engine --------
+    clear_program_cache()
+    seq_probe = PlanEngine(sc=ServeConfig())
+    seq_probe.register_function("mlp", fn, (xs[0],), solver_opts=opts)
+    seq_probe.warmup("mlp", (xs[0],))
+    capacity = _measure_capacity(seq_probe, "mlp", xs, threads=threads,
+                                 requests=max(8, requests // (4 * threads)))
+    seq_probe.shutdown()
+
+    rates: dict[str, dict] = {}
+    for mult in rate_mults:
+        rate = capacity * mult
+        schedule = arrival_schedule(requests, rate, seed)
+        per_rate: dict[str, object] = {
+            "offered_rps": round(rate, 3),
+            "rate_multiplier": mult,
+        }
+        for mode in ("sequential", "batched"):
+            clear_program_cache()
+            cfg = ServeConfig()
+            if mode == "batched":
+                cfg = ServeConfig(batching=BatchConfig(
+                    max_batch=max_batch, max_wait_s=max_wait_ms / 1e3))
+            eng = PlanEngine(sc=cfg)
+            eng.register_function("mlp", fn, (xs[0],), solver_opts=opts)
+            eng.warmup("mlp", (xs[0],))
+            if mode == "batched":
+                eng.batcher().warmup("mlp")
+            res = _open_loop_drive(eng, "mlp", xs, schedule, mode=mode,
+                                   threads=threads, deadline_s=deadline_s)
+            res["validated"] = validate(eng)
+            if mode == "batched":
+                bs = eng.batcher().stats()
+                res["batch_failures"] = bs["batch_failures"]
+                res["flushes"] = sum(
+                    b["flushes"] for b in bs["buckets"].values())
+                occ = [b["occupancy"] * b["flushes"]
+                       for b in bs["buckets"].values()]
+                res["bucket_occupancy"] = round(
+                    sum(occ) / max(res["flushes"], 1), 4)
+            eng.shutdown()
+            per_rate[mode] = res
+        seq_rps = per_rate["sequential"]["throughput_rps"]
+        bat_rps = per_rate["batched"]["throughput_rps"]
+        per_rate["batched_vs_sequential"] = \
+            round(bat_rps / seq_rps, 4) if seq_rps else 0.0
+        rates[f"{mult:.1f}x"] = per_rate
+    return {
+        "seed": seed,
+        "requests": requests,
+        "threads": threads,
+        "max_batch": max_batch,
+        "max_wait_ms": max_wait_ms,
+        "deadline_ms": deadline_ms,
+        "capacity_rps": round(capacity, 3),
+        "gate_rate": GATE_RATE,
+        "rates": rates,
+    }
+
+
+def emit(path: str, *, open_loop_requests: int = 0, max_batch: int = 16,
+         max_wait_ms: float = 2.0, deadline_ms: float = 2000.0,
+         seed: int = 0, **kw) -> dict:
+    if kw.get("pool_sizes"):
+        result = bench(**kw)
+    else:                       # open-loop-only run (e.g. the CI gate job)
+        import jax
+
+        result = {
+            "benchmark": "concurrent_serving",
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "pools": {},
+        }
+    if open_loop_requests:
+        result["open_loop"] = bench_open_loop(
+            requests=open_loop_requests,
+            threads=kw.get("threads", 4),
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+            deadline_ms=deadline_ms, seed=seed,
+            budget=kw.get("budget", 3.0))
     with open(path, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
@@ -154,26 +473,50 @@ def emit(path: str, **kw) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--kernel", default="3-madd")
-    ap.add_argument("--pools", type=int, nargs="+",
-                    default=list(DEFAULT_POOLS))
+    ap.add_argument("--pools", type=int, nargs="*",
+                    default=list(DEFAULT_POOLS),
+                    help="closed-loop pool sizes (empty = skip)")
     ap.add_argument("--threads", type=int, default=4)
     ap.add_argument("--requests", type=int, default=40,
-                    help="requests per thread")
+                    help="requests per thread (closed loop)")
     ap.add_argument("--scale", type=int, default=1)
     ap.add_argument("--budget", type=float, default=4.0)
     ap.add_argument("--impl", default="xla")
+    ap.add_argument("--open-loop-requests", type=int, default=0,
+                    help="open-loop sweep request count (0 = skip)")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=2000.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_concurrent.json")
     args = ap.parse_args()
     result = emit(args.out, kernel=args.kernel,
                   pool_sizes=tuple(args.pools), threads=args.threads,
                   requests=args.requests, scale=args.scale,
-                  budget=args.budget, impl=args.impl)
+                  budget=args.budget, impl=args.impl,
+                  open_loop_requests=args.open_loop_requests,
+                  max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                  deadline_ms=args.deadline_ms, seed=args.seed)
     for k, p in result["pools"].items():
         print(f"pool={k}: {p['throughput_rps']:8.1f} req/s "
               f"p50={p['p50_ms']:7.2f}ms p99={p['p99_ms']:7.2f}ms "
               f"served={p['served']} lost={p['lost_updates']} "
               f"validated={p['validated']}")
-    print(f"best_pool={result['best_pool']} -> {args.out}")
+    if result["pools"]:
+        print(f"best_pool={result['best_pool']}")
+    ol = result.get("open_loop")
+    if ol:
+        print(f"open loop: capacity={ol['capacity_rps']:.1f} req/s "
+              f"(gate rate {ol['gate_rate']})")
+        for rk, r in ol["rates"].items():
+            s, b = r["sequential"], r["batched"]
+            print(f"  rate={rk} offered={r['offered_rps']:7.1f}: "
+                  f"seq={s['throughput_rps']:7.1f} "
+                  f"bat={b['throughput_rps']:7.1f} req/s "
+                  f"ratio={r['batched_vs_sequential']:.2f} "
+                  f"bat_p99={b['p99_ms']:.1f}ms "
+                  f"occ={b.get('bucket_occupancy', 0):.2f}")
+    print(f"-> {args.out}")
 
 
 if __name__ == "__main__":

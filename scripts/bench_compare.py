@@ -44,6 +44,23 @@ Frontend gate (BENCH_frontend.json, via
   every workload must be ≥ ``--frontend-workload-floor`` (default 0.95 —
   one workload may sit inside the noise band, but not lose outright).
 
+Batching gate (the ``open_loop`` section of BENCH_concurrent.json, via
+``--batching-fresh`` — fresh-run-only, absolute floors, no baseline):
+
+* request accounting must balance in every mode at every offered rate:
+  ``ok + fallbacks + expired + rejected + errors == issued`` — a request
+  the batcher lost is a correctness failure, never retried;
+* no mode may report request errors, and every mode's post-run response
+  must be ``validated`` against the ``jax.jit`` oracle (both
+  correctness-tagged);
+* at the gate rate (the overloaded offered load, ``gate_rate`` in the
+  file), batched throughput must be at least
+  ``--batching-speedup-floor`` (default 1.2) times sequential throughput
+  — a same-run same-schedule ratio, robust to absolute runner speed;
+* at the gate rate the batched p99 latency must stay within the request
+  deadline, and no request may have expired or been rejected — the
+  batcher must absorb the overload, not shed it.
+
 Chaos gate (BENCH_chaos.json, via ``--chaos-fresh`` — fresh-run-only,
 absolute floors, no baseline file):
 
@@ -64,7 +81,9 @@ Usage:
         --concurrent-fresh BENCH_concurrent_fresh.json \
         --frontend-baseline BENCH_frontend.json \
         --frontend-fresh BENCH_frontend_fresh.json \
-        --frontend-gmean-floor 1.0 --frontend-workload-floor 0.95
+        --frontend-gmean-floor 1.0 --frontend-workload-floor 0.95 \
+        --batching-fresh BENCH_concurrent_fresh.json \
+        --batching-speedup-floor 1.2
 """
 
 from __future__ import annotations
@@ -89,6 +108,17 @@ def load_concurrent(path: str) -> dict:
     if "pools" not in data:
         raise SystemExit(f"{path}: not a BENCH_concurrent.json (no 'pools')")
     return data
+
+
+def load_open_loop(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "open_loop" not in data:
+        raise SystemExit(
+            f"{path}: no 'open_loop' section (run bench_concurrent with "
+            f"--open-loop-requests)"
+        )
+    return data["open_loop"]
 
 
 def load_chaos(path: str) -> dict:
@@ -315,6 +345,90 @@ def compare_frontend(
     return failures
 
 
+def compare_batching(
+    fresh: dict,
+    *,
+    speedup_floor: float = 1.2,
+) -> list[str]:
+    """Continuous-batching gate (the ``open_loop`` section); fresh-run
+    absolute floors, no baseline file.
+
+    The throughput check is a same-run ratio — batched vs sequential
+    serving of the *same* deterministic arrival schedule on the same
+    runner — so absolute machine speed cancels, like every other ratio
+    gate here.  The accounting invariant (every issued request ends in
+    exactly one of ok/fallbacks/expired/rejected/errors) and the oracle
+    validation are correctness checks CI must never retry away.
+    """
+    failures: list[str] = []
+    rates = fresh.get("rates", {})
+    if not rates:
+        return [f"{CORRECTNESS_TAG} batching: no offered rates measured"]
+    for rk in sorted(rates):
+        r = rates[rk]
+        for mode in ("sequential", "batched"):
+            m = r.get(mode)
+            if m is None:
+                failures.append(
+                    f"{CORRECTNESS_TAG} batching/{rk}: mode {mode!r} "
+                    f"missing"
+                )
+                continue
+            accounted = sum(
+                int(m.get(k, 0))
+                for k in ("ok", "fallbacks", "expired", "rejected",
+                          "errors")
+            )
+            if accounted != int(m.get("issued", -1)):
+                failures.append(
+                    f"{CORRECTNESS_TAG} batching/{rk}/{mode}: request "
+                    f"accounting broken — ok+fallbacks+expired+rejected+"
+                    f"errors = {accounted}, issued = {m.get('issued')}"
+                )
+            if int(m.get("errors", 0)):
+                failures.append(
+                    f"{CORRECTNESS_TAG} batching/{rk}/{mode}: "
+                    f"{m['errors']} request errors"
+                )
+            if not m.get("validated", False):
+                failures.append(
+                    f"{CORRECTNESS_TAG} batching/{rk}/{mode}: post-run "
+                    f"response failed jax.jit-oracle validation"
+                )
+    gate_rate = fresh.get("gate_rate")
+    gate = rates.get(gate_rate)
+    if gate is None:
+        failures.append(
+            f"batching: gate rate {gate_rate!r} not in measured rates "
+            f"{sorted(rates)}"
+        )
+        return failures
+    ratio = float(gate.get("batched_vs_sequential", 0.0))
+    if ratio < speedup_floor:
+        failures.append(
+            f"batching/{gate_rate}: batched throughput only {ratio:.2f}x "
+            f"sequential, below the {speedup_floor:.2f}x floor "
+            f"(batched {gate.get('batched', {}).get('throughput_rps')} "
+            f"vs sequential "
+            f"{gate.get('sequential', {}).get('throughput_rps')} req/s)"
+        )
+    batched = gate.get("batched", {})
+    deadline_ms = float(fresh.get("deadline_ms", 0.0))
+    p99 = float(batched.get("p99_ms", 0.0))
+    if deadline_ms and p99 > deadline_ms:
+        failures.append(
+            f"batching/{gate_rate}: batched p99 {p99:.1f}ms exceeds the "
+            f"{deadline_ms:.0f}ms request deadline"
+        )
+    for k in ("expired", "rejected"):
+        if int(batched.get(k, 0)):
+            failures.append(
+                f"batching/{gate_rate}: {batched[k]} requests {k} — the "
+                f"batcher shed load it should have absorbed"
+            )
+    return failures
+
+
 def compare_chaos(
     fresh: dict,
     *,
@@ -421,6 +535,13 @@ def main(argv: list[str] | None = None) -> int:
         "no baseline)",
     )
     ap.add_argument("--chaos-availability-floor", type=float, default=0.99)
+    ap.add_argument(
+        "--batching-fresh",
+        default=None,
+        help="freshly measured BENCH_concurrent.json with an open_loop "
+        "section (absolute floors, no baseline)",
+    )
+    ap.add_argument("--batching-speedup-floor", type=float, default=1.2)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -440,11 +561,13 @@ def main(argv: list[str] | None = None) -> int:
         and args.concurrent_baseline is None
         and args.frontend_baseline is None
         and args.chaos_fresh is None
+        and args.batching_fresh is None
     ):
         ap.error(
             "nothing to compare: give BASELINE FRESH and/or "
             "--concurrent-baseline/--concurrent-fresh and/or "
-            "--frontend-baseline/--frontend-fresh and/or --chaos-fresh"
+            "--frontend-baseline/--frontend-fresh and/or --chaos-fresh "
+            "and/or --batching-fresh"
         )
 
     failures: list[str] = []
@@ -504,6 +627,29 @@ def main(argv: list[str] | None = None) -> int:
             ffresh,
             gmean_floor=args.frontend_gmean_floor,
             workload_floor=args.frontend_workload_floor,
+        )
+
+    if args.batching_fresh is not None:
+        ol = load_open_loop(args.batching_fresh)
+        print(
+            f"batching: capacity={ol.get('capacity_rps', 0):.1f} req/s "
+            f"max_batch={ol.get('max_batch')} "
+            f"gate_rate={ol.get('gate_rate')}"
+        )
+        for rk in sorted(ol.get("rates", {})):
+            r = ol["rates"][rk]
+            s = r.get("sequential", {})
+            b = r.get("batched", {})
+            print(
+                f"batching/{rk:6s} offered={r.get('offered_rps', 0):9.1f} "
+                f"seq={s.get('throughput_rps', 0):8.1f} "
+                f"bat={b.get('throughput_rps', 0):8.1f} req/s "
+                f"ratio={r.get('batched_vs_sequential', 0):5.2f}x "
+                f"bat_p99={b.get('p99_ms', 0):7.1f}ms "
+                f"occupancy={b.get('bucket_occupancy', 0):.2f}"
+            )
+        failures += compare_batching(
+            ol, speedup_floor=args.batching_speedup_floor
         )
 
     if args.chaos_fresh is not None:

@@ -16,10 +16,16 @@ The report records, side by side:
   the width-2 wave vs the cross-slice stream cost — whichever way the
   assignment lands, the numbers that justify it are in the report.
 
+``--profile-only`` stops after the profile is measured (or loaded from
+the cache): no solver report, no output file.  CI uses it to warm the
+cross-run calibration cache cheaply.
+
 Usage:
     PYTHONPATH=src python scripts/calibrate.py --out CALIBRATION.json \
-        [--force] [--quick] [--kernel 3mm] [--budget 10] [--scale 1]
+        [--force] [--quick] [--profile-only] [--kernel 3mm] \
+        [--budget 10] [--scale 1]
 """
+
 from __future__ import annotations
 
 import argparse
@@ -32,7 +38,7 @@ from repro.codegen import wave_schedule
 from repro.core import SolverOptions, THREE_SLICE, solve
 from repro.core.fusion import fuse
 from repro.core.costmodel import topo_waves
-from repro.core.resources import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
+from repro.core.resources import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.core.solver import TaskChoice, _evaluate, build_graph
 
 
@@ -55,15 +61,19 @@ def plan_section(graph, plan, hw, opts) -> dict:
     wave_lat = [plan.reports[t].latency_s for t in wave_tids]
     # first-order terms: the serialized tail + dispatches splitting removes,
     # vs the bytes it pushes over ICI
-    saving = (sum(wave_lat) - max(wave_lat)) \
-        + hw.dispatch_s * (len(wave_tids) - 1)
+    tail = sum(wave_lat) - max(wave_lat)
+    saving = tail + hw.dispatch_s * (len(wave_tids) - 1)
     stream_bytes = sum(
-        graph.arrays[a].bytes for (u, v, a) in fg.edges if u in wave_tids)
+        graph.arrays[a].bytes for (u, v, a) in fg.edges if u in wave_tids
+    )
     # full-model comparison: re-evaluate the same per-task configs under a
     # forced-split and a forced-colocated assignment of the widest wave
-    choice = {tid: TaskChoice(dataclasses.replace(cfg, slice_id=0),
-                              plan.reports[tid])
-              for tid, cfg in plan.configs.items()}
+    choice = {
+        tid: TaskChoice(
+            dataclasses.replace(cfg, slice_id=0), plan.reports[tid]
+        )
+        for tid, cfg in plan.configs.items()
+    }
     base = {tid: cfg.slice_id for tid, cfg in plan.configs.items()}
     split = dict(base)
     for i, tid in enumerate(wave_tids):
@@ -73,13 +83,14 @@ def plan_section(graph, plan, hw, opts) -> dict:
         coloc[tid] = coloc[wave_tids[0]]
     lat_split, _, _ = _evaluate(fg, choice, split, hw, opts)
     lat_coloc, _, _ = _evaluate(fg, choice, coloc, hw, opts)
+    distinct = len({sched.slice_of[t] for t in wave_tids}) > 1
     return {
-        "slice_assignment": {str(t): c.slice_id
-                             for t, c in sorted(plan.configs.items())},
+        "slice_assignment": {
+            str(t): c.slice_id for t, c in sorted(plan.configs.items())
+        },
         "wave_slice_counts": list(sched.wave_slice_counts),
         "max_wave_width": sched.max_width,
-        "distinct_slices_in_widest_wave":
-            len({sched.slice_of[t] for t in wave_tids}) > 1,
+        "distinct_slices_in_widest_wave": distinct,
         "widest_wave": [int(t) for t in wave_tids],
         "wave_of": {str(t): w for t, w in sorted(wave_of.items())},
         "model_latency_s": plan.latency_s,
@@ -98,10 +109,22 @@ def plan_section(graph, plan, hw, opts) -> dict:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="CALIBRATION.json")
-    ap.add_argument("--force", action="store_true",
-                    help="re-measure even with a cached profile")
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller microbenchmarks (smoke)")
+    ap.add_argument(
+        "--force",
+        action="store_true",
+        help="re-measure even with a cached profile",
+    )
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="smaller microbenchmarks (smoke)",
+    )
+    ap.add_argument(
+        "--profile-only",
+        action="store_true",
+        help="measure/load the profile and stop: no solver report, no "
+        "output file (CI calibration-cache warmer)",
+    )
     ap.add_argument("--kernel", default="3mm")
     ap.add_argument("--scale", type=int, default=1)
     ap.add_argument("--budget", type=float, default=10.0)
@@ -109,6 +132,15 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     profile = calibrate(force=args.force, quick=args.quick)
+    print(
+        f"profile: dispatch={profile.dispatch_s * 1e6:.1f}us "
+        f"ici={profile.ici_bw / 1e9:.2f}GB/s "
+        f"hbm={profile.hbm_bw / 1e9:.2f}GB/s "
+        f"share={[round(s, 2) for s in profile.hbm_share]} "
+        f"gflops={ {k: round(v, 1) for k, v in profile.gflops.items()} }"
+    )
+    if args.profile_only:
+        return 0
     hw = profile.hardware(n_slices=args.n_slices)
     g = build_graph(args.kernel, args.scale)
     opts = SolverOptions(time_budget_s=args.budget)
@@ -123,10 +155,14 @@ def main(argv: list[str] | None = None) -> int:
             "dispatch_s": {"static": 0.0, "measured": profile.dispatch_s},
             "ici_bw": {"static": ICI_BW, "measured": profile.ici_bw},
             "hbm_bw": {"static": HBM_BW, "measured": profile.hbm_bw},
-            "peak_flops": {"static": PEAK_FLOPS_BF16,
-                           "measured": profile.peak_flops},
-            "hbm_share": {"static": "1/k",
-                          "measured": list(profile.hbm_share)},
+            "peak_flops": {
+                "static": PEAK_FLOPS_BF16,
+                "measured": profile.peak_flops,
+            },
+            "hbm_share": {
+                "static": "1/k",
+                "measured": list(profile.hbm_share),
+            },
         },
         "kernel": args.kernel,
         "scale": args.scale,
@@ -139,24 +175,25 @@ def main(argv: list[str] | None = None) -> int:
 
     cal = report["calibrated"]
     eco = cal["split_economics"]
-    print(f"profile: dispatch={profile.dispatch_s * 1e6:.1f}us "
-          f"ici={profile.ici_bw / 1e9:.2f}GB/s "
-          f"hbm={profile.hbm_bw / 1e9:.2f}GB/s "
-          f"share={[round(s, 2) for s in profile.hbm_share]} "
-          f"gflops={ {k: round(v, 1) for k, v in profile.gflops.items()} }")
-    print(f"{args.kernel} static    : slices="
-          f"{report['static']['slice_assignment']} "
-          f"wave_slices={report['static']['wave_slice_counts']}")
-    print(f"{args.kernel} calibrated: slices={cal['slice_assignment']} "
-          f"wave_slices={cal['wave_slice_counts']}")
-    print(f"split economics: saving="
-          f"{eco['dispatch_plus_serialization_saving_s'] * 1e6:.1f}us "
-          f"stream={eco['stream_cost_s'] * 1e6:.1f}us "
-          f"share@width={eco['hbm_share_at_wave_width']:.2f} | "
-          f"model split={eco['forced_split_latency_s'] * 1e6:.1f}us "
-          f"vs coloc={eco['colocated_latency_s'] * 1e6:.1f}us "
-          f"-> split_pays={eco['split_pays']} "
-          f"distinct_slices={cal['distinct_slices_in_widest_wave']}")
+    print(
+        f"{args.kernel} static    : slices="
+        f"{report['static']['slice_assignment']} "
+        f"wave_slices={report['static']['wave_slice_counts']}"
+    )
+    print(
+        f"{args.kernel} calibrated: slices={cal['slice_assignment']} "
+        f"wave_slices={cal['wave_slice_counts']}"
+    )
+    print(
+        f"split economics: saving="
+        f"{eco['dispatch_plus_serialization_saving_s'] * 1e6:.1f}us "
+        f"stream={eco['stream_cost_s'] * 1e6:.1f}us "
+        f"share@width={eco['hbm_share_at_wave_width']:.2f} | "
+        f"model split={eco['forced_split_latency_s'] * 1e6:.1f}us "
+        f"vs coloc={eco['colocated_latency_s'] * 1e6:.1f}us "
+        f"-> split_pays={eco['split_pays']} "
+        f"distinct_slices={cal['distinct_slices_in_widest_wave']}"
+    )
     print(f"-> {args.out}")
     return 0
 

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# ci_gate.sh LABEL MEASURE_CMD GATE_CMD — the one measure/gate/retry
+# policy every benchmark-gated CI job shares.
+#
+# Runs MEASURE_CMD, then GATE_CMD.  Exit codes follow the
+# scripts/bench_compare.py contract:
+#
+#   gate exit 0 -> pass;
+#   gate exit 2 -> correctness failure (the CORRECTNESS_TAG contract:
+#     miscompile, lost update, broken accounting invariant, resilience
+#     breach) -> fail IMMEDIATELY with exit 2 — never re-measured, so an
+#     intermittent correctness bug cannot be retried away;
+#   any other nonzero -> perf/noise failure -> exactly one re-measure +
+#     re-gate (gates run on same-run ratios, robust to runner speed, but
+#     shared runners still jitter; a real regression still fails twice).
+set -euo pipefail
+
+if [ "$#" -ne 3 ]; then
+  echo "usage: $0 LABEL MEASURE_CMD GATE_CMD" >&2
+  exit 64
+fi
+
+label=$1
+measure=$2
+gate=$3
+
+bash -euo pipefail -c "$measure"
+set +e
+bash -euo pipefail -c "$gate"
+status=$?
+set -e
+if [ "$status" -eq 0 ]; then
+  exit 0
+elif [ "$status" -eq 2 ]; then
+  echo "::error::${label}: correctness failure — not retrying"
+  exit 2
+fi
+echo "::warning::${label}: gate failed once; re-measuring"
+bash -euo pipefail -c "$measure"
+bash -euo pipefail -c "$gate"

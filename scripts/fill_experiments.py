@@ -3,6 +3,7 @@ artifacts.  Run after the full sweep:
 
     PYTHONPATH=src python scripts/fill_experiments.py
 """
+
 import json
 import os
 import sys
@@ -28,28 +29,31 @@ def fmt(cells):
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for c in cells:
-        regen = ",".join(r["rung"] for r in c.get("regenerations", [])
-                         ) or "-"
+        regen = ",".join(r["rung"] for r in c.get("regenerations", [])) or "-"
         fits = "" if c.get("fits_hbm", True) else " (!)"
         lines.append(
             f"| {c['arch']} | {c['shape']} | {c['t_compute_s']:.2e} | "
             f"{c['t_memory_s']:.2e} | {c['t_collective_s']:.2e} | "
             f"{c['bound']} | {c['useful_ratio']:.2f} | "
             f"{c['roofline_fraction']:.4f} | "
-            f"{c.get('hbm_gib', 0):.1f}{fits} | {regen} |")
+            f"{c.get('hbm_gib', 0):.1f}{fits} | {regen} |"
+        )
     return "\n".join(lines)
 
 
 def main():
     single = load("single")
     multi = load("multi")
-    table = (f"{MARK}\n\n**Single-pod (16×16 = 256 chips), "
-             f"{len(single)} cells (scan-calibrated):**\n\n" + fmt(single)
-             + "\n\n**Multi-pod (2×16×16 = 512 chips) feasibility "
-             "(uncalibrated — the pod axis shards; roofline terms are "
-             "reported on the single-pod table):** all "
-             f"{len(multi)} cells lower + compile; per-cell HBM/regen in "
-             f"`{DIR}/*_multi.json`.\n")
+    table = (
+        f"{MARK}\n\n**Single-pod (16×16 = 256 chips), "
+        f"{len(single)} cells (scan-calibrated):**\n\n"
+        + fmt(single)
+        + "\n\n**Multi-pod (2×16×16 = 512 chips) feasibility "
+        "(uncalibrated — the pod axis shards; roofline terms are "
+        "reported on the single-pod table):** all "
+        f"{len(multi)} cells lower + compile; per-cell HBM/regen in "
+        f"`{DIR}/*_multi.json`.\n"
+    )
     src = open(MD).read()
     assert MARK in src
     pre = src.split(MARK)[0]

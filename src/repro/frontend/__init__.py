@@ -26,12 +26,14 @@ structure -> same graph -> same program-cache entries.  The serving path is
 """
 from .executable import TracedExecutable, TracedFunction
 from .lowering import Coverage, LoweredJaxpr, SUPPORTED_PRIMITIVES
-from .trace import (TraceCache, clear_trace_cache, trace, trace_cache,
+from .trace import (TraceCache, batched_trace, batched_trace_index,
+                    clear_trace_cache, trace, trace_cache,
                     trace_cache_stats, traced_graph)
 
 __all__ = [
     "Coverage", "LoweredJaxpr", "SUPPORTED_PRIMITIVES",
     "TraceCache", "TracedExecutable", "TracedFunction",
+    "batched_trace", "batched_trace_index",
     "clear_trace_cache", "trace", "trace_cache", "trace_cache_stats",
     "traced_graph",
 ]

@@ -21,6 +21,7 @@ Rank-0 values are carried through the graph as shape-(1,) arrays (the
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable
 
 import jax
@@ -53,6 +54,11 @@ class TracedFunction:
         self._consts = {
             n: jnp.asarray(v)
             for n, v in zip(self.record.const_names, self.const_values)}
+        # bucket -> batched TracedFunction (this instance's consts bound);
+        # the underlying lowering is shared process-wide by
+        # (fingerprint, bucket) through the trace cache
+        self._batched: dict[int, "TracedFunction"] = {}
+        self._batched_lock = threading.Lock()
 
     # -- introspection ----------------------------------------------------
     @property
@@ -114,6 +120,22 @@ class TracedFunction:
                 v = v.astype(dtype)
             flat_out.append(v)
         return jax.tree_util.tree_unflatten(self.out_tree, flat_out)
+
+    # -- batching ---------------------------------------------------------
+    def batched(self, bucket: int) -> "TracedFunction":
+        """This function re-traced with a leading batch dimension of
+        ``bucket`` (see :func:`repro.frontend.trace.batched_trace`).
+        Memoized per instance; the lowering itself is shared process-wide
+        by ``(fingerprint, bucket)``, so the continuous-batching tier pays
+        one re-trace per bucket per structure, not per engine."""
+        with self._batched_lock:
+            btf = self._batched.get(bucket)
+        if btf is not None:
+            return btf
+        from .trace import batched_trace
+        btf = batched_trace(self, bucket)
+        with self._batched_lock:
+            return self._batched.setdefault(bucket, btf)
 
     # -- solving / execution ----------------------------------------------
     def solve(self, hw=None, opts=None):

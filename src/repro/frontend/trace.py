@@ -13,6 +13,13 @@ share program-cache entries downstream.
 graph — :func:`repro.core.solver.build_graph`'s hook for traced sources, so
 ``measure_plan``/benchmarks treat traced workloads exactly like polybench
 kernels.
+
+``batched_trace(tf, bucket)`` is the continuous-batching tier's re-trace:
+the same function mapped over a leading batch dimension of ``bucket``.
+Batched lowerings live in the same trace cache (the vmap of a fixed jaxpr
+structure at a fixed bucket fingerprints deterministically, so replicas
+share one record per ``(fingerprint, bucket)``), and a process-wide index
+records that mapping so the batcher never re-lowers a bucket it has seen.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import threading
 from collections import OrderedDict
 
 import jax
+import jax.numpy as jnp
 
 from .executable import TracedFunction
 from .lowering import (LoweredJaxpr, fingerprint_jaxpr, flatten_jaxpr,
@@ -215,3 +223,52 @@ def trace(fn, *example_args, name: str | None = None) -> TracedFunction:
         fn=fn, record=rec, const_values=tuple(closed.consts),
         in_tree=in_tree, out_tree=out_tree,
         example_flat=tuple(flat), name=name or getattr(fn, "__name__", "fn"))
+
+
+# ---------------------------------------------------------------------------
+# Batch-dimension re-trace (the continuous-batching tier's entry point)
+# ---------------------------------------------------------------------------
+# (base fingerprint, bucket) -> batched fingerprint: the structural index
+# the batcher's trace reuse is keyed by.  The heavy state (graph, plan,
+# compiled program) lives in the ordinary trace/program caches under the
+# batched fingerprint; this map only records which batched records exist,
+# so stats and tests can see bucket lowerings being shared, not re-made.
+_BATCH_INDEX: dict[tuple[str, int], str] = {}
+_BATCH_LOCK = threading.Lock()
+
+
+def batched_trace_index() -> dict[tuple[str, int], str]:
+    """Snapshot of the ``(fingerprint, bucket) -> batched fingerprint``
+    index (introspection for stats and tests)."""
+    with _BATCH_LOCK:
+        return dict(_BATCH_INDEX)
+
+
+def batched_trace(tf: TracedFunction, bucket: int) -> TracedFunction:
+    """Re-trace ``tf.fn`` with a leading batch dimension of ``bucket``.
+
+    Returns a new :class:`TracedFunction` over ``jax.vmap(tf.fn)`` whose
+    example inputs are the original examples broadcast to
+    ``(bucket,) + shape``.  The lowering is resolved through the ordinary
+    process-wide trace cache: structurally identical functions batched at
+    the same bucket share one record (and therefore one solved plan and
+    one compiled program), which is what keeps the program cache small —
+    buckets are a handful of powers of two, not one entry per batch size
+    ever seen.  The ``(fingerprint, bucket)`` pair is also recorded in
+    :func:`batched_trace_index`.
+    """
+    if bucket < 1:
+        raise ValueError(f"bucket must be >= 1, got {bucket}")
+    fn = tf.fn
+
+    def _batched(*args):
+        return jax.vmap(fn)(*args)
+
+    _batched.__name__ = f"{getattr(fn, '__name__', 'fn')}@b{bucket}"
+    flat = [jnp.broadcast_to(jnp.asarray(v), (bucket,) + tuple(
+        jnp.shape(v))) for v in tf.example_flat]
+    args = jax.tree_util.tree_unflatten(tf.in_tree, flat)
+    btf = trace(_batched, *args, name=f"{tf.name}@b{bucket}")
+    with _BATCH_LOCK:
+        _BATCH_INDEX[(tf.fingerprint, bucket)] = btf.fingerprint
+    return btf

@@ -9,9 +9,16 @@ threads through its request path:
 * :class:`ChaosPlan` — deterministic serve-side failure injection (the
   ``FailurePlan`` idea extended to the request path): compile failures,
   kernel-output corruption ("miscompiles"), slow executions pinned to a
-  pool clone, and corrupted persistent artifacts.  Every degradation path
-  in the engine is exercised by tests and ``benchmarks/bench_chaos.py``
-  through this one object, so chaos runs are reproducible bit-for-bit.
+  pool clone, whole-batch failures in the continuous-batching tier, and
+  corrupted persistent artifacts.  Every degradation path in the engine is
+  exercised by tests and ``benchmarks/bench_chaos.py`` through this one
+  object, so chaos runs are reproducible bit-for-bit.
+
+The batching front door (``repro.serve.batching``) sits *above* this
+contract: a coalesced batch that fails — injected via ``batch_fail_at``,
+or poisoned by one request's data — is re-submitted **per request**
+through ``PlanEngine.submit``, so each batchmate passes through its own
+breaker/fallback path and one poisoned request can never fail the others.
 * :class:`CircuitBreaker` — per-entry closed → open → half-open state
   machine.  Consecutive optimized-path failures open the breaker
   (quarantine); after ``reset_s`` one probe request is allowed through
@@ -82,7 +89,11 @@ class ChaosPlan:
     * ``slow_at`` — the i-th execution sleeps ``slow_s`` seconds (a
       degraded kernel / thermal throttle stand-in); ``slow_clone`` instead
       pins the delay to one executable-pool clone index, whatever the
-      request index (the straggler-rotation scenario).
+      request index (the straggler-rotation scenario);
+    * ``batch_fail_at`` — the i-th coalesced batch for an entry raises
+      before the batched program is submitted, forcing the batcher's
+      per-request fallback path (every batchmate re-submitted alone
+      through its own breaker).
 
     ``only`` restricts injection to one entry name so multi-entry engines
     can break a single workload.  ``events`` records every injection as
@@ -93,6 +104,7 @@ class ChaosPlan:
     execute_fail_at: tuple[int, ...] = ()
     corrupt_at: tuple[int, ...] = ()
     slow_at: tuple[int, ...] = ()
+    batch_fail_at: tuple[int, ...] = ()
     slow_s: float = 0.0
     slow_clone: int | None = None
     only: str | None = None
@@ -105,6 +117,7 @@ class ChaosPlan:
             "execute": set(self.execute_fail_at),
             "corrupt": set(self.corrupt_at),
             "slow": set(self.slow_at),
+            "batch": set(self.batch_fail_at),
         }
         self.events: list[tuple[str, str, int]] = []
 
@@ -132,6 +145,14 @@ class ChaosPlan:
         failure."""
         if self._fires("execute", name):
             raise InjectedFailure(f"injected execute failure for {name!r}")
+
+    def on_batch(self, name: str) -> None:
+        """Hook before a coalesced batch is submitted (the continuous-
+        batching tier passes the *batched* entry name, e.g. ``mlp@b4``);
+        raises on an injected batch failure — the batcher must then
+        re-submit every batchmate individually through its own breaker."""
+        if self._fires("batch", name):
+            raise InjectedFailure(f"injected batch failure for {name!r}")
 
     def corrupt_outputs(self, name: str, outputs: dict) -> dict:
         """Hook after execution: on an injected miscompile, return the

@@ -1,9 +1,11 @@
 from ..ft.serve import (DeadlineExceeded, EngineOverloaded, MiscompileError,
                         ServingError)
+from .batching import BatchConfig, Batcher, bucket_sizes
 from .engine import Engine, PlanEngine, ServeConfig, throughput_stats
 
 __all__ = [
     "Engine", "PlanEngine", "ServeConfig", "throughput_stats",
+    "BatchConfig", "Batcher", "bucket_sizes",
     "ServingError", "EngineOverloaded", "DeadlineExceeded",
     "MiscompileError",
 ]

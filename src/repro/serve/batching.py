@@ -1,0 +1,565 @@
+"""Continuous-batching front door for :class:`~repro.serve.PlanEngine`.
+
+The paper's throughput claim is about balancing computation against data
+movement *under concurrency*; the serving analogue is that per-request
+dispatch overhead must be amortized across requests.  ``PlanEngine.submit``
+is one dispatch per request; this module adds the tier above it — the
+JetStream/MaxText pattern of a bounded request queue drained by one
+background batcher thread that **coalesces same-fingerprint submits into
+one batched program execution**:
+
+* Requests for the same ``register_function`` entry are grouped and padded
+  to the next power-of-two **bucket** (``1, 2, 4, ... max_batch``); each
+  bucket is served by a lazily registered batched entry — the original
+  function re-traced once with a leading batch dimension
+  (:meth:`~repro.frontend.TracedFunction.batched`, shared process-wide by
+  ``(fingerprint, bucket)``) — so the trace/program caches hold a handful
+  of bucket entries, never one per batch size seen.
+* A flush happens when a bucket fills, when the oldest request has waited
+  ``max_wait_s``, or when the tightest per-request ``deadline_s`` is about
+  to expire — whichever comes first.  Requests whose deadline has already
+  passed get :class:`~repro.ft.DeadlineExceeded` instead of a stale
+  result.
+* The steady-state batched call is **one engine submit** (itself one
+  compiled-program dispatch): request leaves are stacked by one jitted
+  combiner and results are sliced back by one jitted splitter, so a
+  bucket-``B`` flush costs three dispatches where the sequential path
+  paid ``B``.
+* Admission is queue-depth-aware: past ``max_queue`` pending requests the
+  caller gets the engine's existing
+  :class:`~repro.ft.EngineOverloaded` backpressure signal.
+
+Resilience is inherited, not reimplemented: the batched entry is a normal
+engine registration, so PR 7's whole contract — deadlines, NaN guards,
+canary validation, per-entry circuit breakers, background re-solve,
+plain-jit fallback — applies to the batched execution unchanged.  On top
+of it, a batch that *fails outright* (injected via
+``ChaosPlan.batch_fail_at``, an evicted bucket entry, or an engine
+configured with ``fallback=False``) is re-submitted **per request**
+through ``PlanEngine.submit`` so every batchmate passes through its own
+breaker/fallback path — one poisoned request cannot fail the others.
+
+Accounting contract (the CI gate's invariant): every enqueued request ends
+in exactly one bucket — ``ok + fallbacks + expired + rejected_submits are
+raised uncounted`` — concretely, ``ok + fallbacks == completed`` and
+``completed + expired + errors == enqueued`` once the queue drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..ft.serve import DeadlineExceeded, EngineOverloaded
+
+log = logging.getLogger("repro.serve.batching")
+
+#: Batched entries are registered as ``<name>@b<bucket>``.
+BATCH_SEP = "@b"
+
+
+def bucket_sizes(max_batch: int) -> tuple[int, ...]:
+    """Power-of-two bucket ladder up to ``max_batch`` (``8 -> (1,2,4,8)``;
+    a non-power-of-two ``max_batch`` rounds down to the last power that
+    fits, so the trace/program caches stay at ``log2`` entries)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes = [1]
+    while sizes[-1] * 2 <= max_batch:
+        sizes.append(sizes[-1] * 2)
+    return tuple(sizes)
+
+
+@dataclasses.dataclass
+class BatchConfig:
+    """Knobs of the continuous-batching tier (``ServeConfig.batching``)."""
+
+    #: Largest bucket (requests coalesced per dispatch); the bucket ladder
+    #: is every power of two up to this.
+    max_batch: int = 8
+    #: A partial bucket flushes once its oldest request has waited this
+    #: long (the latency/throughput tradeoff dial).
+    max_wait_s: float = 0.002
+    #: Bounded request queue: submits past this depth are rejected with
+    #: ``EngineOverloaded`` (queue-depth-aware admission).
+    max_queue: int = 1024
+    #: Flush a group early when its tightest per-request deadline is
+    #: within this margin — the batch must still execute in time.
+    deadline_margin_s: float = 0.005
+    #: Latency samples kept for the p50/p99 stats window.
+    stats_window: int = 4096
+
+    def __post_init__(self):
+        self.buckets = bucket_sizes(self.max_batch)
+
+
+class _Request:
+    """One queued submit: args + future + its timing budget."""
+
+    __slots__ = ("name", "args", "flat", "future", "t_enqueue",
+                 "deadline_at")
+
+    def __init__(self, name: str, args: Any, flat, t_enqueue: float,
+                 deadline_at: float | None):
+        self.name = name
+        self.args = args
+        self.flat = flat                # leaves (batchable) or None
+        self.future: Future = Future()
+        self.t_enqueue = t_enqueue
+        self.deadline_at = deadline_at
+
+
+def _make_stacker(bucket: int):
+    """One jitted call stacking ``bucket`` requests' leaves into batched
+    leaves (row-major: ``rows[j * n_leaves + i]`` is request j's leaf i)."""
+
+    def stack(*rows):
+        n_leaves = len(rows) // bucket
+        return tuple(
+            jnp.stack([rows[j * n_leaves + i] for j in range(bucket)])
+            for i in range(n_leaves))
+
+    return jax.jit(stack)
+
+
+def _make_splitter(bucket: int):
+    """One jitted call slicing batched output leaves back into ``bucket``
+    per-request leaf tuples."""
+
+    def split(*leaves):
+        return tuple(tuple(v[j] for v in leaves) for j in range(bucket))
+
+    return jax.jit(split)
+
+
+class Batcher:
+    """Bounded request queue + one background thread coalescing submits.
+
+    Created lazily by :meth:`PlanEngine.batcher` when
+    ``ServeConfig.batching`` is set; :meth:`PlanEngine.submit_async` is
+    the entry point.  One batcher (and one flush thread) per engine.
+    """
+
+    def __init__(self, engine, cfg: BatchConfig):
+        self._engine = engine
+        self.cfg = cfg
+        self.buckets = cfg.buckets
+        self._cond = threading.Condition(threading.Lock())
+        self._pending: dict[str, list[_Request]] = {}
+        self._depth = 0
+        self._stop = False
+        # (name, bucket) -> batched entry name ("" = bucket unavailable:
+        # the function is not vmappable / registration raised — serve
+        # those requests per-request instead of retrying every flush)
+        self._bucket_entries: dict[tuple[str, int], str] = {}
+        self._stackers: dict[int, Any] = {}
+        self._splitters: dict[int, Any] = {}
+        # -- counters (under self._cond's lock) ---------------------------
+        self.enqueued = 0
+        self.completed = 0
+        self.ok = 0                 # served by a batched/solo optimized path
+        self.fallbacks = 0          # served by the engine's plain-jit path
+        self.expired = 0            # deadline passed before execution
+        self.rejected = 0           # queue-depth admission rejections
+        self.errors = 0             # futures resolved with an exception
+        self.batch_failures = 0     # whole-batch failures (chaos/evicted)
+        self.resubmitted = 0        # requests re-run singly after a failure
+        self.flushes: dict[int, int] = {}        # bucket -> flush count
+        self.batched_requests: dict[int, int] = {}  # bucket -> live reqs
+        self._lat = deque(maxlen=cfg.stats_window)
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True,
+            name=f"repro-batcher-{id(engine):x}")
+        self._thread.start()
+
+    # -- submission (caller threads) --------------------------------------
+    def submit(self, name: str, inputs, *,
+               deadline_s: float | None = None) -> Future:
+        """Enqueue one request; returns a future resolving to the same
+        value ``PlanEngine.submit`` would return.  Raises
+        ``EngineOverloaded`` when the bounded queue is full and ``KeyError``
+        / ``TypeError`` / ``ValueError`` for caller contract errors
+        (unknown entry, wrong pytree/shape/dtype) — uncounted, exactly like
+        the synchronous path."""
+        eng = self._engine
+        with eng._lock:
+            if name not in eng._registry:
+                raise KeyError(name)
+            tf = eng._functions.get(name)
+        flat = None
+        args = inputs
+        if tf is not None and not isinstance(inputs, dict):
+            args = tuple(inputs)
+            flat, tree = jax.tree_util.tree_flatten(args)
+            if tree != tf.in_tree:
+                raise TypeError(
+                    f"{name}: argument structure {tree} does not match "
+                    f"the traced structure {tf.in_tree}")
+            flat = [jnp.asarray(v) for v in flat]
+            for i, (v, (shape, dtype)) in enumerate(
+                    zip(flat, tf.record.in_avals)):
+                if tuple(v.shape) != tuple(shape) or v.dtype != dtype:
+                    raise ValueError(
+                        f"{name}: argument {i} is {v.shape}/{v.dtype}, "
+                        f"traced as {shape}/{dtype} — re-trace for new "
+                        "shapes/dtypes")
+        now = time.monotonic()
+        deadline = deadline_s if deadline_s is not None \
+            else eng.sc.deadline_s
+        req = _Request(name, args, flat, now,
+                       None if deadline is None else now + deadline)
+        with self._cond:
+            if self._depth >= self.cfg.max_queue:
+                self.rejected += 1
+                raise EngineOverloaded(
+                    f"{name}: batching queue full "
+                    f"({self._depth}/{self.cfg.max_queue} pending)")
+            if self._t_first is None:
+                self._t_first = now
+            self._pending.setdefault(name, []).append(req)
+            self._depth += 1
+            self.enqueued += 1
+            self._cond.notify()
+        return req.future
+
+    # -- the batcher thread -----------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                due, wake = self._collect_due(time.monotonic())
+                while not due and not self._stop:
+                    timeout = None if wake is None \
+                        else max(0.0, wake - time.monotonic())
+                    self._cond.wait(timeout)
+                    due, wake = self._collect_due(time.monotonic())
+                if self._stop:
+                    # drain everything still queued, then exit
+                    for name, group in self._pending.items():
+                        if group:
+                            due.append((name, group))
+                            self._depth -= len(group)
+                    self._pending.clear()
+            for name, reqs in due:
+                try:
+                    self._flush(name, reqs)
+                except Exception as exc:   # never kill the batcher thread
+                    failed = 0
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(exc)
+                            failed += 1
+                    with self._cond:
+                        self.errors += failed
+                    log.exception("%s: batch flush failed", name)
+            with self._cond:
+                if self._stop and self._depth == 0 \
+                        and not any(self._pending.values()):
+                    return
+
+    def _collect_due(self, now: float):
+        """Under the lock: pop every group that must flush now; return the
+        groups plus the earliest future flush time (None = nothing queued).
+        A group is due when a full bucket is waiting, the oldest request
+        has aged ``max_wait_s``, or the tightest deadline minus the safety
+        margin has arrived."""
+        due: list[tuple[str, list[_Request]]] = []
+        wake: float | None = None
+        max_b = self.buckets[-1]
+        for name, group in self._pending.items():
+            while len(group) >= max_b:
+                due.append((name, group[:max_b]))
+                del group[:max_b]
+                self._depth -= max_b
+            if not group:
+                continue
+            due_at = group[0].t_enqueue + self.cfg.max_wait_s
+            tightest = min((r.deadline_at for r in group
+                            if r.deadline_at is not None), default=None)
+            if tightest is not None:
+                due_at = min(due_at,
+                             tightest - self.cfg.deadline_margin_s)
+            if now >= due_at:
+                due.append((name, group[:]))
+                self._depth -= len(group)
+                group.clear()
+            else:
+                wake = due_at if wake is None else min(wake, due_at)
+        return due, wake
+
+    # -- flush path -------------------------------------------------------
+    def _flush(self, name: str, reqs: list[_Request]) -> None:
+        now = time.monotonic()
+        live: list[_Request] = []
+        for r in reqs:
+            if r.deadline_at is not None and now >= r.deadline_at:
+                r.future.set_exception(DeadlineExceeded(
+                    f"{name}: deadline expired after "
+                    f"{now - r.t_enqueue:.3f}s in the batching queue"))
+                with self._cond:
+                    self.expired += 1
+            else:
+                live.append(r)
+        if not live:
+            return
+        if live[0].flat is None:
+            # graph registrations / dict inputs: nothing to coalesce —
+            # still async, served per request on this thread
+            self._run_singly(name, live, resubmit=False)
+            return
+        n = len(live)
+        bucket = next(b for b in self.buckets if b >= n)
+        bname = self._ensure_bucket(name, bucket)
+        if not bname:
+            self._run_singly(name, live, resubmit=False)
+            return
+        eng = self._engine
+        try:
+            chaos = eng.sc.chaos
+            if chaos is not None:
+                chaos.on_batch(bname)
+            out = self._run_batched(bname, live, bucket)
+        except Exception as exc:
+            # the batch itself failed (injected chaos, evicted bucket
+            # entry, fallback=False engine): every batchmate goes back
+            # through submit() alone so one poisoned request can only
+            # fail itself — the per-request breaker path
+            with self._cond:
+                self.batch_failures += 1
+                if (name, bucket) in self._bucket_entries \
+                        and isinstance(exc, KeyError):
+                    del self._bucket_entries[(name, bucket)]
+            log.warning("%s: batch of %d failed (%s: %s); re-submitting "
+                        "per request", bname, n, type(exc).__name__, exc)
+            self._run_singly(name, live, resubmit=True)
+            return
+        done = time.monotonic()
+        with self._cond:
+            self.flushes[bucket] = self.flushes.get(bucket, 0) + 1
+            self.batched_requests[bucket] = \
+                self.batched_requests.get(bucket, 0) + n
+        for j, r in enumerate(live):
+            r.future.set_result(out[j])
+            self._finish(r, out.path, done)
+
+    def _run_batched(self, bname: str, live: list[_Request], bucket: int):
+        """One engine submit for the whole group: jitted stack -> batched
+        entry -> jitted split.  Returns a list-like of per-request results
+        with the serving path annotated."""
+        eng = self._engine
+        with eng._lock:
+            btf = eng._functions.get(bname)
+        stacker = self._stackers.get(bucket)
+        if stacker is None:
+            stacker = self._stackers.setdefault(
+                bucket, _make_stacker(bucket))
+        splitter = self._splitters.get(bucket)
+        if splitter is None:
+            splitter = self._splitters.setdefault(
+                bucket, _make_splitter(bucket))
+        rows: list[Any] = []
+        for j in range(bucket):
+            # pad the partial bucket by repeating the last request's rows;
+            # padded results are sliced off below
+            rows.extend(live[min(j, len(live) - 1)].flat)
+        stacked = stacker(*rows)
+        in_tree = btf.in_tree if btf is not None \
+            else jax.tree_util.tree_structure(
+                tuple(live[0].args))
+        args = jax.tree_util.tree_unflatten(in_tree, list(stacked))
+        tightest = min((r.deadline_at for r in live
+                        if r.deadline_at is not None), default=None)
+        budget = None if tightest is None \
+            else max(tightest - time.monotonic(), 0.001)
+        info: dict = {}
+        out = eng.submit(bname, args, deadline_s=budget, _info=info)
+        leaves, out_tree = jax.tree_util.tree_flatten(out)
+        per_req = splitter(*leaves)
+
+        class _Split(list):
+            path = info.get("path", "optimized")
+
+        return _Split(
+            jax.tree_util.tree_unflatten(out_tree, list(per_req[j]))
+            for j in range(len(live)))
+
+    def _run_singly(self, name: str, live: list[_Request],
+                    resubmit: bool) -> None:
+        """Serve each request alone through ``PlanEngine.submit`` — the
+        uncoalesced (but still resilient) path."""
+        eng = self._engine
+        if resubmit:
+            with self._cond:
+                self.resubmitted += len(live)
+        for r in live:
+            budget = None if r.deadline_at is None \
+                else max(r.deadline_at - time.monotonic(), 0.001)
+            info: dict = {}
+            try:
+                out = eng.submit(name, r.args, deadline_s=budget,
+                                 _info=info)
+            except Exception as exc:
+                r.future.set_exception(exc)
+                with self._cond:
+                    if isinstance(exc, DeadlineExceeded):
+                        self.expired += 1
+                    else:
+                        self.errors += 1
+            else:
+                r.future.set_result(out)
+                self._finish(r, info.get("path", "optimized"),
+                             time.monotonic())
+
+    def _finish(self, r: _Request, path: str, now: float) -> None:
+        with self._cond:
+            self.completed += 1
+            if path == "fallback":
+                self.fallbacks += 1
+            else:
+                self.ok += 1
+            self._lat.append(now - r.t_enqueue)
+            self._t_last = now
+
+    def _ensure_bucket(self, name: str, bucket: int) -> str:
+        """Lazily register the batched entry for (name, bucket): re-trace
+        with the leading batch dim and register through the ordinary
+        ``register_function`` path, reusing the base entry's solver
+        options/hardware.  Returns the batched entry name, or "" when the
+        bucket is unavailable (cached so failures don't retry per flush).
+        Even a *degraded* registration (trace/solve failed -> plain
+        ``jit(vmap(fn))`` fallback) still amortizes dispatch."""
+        key = (name, bucket)
+        with self._cond:
+            bname = self._bucket_entries.get(key)
+        if bname is not None:
+            return bname
+        eng = self._engine
+        with eng._lock:
+            tf = eng._functions.get(name)
+            meta = eng._reg_meta.get(name) or {}
+        bname = ""
+        if tf is not None:
+            full = f"{name}{BATCH_SEP}{bucket}"
+            try:
+                btf = tf.batched(bucket)
+                args = jax.tree_util.tree_unflatten(
+                    btf.in_tree, list(btf.example_flat))
+                eng.register_function(
+                    full, btf.fn, args,
+                    solver_opts=meta.get("solver_opts"),
+                    hw=meta.get("hw"))
+                bname = full
+            except Exception as exc:
+                log.warning(
+                    "%s: bucket %d unavailable (%s: %s); serving those "
+                    "requests per-request", name, bucket,
+                    type(exc).__name__, exc)
+        with self._cond:
+            return self._bucket_entries.setdefault(key, bname)
+
+    # -- warmup / teardown / stats ----------------------------------------
+    def warmup(self, name: str, buckets=None) -> float:
+        """Pre-register and warm every bucket entry for ``name`` — plus
+        the per-bucket stacker/splitter jits — so the first coalesced
+        flush pays no trace/solve/compile; returns seconds spent (the
+        cold cost)."""
+        t0 = time.monotonic()
+        eng = self._engine
+        with eng._lock:
+            tf = eng._functions.get(name)
+        for b in (buckets or self.buckets):
+            bname = self._ensure_bucket(name, b)
+            if not bname:
+                continue
+            with eng._lock:
+                btf = eng._functions.get(bname)
+            if btf is not None:
+                args = jax.tree_util.tree_unflatten(
+                    btf.in_tree, list(btf.example_flat))
+                eng.warmup(bname, args)
+                out = eng.submit(bname, args)
+            elif tf is not None:        # degraded bucket: warm the jit
+                flat = [jnp.broadcast_to(jnp.asarray(v),
+                                         (b,) + tuple(jnp.shape(v)))
+                        for v in tf.example_flat]
+                args = jax.tree_util.tree_unflatten(tf.in_tree, flat)
+                out = eng.submit(bname, args)
+            else:
+                continue
+            jax.block_until_ready(jax.tree_util.tree_leaves(out))
+            if tf is not None:          # compile the flush-path combiners
+                stacker = self._stackers.setdefault(b, _make_stacker(b))
+                rows: list[Any] = []
+                example = [jnp.asarray(v) for v in tf.example_flat]
+                for _ in range(b):
+                    rows.extend(example)
+                jax.block_until_ready(stacker(*rows))
+                splitter = self._splitters.setdefault(
+                    b, _make_splitter(b))
+                leaves = jax.tree_util.tree_leaves(out)
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(splitter(*leaves)))
+        return time.monotonic() - t0
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        """Stop the batcher thread, draining the queue first — no enqueued
+        future is ever abandoned."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join(timeout)
+
+    def stats(self) -> dict:
+        """The ``stats()["batching"]`` block: queue depth, accounting
+        counters, p50/p99 queue-to-result latency, throughput over the
+        busy window, and per-bucket occupancy (how full flushed buckets
+        actually were)."""
+        with self._cond:
+            lat = sorted(self._lat)
+            buckets = {}
+            for b in self.buckets:
+                f = self.flushes.get(b, 0)
+                r = self.batched_requests.get(b, 0)
+                if f:
+                    buckets[str(b)] = {
+                        "flushes": f, "requests": r,
+                        "occupancy": round(r / (f * b), 4)}
+            span = None
+            if self._t_first is not None and self._t_last is not None:
+                span = max(self._t_last - self._t_first, 1e-9)
+            return {
+                "max_batch": self.buckets[-1],
+                "max_wait_ms": self.cfg.max_wait_s * 1e3,
+                "queue_depth": self._depth,
+                "max_queue": self.cfg.max_queue,
+                "enqueued": self.enqueued,
+                "completed": self.completed,
+                "ok": self.ok,
+                "fallbacks": self.fallbacks,
+                "expired": self.expired,
+                "rejected": self.rejected,
+                "errors": self.errors,
+                "batch_failures": self.batch_failures,
+                "resubmitted": self.resubmitted,
+                "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+                "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+                "throughput_rps": round(self.completed / span, 3)
+                if span else 0.0,
+                "buckets": buckets,
+            }
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1,
+              int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]

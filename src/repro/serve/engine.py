@@ -18,6 +18,12 @@ through the same cache/pool/warmup path — requests for function entries
 pass positional-argument tuples instead of array dicts and get the
 function's own result pytree back.
 
+With ``ServeConfig.batching`` set, ``submit_async`` adds true continuous
+batching *above* ``submit``: a bounded queue drained by one background
+batcher thread coalesces same-entry requests into power-of-two buckets
+served by batched re-traces (``repro.serve.batching``), so the steady-state
+cost of a bucket-``B`` flush is one dispatch instead of ``B``.
+
 Fault tolerance (the ``repro.ft`` contract): the request path never
 *assumes* success.  Admission control bounds the in-flight depth
 (:class:`~repro.ft.EngineOverloaded` backpressure) and enforces per-submit
@@ -49,6 +55,7 @@ from ..ft.serve import (BreakerState, ChaosPlan, CircuitBreaker,
                         DeadlineExceeded, EngineOverloaded, MiscompileError)
 from ..ft.straggler import StragglerConfig, StragglerMonitor
 from ..models import model as M
+from .batching import BatchConfig, Batcher
 
 log = logging.getLogger("repro.serve")
 
@@ -114,6 +121,12 @@ class ServeConfig:
     # slow clone is rotated out of round-robin.  Timing implies a device
     # sync per submit, so this is opt-in.
     straggler: StragglerConfig | None = None
+    # Continuous batching (repro.serve.batching.BatchConfig): when set,
+    # submit_async() routes through a bounded queue drained by one
+    # background batcher thread that coalesces same-entry submits into
+    # power-of-two buckets served by batched re-traces.  None keeps
+    # submit_async() as a thin synchronous wrapper.
+    batching: BatchConfig | None = None
 
 
 class Engine:
@@ -281,6 +294,9 @@ class PlanEngine:
             if self.sc.max_inflight else None)
         self._stop = threading.Event()
         self._clock = time.monotonic
+        # lazy: the batcher thread only starts on first submit_async()
+        self._batcher: Batcher | None = None
+        self._batcher_lock = threading.Lock()
 
     # -- registration -----------------------------------------------------
     def register(self, name: str, graph, plan) -> None:
@@ -379,7 +395,13 @@ class PlanEngine:
         re-solve to finish (an attempt mid-solve cannot be interrupted,
         only not-followed-by-another).  Daemon threads also die with the
         process — this is for tests and orderly replica teardown, so a
-        stopped engine leaves the process-wide program cache alone."""
+        stopped engine leaves the process-wide program cache alone.  The
+        batching tier (if started) drains its queue first: no enqueued
+        future is abandoned."""
+        with self._batcher_lock:
+            batcher = self._batcher
+        if batcher is not None:
+            batcher.shutdown(timeout)
         self._stop.set()
         with self._lock:
             threads = [h.recovery_thread for h in self._health.values()
@@ -458,8 +480,48 @@ class PlanEngine:
         return compiled_program(graph, plan, impl,
                                 pool_size=self.sc.pool_size)
 
+    def batcher(self) -> Batcher:
+        """The engine's continuous-batching front door (lazily started on
+        first use).  Requires ``sc.batching``; raises otherwise."""
+        if self.sc.batching is None:
+            raise RuntimeError(
+                "continuous batching is not configured — set "
+                "ServeConfig.batching = BatchConfig(...)")
+        with self._batcher_lock:
+            if self._batcher is None:
+                self._batcher = Batcher(self, self.sc.batching)
+            return self._batcher
+
+    def submit_async(self, name: str, inputs, *,
+                     deadline_s: float | None = None):
+        """Asynchronous submit: returns a ``concurrent.futures.Future``
+        resolving to the same value :meth:`submit` would return.
+
+        With ``sc.batching`` configured the request enters the bounded
+        batching queue, where same-entry submits are coalesced into one
+        batched program execution (see :mod:`repro.serve.batching`);
+        admission rejections (``EngineOverloaded``) and caller contract
+        errors still raise synchronously, while execution-time failures
+        (including ``DeadlineExceeded``) resolve the future.  Without
+        batching this is a thin synchronous wrapper — the request runs
+        inline and the returned future is already done — so callers can
+        target either engine flavor uniformly.
+        """
+        if self.sc.batching is not None:
+            return self.batcher().submit(name, inputs,
+                                         deadline_s=deadline_s)
+        from concurrent.futures import Future
+        fut: Future = Future()
+        try:
+            fut.set_result(self.submit(name, inputs,
+                                       deadline_s=deadline_s))
+        except Exception as exc:
+            fut.set_exception(exc)
+        return fut
+
     def submit(self, name: str, inputs, *,
-               deadline_s: float | None = None) -> Any:
+               deadline_s: float | None = None, _info: dict | None = None) \
+            -> Any:
         """Execute one request; hits the compiled program for ``name``.
 
         ``inputs`` is a dict of graph arrays for plain registrations.  For
@@ -474,6 +536,10 @@ class PlanEngine:
         :class:`~repro.ft.DeadlineExceeded` when the budget expires before
         admission; any post-admission failure degrades to the plain-jit
         fallback (``sc.fallback``) instead of raising.
+
+        ``_info`` (internal, used by the batching tier's accounting) is
+        annotated with ``{"path": "optimized" | "fallback"}`` for the path
+        that served the request.
         """
         t0 = time.monotonic()
         deadline = deadline_s if deadline_s is not None \
@@ -500,7 +566,8 @@ class PlanEngine:
         try:
             with self._lock:
                 self._inflight_now += 1
-            return self._submit_admitted(name, inputs, t0, deadline)
+            return self._submit_admitted(name, inputs, t0, deadline,
+                                         _info)
         finally:
             with self._lock:
                 self._inflight_now -= 1
@@ -508,7 +575,8 @@ class PlanEngine:
                 sem.release()
 
     def _submit_admitted(self, name: str, inputs, t0: float,
-                         deadline: float | None) -> Any:
+                         deadline: float | None,
+                         _info: dict | None = None) -> Any:
         impl = self._current_impl()
         with self._lock:
             if name not in self._registry:
@@ -540,11 +608,15 @@ class PlanEngine:
                     health.ok += 1
                 health.breaker.record_success()
                 self._note_deadline(t0, deadline, health)
+                if _info is not None:
+                    _info["path"] = "optimized"
                 if env is not None:
                     return tf.unbind(out, env)
                 return out
         out = self._run_fallback(name, tf, env, inputs, health)
         self._note_deadline(t0, deadline, health)
+        if _info is not None:
+            _info["path"] = "fallback"
         return out
 
     def _run_optimized(self, name: str, impl: str, tf, env: dict,
@@ -868,9 +940,13 @@ class PlanEngine:
                     "n_segments": p.n_segments,
                     "disabled_clones": list(p.disabled_clones),
                 }
+        with self._batcher_lock:
+            batcher = self._batcher
+        batching = batcher.stats() if batcher is not None else None
         s = cache_stats(detail=True)
         hit_rate = s["hits"] / max(1, s["hits"] + s["misses"])
         return {"requests": requests,
+                "batching": batching,
                 "registered": registered,
                 "functions": functions,
                 "per_name": per_name,

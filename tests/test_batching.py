@@ -1,0 +1,246 @@
+"""Continuous-batching tier (``repro.serve.batching``): coalescing,
+accounting, deadlines, backpressure, chaos resubmit, trace sharing.
+
+The contract pinned down here: every request entering the bounded queue
+ends in exactly one terminal counter (``ok``/``fallbacks``/``expired``/
+``rejected``/``errors``), batched answers are bit-for-bit the answers the
+``jax.jit`` oracle gives, and a whole-batch failure degrades to
+per-request resubmission — never to dropped futures.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolverOptions
+from repro.frontend import batched_trace_index
+from repro.ft import ChaosPlan, DeadlineExceeded, EngineOverloaded
+from repro.serve import (BatchConfig, PlanEngine, ServeConfig,
+                         bucket_sizes)
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+from benchmarks.bench_concurrent import arrival_schedule  # noqa: E402
+
+_RNG = np.random.default_rng(0)
+_WA = jnp.asarray(_RNG.standard_normal((16, 16)).astype(np.float32) * 0.1)
+_WB = jnp.asarray(_RNG.standard_normal((16, 16)).astype(np.float32) * 0.1)
+_X = jnp.asarray(_RNG.standard_normal((8, 16)).astype(np.float32))
+
+
+def _fanout(x):
+    # x is multi-consumer -> a segment boundary -> a multi-segment program
+    a = x @ _WA
+    b = x @ _WB
+    return a * b + x
+
+
+def _engine(sc: ServeConfig | None = None, **batch_kw) -> PlanEngine:
+    if sc is None:
+        sc = ServeConfig(batching=BatchConfig(**batch_kw))
+    eng = PlanEngine(sc=sc)
+    tf = eng.register_function(
+        "f", _fanout, (_X,),
+        solver_opts=SolverOptions(time_budget_s=0.5))
+    assert tf is not None, "trace/solve must succeed (not degraded mode)"
+    return eng
+
+
+def _inputs(n: int):
+    rng = np.random.default_rng(1)
+    return [jnp.asarray(rng.standard_normal(_X.shape).astype(np.float32))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Bucket ladder
+# ---------------------------------------------------------------------------
+def test_bucket_sizes_ladder():
+    assert bucket_sizes(1) == (1,)
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    assert bucket_sizes(7) == (1, 2, 4)    # rounds down to powers of two
+    with pytest.raises(ValueError):
+        bucket_sizes(0)
+    assert BatchConfig(max_batch=16).buckets == (1, 2, 4, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop arrival generator (the benchmark's determinism contract)
+# ---------------------------------------------------------------------------
+def test_arrival_schedule_is_deterministic():
+    a = arrival_schedule(100, 50.0, seed=7)
+    b = arrival_schedule(100, 50.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == 100
+    assert np.all(np.diff(a) >= 0)              # cumulative offsets
+    assert np.all(a > 0)
+    c = arrival_schedule(100, 50.0, seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_arrival_schedule_mean_rate_and_validation():
+    sched = arrival_schedule(4000, 100.0, seed=0)
+    # mean inter-arrival of Exp(rate) is 1/rate; 4000 samples pin it well
+    assert sched[-1] / 4000 == pytest.approx(1 / 100.0, rel=0.1)
+    assert len(arrival_schedule(0, 10.0)) == 0
+    with pytest.raises(ValueError):
+        arrival_schedule(-1, 10.0)
+    with pytest.raises(ValueError):
+        arrival_schedule(10, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: batched answers == oracle answers, accounting closes
+# ---------------------------------------------------------------------------
+def test_batched_results_match_oracle_and_accounting_closes():
+    eng = _engine(max_batch=4, max_wait_s=0.001)
+    try:
+        oracle = jax.jit(_fanout)
+        xs = _inputs(20)
+        futs = [eng.submit_async("f", (x,)) for x in xs]
+        outs = [f.result(timeout=120) for f in futs]
+        for x, out in zip(xs, outs):
+            np.testing.assert_allclose(out, oracle(x),
+                                       rtol=2e-4, atol=1e-5)
+        st = eng.stats()["batching"]
+        assert st["enqueued"] == 20
+        assert st["completed"] == 20
+        assert st["ok"] + st["fallbacks"] == st["completed"]
+        assert (st["completed"] + st["expired"] + st["errors"]
+                == st["enqueued"])
+        assert st["rejected"] == 0 and st["errors"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_coalescing_reduces_engine_dispatches():
+    eng = _engine(max_batch=8, max_wait_s=0.2)
+    try:
+        eng.batcher().warmup("f")
+        base = eng.stats()["requests"]
+        futs = [eng.submit_async("f", (_X,)) for _ in range(32)]
+        for f in futs:
+            f.result(timeout=120)
+        used = eng.stats()["requests"] - base
+        # each flush is ONE engine submit; coalescing must beat 1:1
+        assert used < 32
+        st = eng.stats()["batching"]
+        flushes = sum(b["flushes"] for b in st["buckets"].values())
+        requests = sum(b["requests"] for b in st["buckets"].values())
+        assert requests == 32 and flushes < 32
+        assert any(int(k) > 1 for k in st["buckets"])  # real coalescing
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Failure paths
+# ---------------------------------------------------------------------------
+def test_batch_failure_resubmits_every_request():
+    cp = ChaosPlan(batch_fail_at=(0,))
+    sc = ServeConfig(chaos=cp,
+                     batching=BatchConfig(max_batch=4, max_wait_s=0.001))
+    eng = _engine(sc=sc)
+    try:
+        oracle = jax.jit(_fanout)
+        xs = _inputs(8)
+        futs = [eng.submit_async("f", (x,)) for x in xs]
+        outs = [f.result(timeout=120) for f in futs]
+        for x, out in zip(xs, outs):       # no request lost to the fault
+            np.testing.assert_allclose(out, oracle(x),
+                                       rtol=2e-4, atol=1e-5)
+        st = eng.stats()["batching"]
+        assert st["batch_failures"] >= 1
+        assert st["resubmitted"] >= 1
+        assert st["completed"] == 8 and st["errors"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_expired_deadline_rejects_with_deadline_exceeded():
+    eng = _engine(max_batch=2, max_wait_s=0.001)
+    try:
+        fut = eng.submit_async("f", (_X,), deadline_s=0.0)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=60)
+        st = eng.stats()["batching"]
+        assert st["expired"] >= 1
+        assert (st["completed"] + st["expired"] + st["errors"]
+                == st["enqueued"])
+    finally:
+        eng.shutdown()
+
+
+def test_full_queue_rejects_and_shutdown_drains():
+    sc = ServeConfig(batching=BatchConfig(
+        max_batch=8, max_wait_s=5.0, max_queue=2))
+    eng = _engine(sc=sc)
+    b = eng.batcher()
+    # two requests sit in a partial bucket (max_wait far away); the third
+    # must be rejected at admission, not silently queued
+    f1 = b.submit("f", (_X,))
+    f2 = b.submit("f", (_X,))
+    with pytest.raises(EngineOverloaded):
+        b.submit("f", (_X,))
+    assert eng.stats()["batching"]["rejected"] == 1
+    eng.shutdown()                      # drains the queue before exiting
+    oracle = jax.jit(_fanout)
+    np.testing.assert_allclose(f1.result(timeout=5), oracle(_X),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(f2.result(timeout=5), oracle(_X),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_unknown_entry_rejected_at_submit():
+    eng = _engine(max_batch=2)
+    try:
+        with pytest.raises(KeyError):
+            eng.batcher().submit("nope", (_X,))
+        with pytest.raises(ValueError):
+            # wrong shape: caller contract error, raised synchronously
+            eng.batcher().submit("f", (jnp.zeros((3, 16)),))
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Trace/program sharing and the non-batched engine flavor
+# ---------------------------------------------------------------------------
+def test_bucket_traces_are_shared_and_memoized():
+    eng = _engine(max_batch=4)
+    try:
+        tf = eng._functions["f"]
+        assert tf.batched(2) is tf.batched(2)     # per-instance memo
+        eng.batcher().warmup("f", buckets=(2,))
+        assert "f@b2" in eng.stats()["functions"]
+        idx = batched_trace_index()
+        assert any(bucket == 2 for (_, bucket) in idx), (
+            "batched re-trace must be indexed by (fingerprint, bucket) "
+            "for cross-engine reuse")
+    finally:
+        eng.shutdown()
+
+
+def test_submit_async_without_batching_is_inline():
+    eng = PlanEngine(sc=ServeConfig())
+    try:
+        tf = eng.register_function(
+            "f", _fanout, (_X,),
+            solver_opts=SolverOptions(time_budget_s=0.5))
+        assert tf is not None
+        with pytest.raises(RuntimeError):
+            eng.batcher()               # batching not configured
+        fut = eng.submit_async("f", (_X,))
+        assert fut.done()               # inline: already resolved
+        np.testing.assert_allclose(fut.result(), jax.jit(_fanout)(_X),
+                                   rtol=2e-4, atol=1e-5)
+        assert eng.stats()["batching"] is None
+    finally:
+        eng.shutdown()

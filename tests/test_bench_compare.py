@@ -369,3 +369,133 @@ def test_committed_chaos_baseline_is_gateable():
         pytest.skip("no committed chaos baseline")
     data = json.loads(path.read_text())
     assert bench_compare.compare_chaos(data) == []
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching gate: open-loop throughput ratio + accounting
+# ---------------------------------------------------------------------------
+def _mode(rps, *, issued=200, fallbacks=0, expired=0, rejected=0,
+          errors=0, ok=None, validated=True, p99=50.0) -> dict:
+    if ok is None:
+        ok = issued - fallbacks - expired - rejected - errors
+    return {"throughput_rps": rps, "issued": issued, "ok": ok,
+            "fallbacks": fallbacks, "expired": expired,
+            "rejected": rejected, "errors": errors,
+            "validated": validated, "p99_ms": p99}
+
+
+def _rate(seq_rps, bat_rps, **batched_kw) -> dict:
+    return {"offered_rps": 1000.0,
+            "sequential": _mode(seq_rps),
+            "batched": _mode(bat_rps, **batched_kw),
+            "batched_vs_sequential": bat_rps / seq_rps}
+
+
+def _obench(rates=None, gate_rate="2.0x", deadline_ms=2000.0) -> dict:
+    if rates is None:
+        rates = {"0.8x": _rate(1000.0, 1100.0),
+                 "2.0x": _rate(1000.0, 2000.0)}
+    return {"rates": rates, "gate_rate": gate_rate,
+            "deadline_ms": deadline_ms, "capacity_rps": 1250.0}
+
+
+def test_batching_gate_passes_on_healthy_run():
+    assert bench_compare.compare_batching(_obench()) == []
+
+
+def test_batching_gate_fails_speedup_below_floor_retryably():
+    fresh = _obench({"2.0x": _rate(1000.0, 1100.0)})   # 1.1x < 1.2x
+    failures = bench_compare.compare_batching(fresh)
+    assert any("below the 1.20x floor" in f for f in failures)
+    # throughput is runner noise territory: retryable, NOT tagged
+    assert not any(f.startswith(bench_compare.CORRECTNESS_TAG)
+                   for f in failures)
+    assert bench_compare.compare_batching(fresh, speedup_floor=1.0) == []
+
+
+def test_batching_gate_accounting_violation_is_correctness():
+    bad = _obench({"2.0x": _rate(1000.0, 2000.0, ok=150)})  # 50 vanished
+    failures = bench_compare.compare_batching(bad)
+    assert any("request accounting broken" in f for f in failures)
+    assert all(f.startswith(bench_compare.CORRECTNESS_TAG)
+               for f in failures)
+
+
+def test_batching_gate_errors_and_validation_are_correctness():
+    failures = bench_compare.compare_batching(
+        _obench({"2.0x": _rate(1000.0, 2000.0, errors=2, ok=198)}))
+    assert any("request errors" in f for f in failures)
+    assert all(f.startswith(bench_compare.CORRECTNESS_TAG)
+               for f in failures)
+    failures = bench_compare.compare_batching(
+        _obench({"2.0x": _rate(1000.0, 2000.0, validated=False)}))
+    assert any("oracle validation" in f for f in failures)
+    assert all(f.startswith(bench_compare.CORRECTNESS_TAG)
+               for f in failures)
+
+
+def test_batching_gate_missing_mode_or_rates_is_correctness():
+    rate = {"offered_rps": 1000.0, "sequential": _mode(1000.0),
+            "batched_vs_sequential": 0.0}
+    failures = bench_compare.compare_batching(_obench({"2.0x": rate}))
+    assert any("mode 'batched' missing" in f
+               and f.startswith(bench_compare.CORRECTNESS_TAG)
+               for f in failures)
+    failures = bench_compare.compare_batching({"rates": {}})
+    assert failures and all(
+        f.startswith(bench_compare.CORRECTNESS_TAG) for f in failures)
+
+
+def test_batching_gate_missing_gate_rate_fails():
+    fresh = _obench({"0.8x": _rate(1000.0, 1100.0)})
+    failures = bench_compare.compare_batching(fresh)
+    assert any("gate rate '2.0x' not in measured rates" in f
+               for f in failures)
+
+
+def test_batching_gate_deadline_and_shed_load_at_gate_rate():
+    failures = bench_compare.compare_batching(
+        _obench({"2.0x": _rate(1000.0, 2000.0, p99=2500.0)}))
+    assert any("exceeds the 2000ms request deadline" in f
+               for f in failures)
+    failures = bench_compare.compare_batching(
+        _obench({"2.0x": _rate(1000.0, 2000.0, expired=3, ok=197)}))
+    assert any("3 requests expired" in f for f in failures)
+    failures = bench_compare.compare_batching(
+        _obench({"2.0x": _rate(1000.0, 2000.0, rejected=5, ok=195)}))
+    assert any("5 requests rejected" in f for f in failures)
+
+
+def test_batching_cli_exit_codes(tmp_path):
+    path = tmp_path / "bat.json"
+    argv = ["--batching-fresh", str(path)]
+
+    def wrap(ol):
+        return {"benchmark": "concurrent_serving", "pools": {},
+                "open_loop": ol}
+
+    path.write_text(json.dumps(wrap(_obench())))
+    assert bench_compare.main(argv) == 0
+    path.write_text(json.dumps(
+        wrap(_obench({"2.0x": _rate(1000.0, 1100.0)}))))
+    assert bench_compare.main(argv) == 1          # perf: retryable
+    assert bench_compare.main(
+        argv + ["--batching-speedup-floor", "1.05"]) == 0
+    path.write_text(json.dumps(
+        wrap(_obench({"2.0x": _rate(1000.0, 2000.0, ok=150)}))))
+    assert bench_compare.main(argv) == 2          # accounting: no retry
+    path.write_text(json.dumps({"pools": {}}))    # no open_loop section
+    with pytest.raises(SystemExit):
+        bench_compare.main(argv)
+
+
+def test_committed_batching_baseline_is_gateable():
+    """The committed BENCH_concurrent.json's open_loop section must pass
+    its own gate: batched >= 1.2x sequential at the gate rate, accounting
+    closed, every mode oracle-validated."""
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_concurrent.json"
+    data = json.loads(path.read_text()) if path.exists() else {}
+    if "open_loop" not in data:
+        pytest.skip("no committed open-loop baseline")
+    assert bench_compare.compare_batching(data["open_loop"]) == []
