@@ -29,11 +29,18 @@ def hw_for(mode: str):
 
 
 def solve_kernel(name: str, mode: str, *, scale: int = polybench.TPU_SCALE,
-                 budget: float = 12.0, hw=None, seed: int = 0):
+                 budget: float = 12.0, hw=None, seed: int = 0,
+                 workers: int | None = 1, store=None, refresh: bool = False):
+    """One benchmark solve.  Defaults pin the seed behavior every table
+    depends on: serial sweep (``workers=1``) and no plan store (so a
+    configured ``REPRO_PLAN_STORE_DIR`` cannot short-circuit a table's
+    measurement); ``table10_solver_time --bench-out`` opts into both."""
     g = build_graph(name, scale)
-    opts = SolverOptions(mode=mode, time_budget_s=budget, seed=seed)
+    opts = SolverOptions(mode=mode, time_budget_s=budget, seed=seed,
+                         workers=workers)
     t0 = time.monotonic()
-    plan = solve(g, hw if hw is not None else hw_for(mode), opts)
+    plan = solve(g, hw if hw is not None else hw_for(mode), opts,
+                 store=store, refresh=refresh)
     plan.solver_seconds = time.monotonic() - t0
     return plan
 

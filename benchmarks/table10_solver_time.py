@@ -6,13 +6,35 @@ search is a SUM of per-task spaces; the shared-buffer formulation couples
 them into a PRODUCT that times out on 3mm (4 h).  We report wall time,
 the raw product-space size, and whether exhaustive coverage was possible
 within the budget (the timeout condition).
+
+``--bench-out`` additionally measures the cold-solve path this repo's
+serving tier actually pays — and the two mechanisms that take it off the
+request path (BENCH_solver.json, gated by ``scripts/bench_compare.py
+--solver-fresh``):
+
+* serial vs parallel sweep (``SolverOptions.workers``) on the largest
+  benchmarked graph, same seed — the parallel plan must be at least as
+  good and arrive materially faster (process pool + cost-model pruning);
+* a warm plan-store hit (``repro.store``) — the same solve answered from
+  disk with **zero** solver evaluations, in milliseconds;
+* engine ``register_function`` cold vs warm against the same store —
+  the replica-restart scenario.
 """
 from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
 
 from .common import Table, solve_kernel
 
 KERNELS = ["2mm", "3mm", "atax", "bicg", "gemm", "gesummv", "mvt",
            "symm", "syr2k", "syrk", "trmm"]
+
+#: The largest benchmarked graph (most tasks x biggest per-task space):
+#: the kernel the parallel-sweep gate measures.
+BENCH_KERNEL = "3mm"
 
 
 def run(budget: float = 20.0) -> Table:
@@ -28,5 +50,132 @@ def run(budget: float = 20.0) -> Table:
     return t
 
 
+def _plan_summary(plan) -> dict:
+    from repro.core.fingerprint import plan_fingerprint
+    return {
+        "solver_s": plan.solver_seconds,
+        "latency_s": plan.latency_s,
+        "n_evaluated": plan.n_evaluated,
+        "timed_out": plan.timed_out,
+        "plan_fp": plan_fingerprint(plan),
+    }
+
+
+def bench(budget: float = 60.0, workers: int | None = None,
+          kernel: str = BENCH_KERNEL) -> dict:
+    """The gated benchmark.  Solve order matters: the serial/parallel/warm
+    solves run *before* anything imports jax, so the worker pool can use
+    fork (cheap workers) exactly as a solver-only replica would."""
+    from repro.store import PlanStore
+
+    if workers is None:
+        # at least 2 even on a 1-core host: chunked workers still apply
+        # the shared-bound pruning the serial sweep cannot
+        workers = max(2, (os.cpu_count() or 2) - 1)
+    store_dir = tempfile.mkdtemp(prefix="repro-plan-store-bench-")
+    st = PlanStore(store_dir)
+
+    serial = solve_kernel(kernel, "prometheus", budget=budget, workers=1,
+                          store=None)
+    # refresh=True: measure the full parallel solve (no store read) while
+    # still seeding the store for the warm measurement below
+    parallel = solve_kernel(kernel, "prometheus", budget=budget,
+                            workers=workers, store=st, refresh=True)
+    t0 = time.monotonic()
+    warm = solve_kernel(kernel, "prometheus", budget=budget,
+                        workers=workers, store=st)
+    warm_s = time.monotonic() - t0
+
+    engine = _bench_engine(store_dir)
+
+    import jax
+    result = {
+        "benchmark": "solver_parallel_store",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "kernel": kernel,
+        "budget_s": budget,
+        "workers": workers,
+        "serial": _plan_summary(serial),
+        "parallel": _plan_summary(parallel),
+        "speedup": round(serial.solver_seconds
+                         / max(parallel.solver_seconds, 1e-9), 3),
+        "warm": {**_plan_summary(warm), "solver_s": warm_s,
+                 "store_hit": warm.store_hit},
+        "engine": engine,
+        "store": st.stats(),
+    }
+    return result
+
+
+def _bench_engine(store_dir: str) -> dict:
+    """Replica-restart scenario: ``register_function`` cold (full trace +
+    solve, seeding the store) vs warm (same store, trace-record plan
+    cache cleared to simulate a fresh process)."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.serve.engine import PlanEngine, ServeConfig
+    from repro.store import set_default_dir
+
+    def mlp(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    rng = np.random.default_rng(0)
+    args = (jnp.asarray(rng.normal(size=(8, 64)), jnp.float32),
+            jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+            jnp.asarray(rng.normal(size=(64, 32)), jnp.float32))
+    try:
+        eng = PlanEngine(sc=ServeConfig(plan_store_dir=store_dir))
+        t0 = time.monotonic()
+        tf = eng.register_function("mlp", mlp, args)
+        cold_s = time.monotonic() - t0
+        _, cold_plan = eng._registry["mlp"]
+        eng.shutdown()
+
+        tf.record.plan_cache.clear()        # fresh-replica stand-in
+        eng2 = PlanEngine(sc=ServeConfig(plan_store_dir=store_dir))
+        t0 = time.monotonic()
+        eng2.register_function("mlp", mlp, args)
+        warm_s = time.monotonic() - t0
+        _, warm_plan = eng2._registry["mlp"]
+        eng2.shutdown()
+    finally:
+        set_default_dir(None)
+    return {
+        "cold_register_s": cold_s,
+        "cold_evals": cold_plan.n_evaluated,
+        "warm_register_s": warm_s,
+        "warm_evals": warm_plan.n_evaluated,
+        "warm_store_hit": bool(warm_plan.store_hit),
+    }
+
+
+def emit(path: str, **kw) -> dict:
+    result = bench(**kw)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return result
+
+
 if __name__ == "__main__":
-    run().show()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="solver budget per solve (default: 20 for the "
+                         "table, 60 for --bench-out)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="parallel sweep width for --bench-out "
+                         "(default: max(2, cpu_count - 1))")
+    ap.add_argument("--bench-out", default=None,
+                    help="emit the parallel-sweep + plan-store benchmark "
+                         "(BENCH_solver.json) instead of the table")
+    args = ap.parse_args()
+    if args.bench_out:
+        r = emit(args.bench_out, budget=args.budget or 60.0,
+                 workers=args.workers)
+        print(json.dumps(r, indent=2))
+    else:
+        run(budget=args.budget or 20.0).show()

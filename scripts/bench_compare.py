@@ -73,6 +73,23 @@ absolute floors, no baseline file):
   breaker must have closed again after background re-solve, and the
   corrupted-artifact round trip (quarantine + regenerate) must survive.
 
+Solver gate (BENCH_solver.json, via ``--solver-fresh`` — fresh-run-only,
+absolute floors, no baseline):
+
+* the parallel sweep must beat the serial sweep by at least
+  ``--solver-speedup-floor`` (default 1.43x, i.e. parallel wall time at
+  most 0.7x serial) on the largest benchmarked graph — a same-run
+  same-seed ratio, robust to absolute runner speed;
+* the parallel plan's modeled latency may not be worse than the serial
+  plan's on the same seed — the pruning bound is provably conservative,
+  so a worse plan means the sweep lost a winning candidate
+  (correctness-tagged, never retried);
+* a warm plan-store solve must be a hit with **zero** solver evaluations
+  and the same plan fingerprint (correctness-tagged), completing within
+  ``--solver-warm-ms`` (default 50 ms);
+* a warm engine ``register_function`` against the same store must also
+  hit with zero evaluations (correctness-tagged).
+
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
         --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
@@ -127,6 +144,17 @@ def load_chaos(path: str) -> dict:
     if "scenarios" not in data:
         raise SystemExit(
             f"{path}: not a BENCH_chaos.json (no 'scenarios')"
+        )
+    return data
+
+
+def load_solver(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("benchmark") != "solver_parallel_store":
+        raise SystemExit(
+            f"{path}: not a BENCH_solver.json "
+            f"(benchmark={data.get('benchmark')!r})"
         )
     return data
 
@@ -429,6 +457,89 @@ def compare_batching(
     return failures
 
 
+def compare_solver(
+    fresh: dict,
+    *,
+    speedup_floor: float = 1.43,
+    warm_ms: float = 50.0,
+) -> list[str]:
+    """Parallel-sweep + plan-store gate (BENCH_solver.json); fresh-run
+    absolute floors, no baseline file.
+
+    The speedup check is a same-run same-seed ratio (serial vs parallel
+    wall time of the *same* solve on the same runner), so absolute
+    machine speed cancels.  The plan-quality and store-hit checks are
+    deterministic properties of the code — the pruning bound is
+    conservative by construction and a store hit replays a serialized
+    plan — so their failures are correctness-tagged and never retried.
+    """
+    failures: list[str] = []
+    serial = fresh.get("serial", {})
+    parallel = fresh.get("parallel", {})
+    warm = fresh.get("warm", {})
+    engine = fresh.get("engine", {})
+
+    if serial.get("timed_out"):
+        failures.append(
+            "solver: the serial solve hit its time budget — the speedup "
+            "ratio is meaningless; raise --budget"
+        )
+    speedup = float(fresh.get("speedup", 0.0))
+    if speedup < speedup_floor:
+        failures.append(
+            f"solver: parallel sweep only {speedup:.2f}x faster than "
+            f"serial, below the {speedup_floor:.2f}x floor "
+            f"(serial {serial.get('solver_s', 0):.2f}s vs parallel "
+            f"{parallel.get('solver_s', 0):.2f}s, "
+            f"workers={fresh.get('workers')})"
+        )
+    ser_lat = float(serial.get("latency_s", 0.0))
+    par_lat = float(parallel.get("latency_s", 0.0))
+    if ser_lat > 0 and par_lat > ser_lat * (1.0 + 1e-9):
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: parallel plan latency "
+            f"{par_lat:.3e}s is WORSE than serial {ser_lat:.3e}s on the "
+            f"same seed — the pruned sweep lost a winning candidate"
+        )
+
+    if not warm.get("store_hit", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: warm solve was not a plan-store "
+            f"hit"
+        )
+    if int(warm.get("n_evaluated", -1)) != 0:
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: warm store hit ran "
+            f"{warm.get('n_evaluated')} sweep evaluations (must be 0)"
+        )
+    if warm.get("plan_fp") != parallel.get("plan_fp"):
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: warm plan fingerprint "
+            f"{warm.get('plan_fp')!r} != stored plan "
+            f"{parallel.get('plan_fp')!r} — the store round trip changed "
+            f"the plan"
+        )
+    warm_s = float(warm.get("solver_s", float("inf")))
+    if warm_s * 1e3 > warm_ms:
+        failures.append(
+            f"solver: warm store hit took {warm_s * 1e3:.1f}ms, above "
+            f"the {warm_ms:.0f}ms budget"
+        )
+
+    if not engine.get("warm_store_hit", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: warm engine register_function "
+            f"was not a plan-store hit"
+        )
+    if int(engine.get("warm_evals", -1)) != 0:
+        failures.append(
+            f"{CORRECTNESS_TAG} solver: warm engine register_function "
+            f"ran {engine.get('warm_evals')} sweep evaluations "
+            f"(must be 0)"
+        )
+    return failures
+
+
 def compare_chaos(
     fresh: dict,
     *,
@@ -542,6 +653,14 @@ def main(argv: list[str] | None = None) -> int:
         "section (absolute floors, no baseline)",
     )
     ap.add_argument("--batching-speedup-floor", type=float, default=1.2)
+    ap.add_argument(
+        "--solver-fresh",
+        default=None,
+        help="freshly measured BENCH_solver.json (absolute floors, "
+        "no baseline)",
+    )
+    ap.add_argument("--solver-speedup-floor", type=float, default=1.43)
+    ap.add_argument("--solver-warm-ms", type=float, default=50.0)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -562,12 +681,13 @@ def main(argv: list[str] | None = None) -> int:
         and args.frontend_baseline is None
         and args.chaos_fresh is None
         and args.batching_fresh is None
+        and args.solver_fresh is None
     ):
         ap.error(
             "nothing to compare: give BASELINE FRESH and/or "
             "--concurrent-baseline/--concurrent-fresh and/or "
             "--frontend-baseline/--frontend-fresh and/or --chaos-fresh "
-            "and/or --batching-fresh"
+            "and/or --batching-fresh and/or --solver-fresh"
         )
 
     failures: list[str] = []
@@ -650,6 +770,37 @@ def main(argv: list[str] | None = None) -> int:
             )
         failures += compare_batching(
             ol, speedup_floor=args.batching_speedup_floor
+        )
+
+    if args.solver_fresh is not None:
+        sv = load_solver(args.solver_fresh)
+        serial = sv.get("serial", {})
+        parallel = sv.get("parallel", {})
+        warm = sv.get("warm", {})
+        engine = sv.get("engine", {})
+        print(
+            f"solver: kernel={sv.get('kernel')} "
+            f"workers={sv.get('workers')} "
+            f"serial={serial.get('solver_s', 0):.2f}s "
+            f"parallel={parallel.get('solver_s', 0):.2f}s "
+            f"speedup={sv.get('speedup', 0):.2f}x "
+            f"evals={serial.get('n_evaluated')}->"
+            f"{parallel.get('n_evaluated')}"
+        )
+        print(
+            f"solver/warm: {warm.get('solver_s', 0) * 1e3:.1f}ms "
+            f"hit={warm.get('store_hit')} evals={warm.get('n_evaluated')} "
+            f"fp_match={warm.get('plan_fp') == parallel.get('plan_fp')}"
+        )
+        print(
+            f"solver/engine: cold={engine.get('cold_register_s', 0):.2f}s "
+            f"warm={engine.get('warm_register_s', 0) * 1e3:.1f}ms "
+            f"warm_evals={engine.get('warm_evals')}"
+        )
+        failures += compare_solver(
+            sv,
+            speedup_floor=args.solver_speedup_floor,
+            warm_ms=args.solver_warm_ms,
         )
 
     if args.chaos_fresh is not None:

@@ -69,6 +69,18 @@ class CalibratedHardware:
         """Cache-file identity of the host this profile describes."""
         return f"{self.backend}-{self.n_devices}dev-{self.cpu_count}cpu"
 
+    def fingerprint(self) -> str:
+        """Stable content hash of the *measured rates* — the plan store's
+        notion of "which hardware profile priced this plan".  Excludes
+        ``elapsed_s`` (wall time of the calibration run, not a rate) and
+        ``quick`` so a full re-measurement that lands on identical rates
+        keeps stored plans valid; any drift in the rates changes it."""
+        from ..ft.artifacts import payload_checksum
+        d = self.to_jsonable()
+        d.pop("elapsed_s", None)
+        d.pop("quick", None)
+        return payload_checksum(d)[:16]
+
     # -- serialization ----------------------------------------------------
     def to_jsonable(self) -> dict:
         d = dataclasses.asdict(self)

@@ -51,7 +51,6 @@ versus einsum/opaque fallback.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import os
 import threading
 import time
@@ -80,25 +79,11 @@ def _env_int(name: str, default: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Fingerprints (cache keys)
+# Fingerprints (cache keys) — canonical definitions live in
+# core/fingerprint.py (import-light, shared with the plan store); these
+# re-exports keep the historical import site working.
 # ---------------------------------------------------------------------------
-def graph_fingerprint(graph: TaskGraph) -> str:
-    """Stable content hash of a task graph (structure, shapes, semantics)."""
-    items = (
-        graph.name,
-        tuple(sorted((a.name, a.shape, a.dtype_bytes, a.offchip)
-                     for a in graph.arrays.values())),
-        tuple(s.content_key() for s in graph.statements),
-    )
-    return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
-
-
-def plan_fingerprint(plan: ExecutionPlan) -> str:
-    """Stable content hash of the plan decisions codegen consumes."""
-    items = (plan.graph_name,
-             tuple(sorted((tid, repr(cfg.to_jsonable()))
-                          for tid, cfg in plan.configs.items())))
-    return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+from ..core.fingerprint import graph_fingerprint, plan_fingerprint  # noqa: E402
 
 
 def program_key(graph: TaskGraph, plan: ExecutionPlan,

@@ -1,0 +1,68 @@
+"""Content fingerprints shared by the program cache and the plan store.
+
+These used to live in ``repro.codegen.program`` (which imports JAX at
+module scope); the persistent plan store (``repro.store``) needs the same
+identities from an import-light context — a replica deciding whether a
+cached plan applies must not pay a JAX import to hash a graph.  The
+codegen module re-exports them, so existing callers are unaffected.
+
+All fingerprints are sha256 over ``repr`` of *content* tuples (never
+object identities), truncated to 16 hex chars — collision-safe for cache
+keys, short enough to compose into filenames.
+"""
+from __future__ import annotations
+
+import hashlib
+
+from .plan import ExecutionPlan
+from .taskgraph import TaskGraph
+
+
+def _digest(items) -> str:
+    return hashlib.sha256(repr(items).encode()).hexdigest()[:16]
+
+
+def graph_fingerprint(graph: TaskGraph) -> str:
+    """Stable content hash of a task graph (structure, shapes, semantics)."""
+    items = (
+        graph.name,
+        tuple(sorted((a.name, a.shape, a.dtype_bytes, a.offchip)
+                     for a in graph.arrays.values())),
+        tuple(s.content_key() for s in graph.statements),
+    )
+    return _digest(items)
+
+
+def plan_fingerprint(plan: ExecutionPlan) -> str:
+    """Stable content hash of the plan decisions codegen consumes."""
+    items = (plan.graph_name,
+             tuple(sorted((tid, repr(cfg.to_jsonable()))
+                          for tid, cfg in plan.configs.items())))
+    return _digest(items)
+
+
+def hardware_fingerprint(hw) -> str:
+    """Stable content hash of a ``Hardware`` board — every rate the cost
+    model prices with, so calibration drift (new measured HBM/ICI/FLOP
+    rates) changes the fingerprint and therefore the plan-store key."""
+    items = (
+        tuple((s.sid, s.chips, s.compute_frac, s.vmem_frac,
+               s.board_flops, s.board_hbm_bw) for s in hw.slices),
+        hw.ici_bw, hw.hbm_bw, hw.vmem, hw.peak_flops, hw.dispatch_s,
+        tuple(hw.hbm_share) if hw.hbm_share else None,
+    )
+    return _digest(items)
+
+
+def solver_options_fingerprint(opts) -> str:
+    """Stable content hash of the ``SolverOptions`` fields that shape the
+    *search space and budget* — NOT the execution strategy.  ``workers``
+    (and the parallel-engagement threshold) are deliberately excluded: a
+    plan solved with any worker count is valid for every replica, and the
+    parallel sweep's pruning only discards provably-dominated candidates,
+    so replicas with different core counts share store entries."""
+    items = (opts.mode, opts.max_tile, tuple(opts.tile_menu),
+             opts.max_options_per_loop, opts.top_k,
+             round(float(opts.time_budget_s), 6), opts.anneal_iters,
+             opts.seed)
+    return _digest(items)

@@ -71,6 +71,26 @@ class TaskConfig:
             "slice_id": self.slice_id,
         }
 
+    @staticmethod
+    def from_jsonable(d: Mapping) -> "TaskConfig":
+        """Inverse of :meth:`to_jsonable`.
+
+        Reconstruction is exact: ``perm`` comes back as a tuple and tile
+        counts as ints, so a round-tripped config re-serialises to the
+        identical jsonable dict — which is what keeps
+        ``plan_fingerprint`` stable through the plan store.
+        """
+        return TaskConfig(
+            perm=tuple(d["perm"]),
+            tiles={l: TileOption(tile=int(t["tile"]),
+                                 padded_tc=int(t["padded_tc"]),
+                                 ori_tc=int(t["ori_tc"]))
+                   for l, t in d["tiles"].items()},
+            placements={a: ArrayPlacement(**p)
+                        for a, p in d["placements"].items()},
+            slice_id=int(d["slice_id"]),
+        )
+
 
 @dataclasses.dataclass
 class TaskReport:
@@ -92,6 +112,13 @@ class TaskReport:
         terms = {"compute": self.compute_s, "memory": self.load_s + self.store_s}
         return max(terms, key=terms.get)
 
+    def to_jsonable(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_jsonable(d: Mapping) -> "TaskReport":
+        return TaskReport(**d)
+
 
 @dataclasses.dataclass
 class ExecutionPlan:
@@ -105,10 +132,46 @@ class ExecutionPlan:
     n_evaluated: int = 0
     space_size: float = 0.0       # raw product-space size (Table 10 story)
     timed_out: bool = False       # exhaustive coverage impossible in budget
+    store_hit: bool = False       # served from the persistent plan store
+    stale_hw: bool = False        # store hit keyed to an older hw profile
 
     @property
     def gflops(self) -> float:
         return self.useful_flops / self.latency_s / 1e9 if self.latency_s else 0.0
+
+    def to_jsonable(self) -> dict:
+        """Full lossless serialisation (configs + reports) for the plan
+        store.  ``store_hit``/``stale_hw`` are runtime provenance flags,
+        not plan content, and are deliberately not persisted."""
+        return {
+            "graph_name": self.graph_name,
+            "configs": {str(t): c.to_jsonable() for t, c in self.configs.items()},
+            "reports": {str(t): r.to_jsonable() for t, r in self.reports.items()},
+            "latency_s": self.latency_s,
+            "useful_flops": self.useful_flops,
+            "mode": self.mode,
+            "solver_seconds": self.solver_seconds,
+            "n_evaluated": self.n_evaluated,
+            "space_size": self.space_size,
+            "timed_out": self.timed_out,
+        }
+
+    @staticmethod
+    def from_jsonable(d: Mapping) -> "ExecutionPlan":
+        return ExecutionPlan(
+            graph_name=d["graph_name"],
+            configs={int(t): TaskConfig.from_jsonable(c)
+                     for t, c in d["configs"].items()},
+            reports={int(t): TaskReport.from_jsonable(r)
+                     for t, r in d["reports"].items()},
+            latency_s=float(d["latency_s"]),
+            useful_flops=float(d["useful_flops"]),
+            mode=d["mode"],
+            solver_seconds=float(d["solver_seconds"]),
+            n_evaluated=int(d["n_evaluated"]),
+            space_size=float(d["space_size"]),
+            timed_out=bool(d["timed_out"]),
+        )
 
     def to_json(self, **extra) -> str:
         return json.dumps({

@@ -169,6 +169,13 @@ class Hardware:
     def n_slices(self) -> int:
         return len(self.slices)
 
+    def fingerprint(self) -> str:
+        """Content hash of every rate the cost model prices with — the
+        plan store's hardware key.  Calibration drift (new measured
+        rates) changes this, which is what invalidates stored plans."""
+        from .fingerprint import hardware_fingerprint
+        return hardware_fingerprint(self)
+
     def bw_share_at(self, n_active: int) -> float:
         """Per-slice fraction of solo HBM bandwidth when ``n_active``
         slices are concurrently active in the same wave.  Uses the

@@ -29,17 +29,22 @@ Determinism: all enumeration orders are sorted; annealing uses a fixed seed.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
 import itertools
+import multiprocessing
+import os
 import random
+import sys
 import time
 
-from .costmodel import footprint_elems, n_transfers, plan_latency, task_report
+from .costmodel import (_access_of, footprint_elems, n_transfers,
+                        plan_latency, task_report)
 from .fusion import FusedGraph, FusedTask, fuse
 from .padding import TileOption, tile_options
 from .plan import ArrayPlacement, ExecutionPlan, TaskConfig, TaskReport
-from .resources import Hardware, THREE_SLICE
+from .resources import Hardware, THREE_SLICE, alignment_efficiency
 from .taskgraph import TaskGraph, legal_permutations
 
 
@@ -74,10 +79,38 @@ class SolverOptions:
     time_budget_s: float = 120.0
     anneal_iters: int = 4000
     seed: int = 0
+    # Process-pool fan-out for the candidate sweep.  ``None`` resolves to
+    # ``os.cpu_count() - 1`` (REPRO_SOLVER_WORKERS overrides); ``1`` is
+    # today's exact serial sweep, bit-for-bit.  workers > 1 additionally
+    # enables cost-model-guided pruning (compute lower bounds against the
+    # shared best-so-far), so its candidate set is a subset of serial's.
+    workers: int | None = None
+    # Sweeps smaller than this many (perm, tiles) points stay serial even
+    # with workers > 1 — pool spin-up would dominate.
+    min_parallel_units: int = 192
 
     @property
     def caps(self) -> ModeCaps:
         return CAPS[self.mode]
+
+    @property
+    def effective_workers(self) -> int:
+        if self.workers is not None:
+            return max(1, int(self.workers))
+        env = os.environ.get("REPRO_SOLVER_WORKERS")
+        if env:
+            try:
+                return max(1, int(env))
+            except ValueError:
+                pass
+        return max(1, (os.cpu_count() or 2) - 1)
+
+    def fingerprint(self) -> str:
+        """Plan-store key component — see
+        :func:`repro.core.fingerprint.solver_options_fingerprint` for what
+        is (and deliberately is not) part of the identity."""
+        from .fingerprint import solver_options_fingerprint
+        return solver_options_fingerprint(self)
 
 
 @dataclasses.dataclass
@@ -294,28 +327,115 @@ class TaskChoice:
     report: TaskReport
 
 
+def _eval_combo(task: FusedTask, fg: FusedGraph, hw: Hardware,
+                opts: SolverOptions, perm: tuple[str, ...],
+                tiles: dict[str, TileOption],
+                per_combo: int) -> tuple[list[TaskChoice], int]:
+    """Evaluate every placement option of one (perm, tiles) point; returns
+    the ``per_combo`` locally-best feasible choices and the number of
+    placements evaluated.  Shared verbatim by the serial sweep and the
+    process-pool workers so both paths score identically."""
+    sl = hw.slices[0]
+    reads = task.read_arrays()
+    overlap_opts = (True, False) if opts.caps.overlap else (False,)
+    local: list[TaskChoice] = []
+    n = 0
+    for overlap in overlap_opts:   # N_a: buffering is a variable
+        out_opts = _placement_options(
+            task, perm, tiles, fg, hw, opts, task.output_array,
+            is_output=True, overlap=overlap)
+        read_opts = [
+            _placement_options(task, perm, tiles, fg, hw, opts, a,
+                               is_output=False, overlap=overlap)
+            for a in reads]
+        for out_pl in out_opts:
+            for read_sel in itertools.product(*read_opts) \
+                    if read_opts else [()]:
+                placements = dict(zip(reads, read_sel))
+                placements[task.output_array] = out_pl
+                cfg = TaskConfig(perm=perm, tiles=tiles,
+                                 placements=placements, slice_id=0)
+                rep = task_report(task, cfg, fg, hw)
+                n += 1
+                if rep.vmem_bytes > sl.vmem:
+                    continue
+                local.append(TaskChoice(cfg, rep))
+    local.sort(key=lambda c: c.report.latency_s)
+    return local[:per_combo], n
+
+
+# Pruning margin for the parallel sweep's compute-only lower bound: a
+# (perm, tiles) point is skipped when even its *compute floor* (padded
+# FLOPs at its alignment efficiency — invariant under placement, routing
+# and slice assignment) exceeds this multiple of the best full local
+# latency already found.  > 1 keeps headroom for the global phase's
+# rewiring, which can only make the *kept* candidates cheaper.
+_PRUNE_MARGIN = 2.0
+
+
+def _combo_lower_bound(task: FusedTask, tiles: dict[str, TileOption],
+                       sl) -> float:
+    """Lower bound on any placement's latency for (task, tiles): the MXU
+    time of the padded compute at the output block's alignment efficiency.
+    ``task_report``'s latency is >= t_mxu x total tile executions, which
+    is exactly this quantity, for every placement choice."""
+    main = task.main
+    flops = main.flops_per_iter * main.density
+    for l in main.loops:
+        flops *= tiles[l].padded_tc
+    out_acc = _access_of(task, task.output_array)
+    eff = alignment_efficiency([tiles[it].tile for it in out_acc.iters])
+    return flops / max(sl.flops * eff, 1.0)
+
+
+def _decode_combo(menu_lists: list[list[TileOption]], loops: list[str],
+                  idx: int) -> dict[str, TileOption]:
+    """Map a flat combo index to the tile selection ``itertools.product``
+    would emit at that position (first menu varies slowest) — workers
+    address sweep points by index instead of shipping the selections.
+    Insertion order matches ``dict(zip(loops, sel))`` exactly: tile dicts
+    feed ``repr``-based plan fingerprints, so key order is identity."""
+    digits: list[int] = []
+    for menu in reversed(menu_lists):
+        idx, r = divmod(idx, len(menu))
+        digits.append(r)
+    digits.reverse()
+    return {loop: menu[d]
+            for loop, menu, d in zip(loops, menu_lists, digits)}
+
+
 def enumerate_task(task: FusedTask, fg: FusedGraph, hw: Hardware,
                    opts: SolverOptions, stats: SolveStats, deadline: float,
-                   per_combo: int = 2, cap: int = 2048) -> list[TaskChoice]:
+                   per_combo: int = 2, cap: int = 2048,
+                   pool: "_SweepPool | None" = None) -> list[TaskChoice]:
     """Candidate configs for one task, sorted by local latency.
 
     Keeps the ``per_combo`` best placement combos for every (perm, tiles)
     pair so the global phase (which rewires edges to on-chip buffers or ICI
     streams and re-costs) can coordinate-descend over a rich list.  Local
-    costs assume off-chip edges — a lower bound refined globally."""
-    sl = hw.slices[0]
+    costs assume off-chip edges — a lower bound refined globally.
+
+    With a live ``pool`` (workers > 1) the (perm, tiles) grid is split
+    into chunked work units fanned out to worker processes, with the
+    best-so-far latency shared between waves as a pruning bound."""
     perms = candidate_perms(task, opts)
     tiles_menu = candidate_tiles(task, opts)
-    reads = task.read_arrays()
-    out: list[TaskChoice] = []
-
     loops = list(task.loops)
     combos = 1
     for l in loops:
         combos *= len(tiles_menu[l])
     stats.space_size += len(perms) * combos
 
-    overlap_opts = (True, False) if opts.caps.overlap else (False,)
+    if pool is not None and pool.alive \
+            and len(perms) * combos >= opts.min_parallel_units:
+        result = _enumerate_task_parallel(task, fg, hw, opts, stats,
+                                          deadline, per_combo, cap, pool,
+                                          perms, tiles_menu, loops, combos)
+        if result is not None:
+            return result
+        # broken pool: fall through to the serial sweep below
+
+    out: list[TaskChoice] = []
     for perm in perms:
         for tile_sel in itertools.product(*(tiles_menu[l] for l in loops)):
             # honour the deadline only once at least one feasible config
@@ -325,35 +445,224 @@ def enumerate_task(task: FusedTask, fg: FusedGraph, hw: Hardware,
                 stats.timed_out = True
                 return _sorted_choices(out, cap)
             tiles = dict(zip(loops, tile_sel))
-            local: list[TaskChoice] = []
-            for overlap in overlap_opts:   # N_a: buffering is a variable
-                out_opts = _placement_options(
-                    task, perm, tiles, fg, hw, opts, task.output_array,
-                    is_output=True, overlap=overlap)
-                read_opts = [
-                    _placement_options(task, perm, tiles, fg, hw, opts, a,
-                                       is_output=False, overlap=overlap)
-                    for a in reads]
-                for out_pl in out_opts:
-                    for read_sel in itertools.product(*read_opts) \
-                            if read_opts else [()]:
-                        placements = dict(zip(reads, read_sel))
-                        placements[task.output_array] = out_pl
-                        cfg = TaskConfig(perm=perm, tiles=tiles,
-                                         placements=placements, slice_id=0)
-                        rep = task_report(task, cfg, fg, hw)
-                        stats.n_evaluated += 1
-                        if rep.vmem_bytes > sl.vmem:
-                            continue
-                        local.append(TaskChoice(cfg, rep))
-            local.sort(key=lambda c: c.report.latency_s)
-            out.extend(local[:per_combo])
+            local, n = _eval_combo(task, fg, hw, opts, perm, tiles,
+                                   per_combo)
+            stats.n_evaluated += n
+            out.extend(local)
+    return _sorted_choices(out, cap)
+
+
+def _enumerate_task_parallel(task, fg, hw, opts, stats, deadline, per_combo,
+                             cap, pool, perms, tiles_menu, loops,
+                             combos) -> "list[TaskChoice] | None":
+    """Fan the (perm, tiles) grid out to the process pool in deterministic
+    waves.  The pruning bound only advances between waves (from the merged
+    results of ALL earlier waves), so the evaluated set — and therefore
+    the candidate list — is a pure function of (task, opts, workers),
+    independent of worker scheduling."""
+    menu_lists = [tiles_menu[l] for l in loops]
+    chunk = max(16, -(-combos * len(perms) // (pool.workers * 8)))
+    payloads: list[tuple] = []
+    for pi in range(len(perms)):
+        start = 0
+        while start < combos:
+            payloads.append((task.tid, pi, start,
+                             min(start + chunk, combos), per_combo))
+            start += chunk
+
+    # Seed the pruning bound before the first wave: one aligned, largest-
+    # tile point evaluated in-process (its chunk re-evaluates it later —
+    # a duplicate costing one combo, never a lost candidate).
+    bound = float("inf")
+    seed_tiles = {l: menu[-1] for l, menu in zip(loops, menu_lists)}
+    seeded, n = _eval_combo(task, fg, hw, opts, perms[0], seed_tiles,
+                            per_combo)
+    stats.n_evaluated += n
+    for c in seeded:
+        bound = min(bound, c.report.latency_s)
+
+    out: list[TaskChoice] = []
+    wave = pool.workers * 2
+    try:
+        for i in range(0, len(payloads), wave):
+            now = time.monotonic()
+            if out and now > deadline:
+                stats.timed_out = True
+                break
+            budget = max(deadline - now, 0.25)
+            futs = [pool.submit(_w_enum_chunk, p + (bound, budget))
+                    for p in payloads[i:i + wave]]
+            for f in futs:
+                choices, n_eval, timed_out = f.result()
+                stats.n_evaluated += n_eval
+                stats.timed_out |= timed_out
+                out.extend(choices)
+            for c in out:
+                bound = min(bound, c.report.latency_s)
+    except (concurrent.futures.process.BrokenProcessPool, OSError):
+        pool.alive = False
+        return None
     return _sorted_choices(out, cap)
 
 
 def _sorted_choices(choices: list[TaskChoice], cap: int) -> list[TaskChoice]:
     return sorted(choices, key=lambda c: (c.report.latency_s,
                                           c.report.vmem_bytes))[:cap]
+
+
+# ---------------------------------------------------------------------------
+# Process-pool sweep infrastructure
+# ---------------------------------------------------------------------------
+# Worker-process context, installed once per worker by the pool initializer
+# (the fused graph, hardware and options are pickled exactly once per
+# worker, not once per chunk — chunks carry only indices and bounds).
+# repro.core is deliberately JAX-free, so workers never pay a JAX import.
+_WORKER_CTX: tuple | None = None
+
+
+def _pool_init(fg: FusedGraph, hw: Hardware, opts: SolverOptions) -> None:
+    global _WORKER_CTX
+    _WORKER_CTX = (fg, hw, opts)
+
+
+class _SweepPool:
+    """A per-solve ``ProcessPoolExecutor`` whose workers hold the solve
+    context as process globals.  ``fork`` start where available (cheap,
+    inherits the warm interpreter); ``spawn`` elsewhere — workers then
+    re-import ``repro.core`` only.
+
+    ``alive`` flips to False the first time the pool breaks (workers
+    killed, spawn unable to re-import an interactive ``__main__``, fd
+    exhaustion...); every call site then falls back to the serial sweep —
+    a broken pool degrades throughput, never the solve."""
+
+    def __init__(self, workers: int, fg: FusedGraph, hw: Hardware,
+                 opts: SolverOptions):
+        self.workers = workers
+        self.alive = True
+        # fork is cheap but unsafe once JAX's runtime threads exist
+        # (os.fork + multithreaded XLA can deadlock the child); spawn
+        # re-imports only the JAX-free repro.core chain, so it stays
+        # correct — just slower to start — whenever jax is loaded.
+        if sys.platform.startswith("linux") and "jax" not in sys.modules:
+            method = "fork"
+        else:
+            method = "spawn"
+        ctx = multiprocessing.get_context(method)
+        self._ex = concurrent.futures.ProcessPoolExecutor(
+            max_workers=workers, mp_context=ctx,
+            initializer=_pool_init, initargs=(fg, hw, opts))
+
+    def submit(self, fn, *args):
+        return self._ex.submit(fn, *args)
+
+    def shutdown(self) -> None:
+        self._ex.shutdown(wait=True, cancel_futures=True)
+
+
+def _w_enum_chunk(payload: tuple) -> tuple[list[TaskChoice], int, bool]:
+    """Worker: evaluate combo indices [start, stop) of one permutation.
+
+    Refines the shipped pruning bound with its own discoveries as it
+    scans (deterministic: sequential within the chunk).  Honors the
+    remaining time budget, but — like the serial sweep — never before
+    producing at least one feasible choice."""
+    tid, perm_idx, start, stop, per_combo, bound, budget_s = payload
+    fg, hw, opts = _WORKER_CTX
+    task = fg.tasks[tid]
+    sl = hw.slices[0]
+    perm = candidate_perms(task, opts)[perm_idx]
+    tiles_menu = candidate_tiles(task, opts)
+    loops = list(task.loops)
+    menu_lists = [tiles_menu[l] for l in loops]
+    deadline = time.monotonic() + budget_s
+    choices: list[TaskChoice] = []
+    n_eval = 0
+    timed_out = False
+    for ci in range(start, stop):
+        if choices and time.monotonic() > deadline:
+            timed_out = True
+            break
+        tiles = _decode_combo(menu_lists, loops, ci)
+        if bound < float("inf") and \
+                _combo_lower_bound(task, tiles, sl) > bound * _PRUNE_MARGIN:
+            continue
+        local, n = _eval_combo(task, fg, hw, opts, perm, tiles, per_combo)
+        n_eval += n
+        choices.extend(local)
+        for c in local:
+            bound = min(bound, c.report.latency_s)
+    return choices, n_eval, timed_out
+
+
+def _w_eval_chunk(payload: tuple) -> tuple[float, int, int]:
+    """Worker: score trial plans against the global DAG objective.
+
+    One of the coordinate-descent inner loops, chunked: the base choice
+    (one ``TaskChoice`` per task) is fixed; each element of ``cands``
+    swaps task ``tid``'s choice (or, with ``tid is None``, swaps the
+    slice assignment).  Candidates whose compute floor already exceeds
+    the incumbent makespan are skipped — sound, because any plan's
+    makespan >= each task's compute time under every routing.  Returns
+    (best latency, its candidate index, evaluations)."""
+    tid, base, assign, cands, bound, budget_s = payload
+    fg, hw, opts = _WORKER_CTX
+    deadline = time.monotonic() + budget_s
+    best_lat, best_idx, n_eval = float("inf"), -1, 0
+    for idx, cand in cands:
+        if n_eval and time.monotonic() > deadline:
+            break
+        if tid is not None:
+            if bound < float("inf") and cand.report.compute_s >= bound:
+                continue
+            trial = dict(base)
+            trial[tid] = cand
+            lat, _, _ = _evaluate(fg, trial, assign, hw, opts)
+        else:
+            lat, _, _ = _evaluate(fg, base, cand, hw, opts)
+        n_eval += 1
+        if lat < best_lat:
+            best_lat, best_idx = lat, idx
+    return best_lat, best_idx, n_eval
+
+
+def _parallel_argmin(pool: "_SweepPool", tid, base: dict, assign,
+                     cands: list[tuple], bound: float, deadline: float) \
+        -> "tuple[float, int, int] | None":
+    """Chunk one coordinate's candidates across the pool and merge to the
+    argmin.  Merging walks chunks in submission order with a strict ``<``,
+    so ties resolve to the lowest candidate index — the same winner the
+    serial scan picks.  ``None`` when the pool broke (caller goes serial).
+    """
+    budget = max(deadline - time.monotonic(), 0.25)
+    chunk = max(8, -(-len(cands) // (pool.workers * 2)))
+    try:
+        futs = [pool.submit(_w_eval_chunk,
+                            (tid, base, assign, cands[s:s + chunk], bound,
+                             budget))
+                for s in range(0, len(cands), chunk)]
+        best_lat, best_idx, n_eval = float("inf"), -1, 0
+        for f in futs:
+            lat, idx, ne = f.result()
+            n_eval += ne
+            if lat < best_lat:
+                best_lat, best_idx = lat, idx
+    except (concurrent.futures.process.BrokenProcessPool, OSError):
+        pool.alive = False
+        return None
+    return best_lat, best_idx, n_eval
+
+
+def _pool_for(fg: FusedGraph, hw: Hardware,
+              opts: SolverOptions) -> "_SweepPool | None":
+    """A sweep pool when the options ask for one, else None (serial)."""
+    workers = opts.effective_workers
+    if workers <= 1:
+        return None
+    try:
+        return _SweepPool(workers, fg, hw, opts)
+    except (OSError, ValueError):    # no fork/sem support: stay serial
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -451,38 +760,94 @@ def default_hardware(n_slices: int = 3) -> Hardware:
     return THREE_SLICE if n_slices == 3 else Hardware.make(n_slices=n_slices)
 
 
+def _resolve_store(store):
+    """``"auto"`` -> the env-configured default store (None when
+    ``REPRO_PLAN_STORE_DIR`` is unset), ``None`` -> disabled, anything
+    else is used as a ``PlanStore`` directly."""
+    if store is None:
+        return None
+    if store == "auto":
+        from ..store import default_store
+        return default_store()
+    return store
+
+
+def _sweep_units(fg: FusedGraph, opts: SolverOptions) -> int:
+    """Total (perm, tiles) points across tasks — decides whether spinning
+    up a process pool can pay for itself."""
+    total = 0
+    for t in fg.tasks:
+        combos = 1
+        for l in t.loops:
+            combos *= len(candidate_tiles(t, opts)[l])
+        total += len(candidate_perms(t, opts)) * combos
+    return total
+
+
 def solve(graph: TaskGraph, hw: Hardware | None = None,
-          opts: SolverOptions | None = None) -> ExecutionPlan:
+          opts: SolverOptions | None = None, *, store="auto",
+          allow_stale: bool = False, refresh: bool = False) -> ExecutionPlan:
+    """Solve ``graph`` for ``hw`` under ``opts``.
+
+    ``store`` routes the persistent plan store (``repro.store``): the
+    default ``"auto"`` uses the ``REPRO_PLAN_STORE_DIR``-configured store
+    when one is set (hit -> return the stored plan with ``store_hit=True``
+    and zero evaluations; solve -> persist the result), ``None`` disables
+    it, or pass a ``PlanStore``.  ``allow_stale`` additionally accepts a
+    stored plan keyed to an older hardware fingerprint (``stale_hw=True``
+    on the result — callers should schedule a background ``refresh``).
+    ``refresh=True`` skips the lookup (never trust the entry being
+    replaced) but still persists the fresh result.
+    """
     opts = opts or SolverOptions()
     if hw is None:
         hw = default_hardware()
     caps = opts.caps
     t0 = time.monotonic()
     deadline = t0 + opts.time_budget_s
+
+    st = _resolve_store(store)
+    if st is not None and not refresh:
+        hit = st.load(graph, hw, opts, allow_stale=allow_stale)
+        if hit is not None:
+            hit.solver_seconds = time.monotonic() - t0
+            return hit
+
     stats = SolveStats()
     fg = fuse(graph)
-
-    if caps.joint_search:
-        plan = _solve_joint(fg, hw, opts, stats, deadline)
-    else:
-        plan = _solve_decomposed(fg, hw, opts, stats, deadline)
+    pool = None
+    if opts.effective_workers > 1 and \
+            _sweep_units(fg, opts) >= opts.min_parallel_units:
+        pool = _pool_for(fg, hw, opts)
+    try:
+        if caps.joint_search:
+            plan = _solve_joint(fg, hw, opts, stats, deadline, pool)
+        else:
+            plan = _solve_decomposed(fg, hw, opts, stats, deadline, pool)
+    finally:
+        if pool is not None:
+            pool.shutdown()
     plan.solver_seconds = time.monotonic() - t0
     plan.n_evaluated = stats.n_evaluated
     plan.mode = opts.mode
     plan.space_size = stats.space_size
     plan.timed_out = stats.timed_out
+    if st is not None:
+        st.save(graph, hw, opts, plan)
     return plan
 
 
 def _solve_decomposed(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
-                      stats: SolveStats, deadline: float) -> ExecutionPlan:
+                      stats: SolveStats, deadline: float,
+                      pool: _SweepPool | None = None) -> ExecutionPlan:
     """Prometheus decomposition (paper §6.4): dataflow decouples tasks, so
     the search is per-task candidate lists + a global placement phase
     (slice assignment x candidate picks) refined by coordinate descent on
     the true DAG objective.  Effective work is SUM of per-task spaces times
     a few sweeps — not the PRODUCT the shared-buffer formulation needs."""
     caps = opts.caps
-    per_task = {t.tid: enumerate_task(t, fg, hw, opts, stats, deadline)
+    per_task = {t.tid: enumerate_task(t, fg, hw, opts, stats, deadline,
+                                      pool=pool)
                 for t in fg.tasks}
     for tid, cands in per_task.items():
         if not cands:
@@ -511,11 +876,30 @@ def _solve_decomposed(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
             return {tid: 0 for tid in tids}
         best_a = (float("inf"), {tid: 0 for tid in tids})
         if len(tids) <= 7:
+            assigns = []
             for combo in itertools.product(range(n_slices),
                                            repeat=len(tids) - 1):
                 a = {tids[0]: 0}
                 for tid, s in zip(tids[1:], combo):
                     a[tid] = s
+                assigns.append(a)
+            if pool is not None and pool.alive and len(assigns) >= 64:
+                base = {tid: per_task[tid][pick_[tid]] for tid in tids}
+                res = _parallel_argmin(
+                    pool, None, base, None,
+                    list(enumerate(assigns)), float("inf"), deadline)
+                if res is not None:
+                    lat, idx, n_eval = res
+                    stats.n_evaluated += n_eval
+                    if idx >= 0:
+                        # one in-process re-eval of the winner records its
+                        # cfgs/reports in ``best``
+                        evaluate(assigns[idx], pick_)
+                        best_a = (lat, dict(assigns[idx]))
+                    if time.monotonic() > deadline:
+                        stats.timed_out = True
+                    return best_a[1]
+            for a in assigns:
                 lat = evaluate(a, pick_)
                 if lat < best_a[0]:
                     best_a = (lat, dict(a))
@@ -548,12 +932,34 @@ def _solve_decomposed(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
     assign = assignment_search(pick)
 
     # Coordinate descent over per-task candidate lists against the global
-    # DAG objective, interleaved with assignment re-search.
+    # DAG objective, interleaved with assignment re-search.  One tid's
+    # inner loop is an argmin over its candidate list with the others
+    # fixed — which is what the chunked parallel path computes, skipping
+    # candidates whose compute floor already exceeds the incumbent.
     for _sweep in range(6):
         improved = False
         for tid in tids:
             cur_lat = best[0]
             cur_k = pick[tid]
+            if pool is not None and pool.alive and len(per_task[tid]) >= 32:
+                base = {t: per_task[t][pick[t]] for t in tids}
+                cands = [(k, per_task[tid][k])
+                         for k in range(len(per_task[tid])) if k != cur_k]
+                res = _parallel_argmin(
+                    pool, tid, base, assign, cands, cur_lat, deadline)
+                if res is not None:
+                    lat, k, n_eval = res
+                    stats.n_evaluated += n_eval
+                    if k >= 0 and lat < cur_lat:
+                        trial = dict(pick)
+                        trial[tid] = k
+                        evaluate(assign, trial)     # records cfgs/reports
+                        pick = trial
+                        improved = True
+                    if time.monotonic() > deadline:
+                        stats.timed_out = True
+                        break
+                    continue
             for k in range(len(per_task[tid])):
                 if time.monotonic() > deadline:
                     stats.timed_out = True
@@ -586,8 +992,132 @@ def _solve_decomposed(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
                          useful_flops=useful)
 
 
+def _joint_choice(task: FusedTask, fg: FusedGraph, hw: Hardware,
+                  opts: SolverOptions, perm, tiles) -> TaskChoice | None:
+    """Min-transfer placements, greedily demoted (next Pareto option:
+    smaller buffer, more transfers) until the joint VMEM budget fits.
+    Module-level (not a closure) so pool workers run it too."""
+    reads = task.read_arrays()
+    options: dict[str, list[ArrayPlacement]] = {}
+    for a in reads:
+        options[a] = _placement_options(task, perm, tiles, fg, hw,
+                                        opts, a, is_output=False)
+    out_arr = task.output_array
+    options[out_arr] = _placement_options(task, perm, tiles, fg, hw,
+                                          opts, out_arr, is_output=True)
+    pick = {a: 0 for a in options}
+
+    def buf_bytes(a: str) -> float:
+        pl = options[a][pick[a]]
+        return footprint_elems(
+            TaskConfig(perm=perm, tiles=tiles,
+                       placements={a: pl}, slice_id=0),
+            task, a, pl.define_level) \
+            * fg.graph.arrays[a].dtype_bytes * pl.buffers
+
+    vmem_budget = hw.slices[0].vmem
+    for _ in range(sum(len(v) for v in options.values())):
+        if sum(buf_bytes(a) for a in options) <= vmem_budget:
+            break
+        # demote the biggest buffer that still has a next option
+        cand = sorted(options, key=buf_bytes, reverse=True)
+        for a in cand:
+            if pick[a] + 1 < len(options[a]):
+                pick[a] += 1
+                break
+        else:
+            return None
+    placements = {a: options[a][pick[a]] for a in options}
+    cfg = TaskConfig(perm=perm, tiles=tiles, placements=placements,
+                     slice_id=0)
+    rep = task_report(task, cfg, fg, hw)
+    if rep.vmem_bytes > hw.slices[0].vmem:
+        return None
+    return TaskChoice(cfg, rep)
+
+
+def _w_joint_chunk(payload: tuple) \
+        -> tuple[list[tuple[int, TaskChoice | None]], int, bool]:
+    """Worker: derive joint-mode choices for point indices [start, stop)
+    of one task's coupled (perm x tiles) space, pruning points whose
+    compute floor exceeds the shared bound."""
+    tid, start, stop, bound, budget_s = payload
+    fg, hw, opts = _WORKER_CTX
+    task = fg.tasks[tid]
+    sl = hw.slices[0]
+    perms = candidate_perms(task, opts)
+    tiles_menu = candidate_tiles(task, opts)
+    loops = list(task.loops)
+    menu_lists = [tiles_menu[l] for l in loops]
+    combos = 1
+    for m in menu_lists:
+        combos *= len(m)
+    deadline = time.monotonic() + budget_s
+    results: list[tuple[int, TaskChoice | None]] = []
+    n_eval = 0
+    timed_out = False
+    found = False
+    for i in range(start, stop):
+        if found and time.monotonic() > deadline:
+            timed_out = True
+            break
+        pi, ci = divmod(i, combos)
+        perm = perms[pi]
+        tiles = _decode_combo(menu_lists, loops, ci)
+        if bound < float("inf") and \
+                _combo_lower_bound(task, tiles, sl) > bound * _PRUNE_MARGIN:
+            results.append((i, None))
+            continue
+        ch = _joint_choice(task, fg, hw, opts, perm, tiles)
+        n_eval += 1
+        results.append((i, ch))
+        if ch is not None:
+            found = True
+            bound = min(bound, ch.report.latency_s)
+    return results, n_eval, timed_out
+
+
+def _joint_init_parallel(pool: _SweepPool, fg: FusedGraph, tid: int,
+                         spaces: dict, choice_memo: dict,
+                         stats: SolveStats,
+                         deadline: float) -> "list[TaskChoice] | None":
+    """Fan one task's joint space across the pool in deterministic waves
+    (same wave/bound discipline as the decomposed enumeration), filling
+    ``choice_memo`` for the descent sweeps."""
+    n = len(spaces[tid])
+    chunk = max(16, -(-n // (pool.workers * 8)))
+    payloads = [(tid, s, min(s + chunk, n)) for s in range(0, n, chunk)]
+    cands: list[TaskChoice] = []
+    bound = float("inf")
+    wave = pool.workers * 2
+    try:
+        for i in range(0, len(payloads), wave):
+            now = time.monotonic()
+            if cands and now > deadline:
+                stats.timed_out = True
+                break
+            budget = max(deadline - now, 0.25)
+            futs = [pool.submit(_w_joint_chunk, p + (bound, budget))
+                    for p in payloads[i:i + wave]]
+            for f in futs:
+                results, n_eval, timed_out = f.result()
+                stats.n_evaluated += n_eval
+                stats.timed_out |= timed_out
+                for idx, ch in results:
+                    choice_memo[(tid, idx)] = ch
+                    if ch is not None:
+                        cands.append(ch)
+            for c in cands:
+                bound = min(bound, c.report.latency_s)
+    except (concurrent.futures.process.BrokenProcessPool, OSError):
+        pool.alive = False
+        return None
+    return cands
+
+
 def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
-                 stats: SolveStats, deadline: float) -> ExecutionPlan:
+                 stats: SolveStats, deadline: float,
+                 pool: _SweepPool | None = None) -> ExecutionPlan:
     """Sisyphus-style shared-buffer formulation: permutations and tiles are
     coupled across tasks (one product space).  This is the formulation whose
     size explodes with task count (paper Table 10: 3mm times out at 4 h).
@@ -615,50 +1145,7 @@ def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
 
     assign = {tid: 0 for tid in tids}
 
-    def make_choice(tid: int, perm, tiles) -> TaskChoice | None:
-        """Min-transfer placements, greedily demoted (next Pareto option:
-        smaller buffer, more transfers) until the joint VMEM budget fits."""
-        task = fg.tasks[tid]
-        reads = task.read_arrays()
-        options: dict[str, list[ArrayPlacement]] = {}
-        for a in reads:
-            options[a] = _placement_options(task, perm, tiles, fg, hw,
-                                            opts, a, is_output=False)
-        out_arr = task.output_array
-        options[out_arr] = _placement_options(task, perm, tiles, fg, hw,
-                                              opts, out_arr, is_output=True)
-        pick = {a: 0 for a in options}
-
-        def buf_bytes(a: str) -> float:
-            pl = options[a][pick[a]]
-            return footprint_elems(
-                TaskConfig(perm=perm, tiles=tiles,
-                           placements={a: pl}, slice_id=0),
-                task, a, pl.define_level) \
-                * fg.graph.arrays[a].dtype_bytes * pl.buffers
-
-        vmem_budget = hw.slices[0].vmem
-        for _ in range(sum(len(v) for v in options.values())):
-            if sum(buf_bytes(a) for a in options) <= vmem_budget:
-                break
-            # demote the biggest buffer that still has a next option
-            cand = sorted(options, key=buf_bytes, reverse=True)
-            for a in cand:
-                if pick[a] + 1 < len(options[a]):
-                    pick[a] += 1
-                    break
-            else:
-                return None
-        placements = {a: options[a][pick[a]] for a in options}
-        cfg = TaskConfig(perm=perm, tiles=tiles, placements=placements,
-                         slice_id=0)
-        rep = task_report(task, cfg, fg, hw)
-        stats.n_evaluated += 1
-        if rep.vmem_bytes > hw.slices[0].vmem:
-            return None
-        return TaskChoice(cfg, rep)
-
-    # make_choice is deterministic per (task, point) — memoize so the
+    # _joint_choice is deterministic per (task, point) — memoize so the
     # coordinate-descent sweeps below re-score points instead of re-deriving
     # their placements every sweep.  A hit still counts as an evaluated
     # point: n_evaluated feeds the evals_per_s coverage estimate behind the
@@ -672,14 +1159,31 @@ def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
             stats.n_evaluated += 1
             return choice_memo[key]
         perm, tiles = spaces[tid][idx]
-        choice_memo[key] = make_choice(tid, perm, tiles)
+        choice_memo[key] = _joint_choice(fg.tasks[tid], fg, hw, opts,
+                                         perm, tiles)
+        stats.n_evaluated += 1
         return choice_memo[key]
 
-    # init: per-task locally-best feasible config
+    # init: per-task locally-best feasible config.  Deadline-checked —
+    # a budget that elapses mid-enumeration keeps the best feasible
+    # choices found so far instead of scanning on (the solve then
+    # returns a best-effort plan, never raises past first-feasible).
     choice: dict[int, TaskChoice] = {}
     for tid in tids:
-        cands = [cached_choice(tid, i) for i in range(len(spaces[tid]))]
-        cands = [c for c in cands if c is not None]
+        cands: "list[TaskChoice] | None" = None
+        if pool is not None and pool.alive \
+                and len(spaces[tid]) >= opts.min_parallel_units:
+            cands = _joint_init_parallel(pool, fg, tid, spaces, choice_memo,
+                                         stats, deadline)
+        if cands is None:
+            cands = []
+            for i in range(len(spaces[tid])):
+                c = cached_choice(tid, i)
+                if c is not None:
+                    cands.append(c)
+                if cands and time.monotonic() > deadline:
+                    stats.timed_out = True
+                    break
         if not cands:
             raise RuntimeError(f"no feasible sisyphus config for task {tid}")
         choice[tid] = min(cands, key=lambda c: c.report.latency_s)
@@ -690,6 +1194,26 @@ def _solve_joint(fg: FusedGraph, hw: Hardware, opts: SolverOptions,
         improved = False
         for tid in tids:
             cur = best[0]
+            if pool is not None and pool.alive and len(spaces[tid]) >= 32:
+                cands2 = [(idx, choice_memo.get((tid, idx)))
+                          for idx in range(len(spaces[tid]))]
+                cands2 = [(i, c) for i, c in cands2 if c is not None]
+                res = _parallel_argmin(
+                    pool, tid, choice, assign, cands2, cur, deadline)
+                if res is not None:
+                    lat, idx, n_eval = res
+                    stats.n_evaluated += n_eval
+                    if idx >= 0 and lat < cur:
+                        trial = dict(choice)
+                        trial[tid] = choice_memo[(tid, idx)]
+                        lat2, cfgs, reports = _evaluate(fg, trial, assign,
+                                                        hw, opts)
+                        choice = trial
+                        best = (lat2, cfgs, reports)
+                        improved = True
+                    if time.monotonic() > deadline:
+                        break
+                    continue
             for idx in range(len(spaces[tid])):
                 if time.monotonic() > deadline:
                     break

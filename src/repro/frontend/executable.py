@@ -138,10 +138,12 @@ class TracedFunction:
             return self._batched.setdefault(bucket, btf)
 
     # -- solving / execution ----------------------------------------------
-    def solve(self, hw=None, opts=None):
+    def solve(self, hw=None, opts=None, *, allow_stale: bool = False):
         """Solve the traced graph (cached on the shared record when called
         with default hardware/options, so repeated traces and the serving
-        engine reuse one plan)."""
+        engine reuse one plan).  ``allow_stale`` flows to the plan store:
+        a plan priced for an older hardware profile is accepted (marked
+        ``stale_hw``) so the caller can refresh it off the hot path."""
         from ..core.solver import solve
         if not self.graph.statements:
             return None
@@ -151,7 +153,7 @@ class TracedFunction:
         if opts is None:
             from ..core.solver import SolverOptions
             opts = SolverOptions(time_budget_s=20.0)
-        plan = solve(self.graph, hw, opts)
+        plan = solve(self.graph, hw, opts, allow_stale=allow_stale)
         if default:
             self.record.plan_cache["default"] = plan
         return plan

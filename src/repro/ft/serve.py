@@ -93,7 +93,11 @@ class ChaosPlan:
     * ``batch_fail_at`` — the i-th coalesced batch for an entry raises
       before the batched program is submitted, forcing the batcher's
       per-request fallback path (every batchmate re-submitted alone
-      through its own breaker).
+      through its own breaker);
+    * ``refresh_fail_at`` — the i-th background stale-plan refresh
+      attempt for an entry raises before re-solving (a solver/store
+      failure stand-in), exercising the refresh loop's backoff while the
+      stale plan keeps serving.
 
     ``only`` restricts injection to one entry name so multi-entry engines
     can break a single workload.  ``events`` records every injection as
@@ -105,6 +109,7 @@ class ChaosPlan:
     corrupt_at: tuple[int, ...] = ()
     slow_at: tuple[int, ...] = ()
     batch_fail_at: tuple[int, ...] = ()
+    refresh_fail_at: tuple[int, ...] = ()
     slow_s: float = 0.0
     slow_clone: int | None = None
     only: str | None = None
@@ -118,6 +123,7 @@ class ChaosPlan:
             "corrupt": set(self.corrupt_at),
             "slow": set(self.slow_at),
             "batch": set(self.batch_fail_at),
+            "refresh": set(self.refresh_fail_at),
         }
         self.events: list[tuple[str, str, int]] = []
 
@@ -153,6 +159,14 @@ class ChaosPlan:
         re-submit every batchmate individually through its own breaker."""
         if self._fires("batch", name):
             raise InjectedFailure(f"injected batch failure for {name!r}")
+
+    def on_refresh(self, name: str) -> None:
+        """Hook before a background stale-plan refresh attempt re-solves;
+        raises on an injected refresh failure — the engine must keep
+        serving the stale plan and retry with backoff."""
+        if self._fires("refresh", name):
+            raise InjectedFailure(
+                f"injected plan-refresh failure for {name!r}")
 
     def corrupt_outputs(self, name: str, outputs: dict) -> dict:
         """Hook after execution: on an injected miscompile, return the

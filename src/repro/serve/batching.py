@@ -95,6 +95,11 @@ class BatchConfig:
     deadline_margin_s: float = 0.005
     #: Latency samples kept for the p50/p99 stats window.
     stats_window: int = 4096
+    #: Pre-solve the whole bucket ladder in the background at
+    #: ``register_function`` time, so the first coalesced flush never
+    #: pays a trace/solve on the request path.  With a warm plan store
+    #: the presolve itself is near-free (fingerprint-keyed store hits).
+    presolve: bool = True
 
     def __post_init__(self):
         self.buckets = bucket_sizes(self.max_batch)
@@ -465,7 +470,22 @@ class Batcher:
         with self._cond:
             return self._bucket_entries.setdefault(key, bname)
 
-    # -- warmup / teardown / stats ----------------------------------------
+    # -- presolve / warmup / teardown / stats ------------------------------
+    def presolve(self, name: str, buckets=None, stop=None) -> int:
+        """Register (trace + solve) every bucket entry for ``name`` without
+        executing anything — the solve-only half of :meth:`warmup`, cheap
+        enough to run at registration time off the flush path.  ``stop``
+        (a ``threading.Event``) aborts between buckets so engine shutdown
+        is never held behind remaining solves.  Returns the number of
+        buckets that became available."""
+        n = 0
+        for b in (buckets or self.buckets):
+            if stop is not None and stop.is_set():
+                break
+            if self._ensure_bucket(name, b):
+                n += 1
+        return n
+
     def warmup(self, name: str, buckets=None) -> float:
         """Pre-register and warm every bucket entry for ``name`` — plus
         the per-bucket stacker/splitter jits — so the first coalesced

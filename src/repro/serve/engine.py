@@ -55,7 +55,7 @@ from ..ft.serve import (BreakerState, ChaosPlan, CircuitBreaker,
                         DeadlineExceeded, EngineOverloaded, MiscompileError)
 from ..ft.straggler import StragglerConfig, StragglerMonitor
 from ..models import model as M
-from .batching import BatchConfig, Batcher
+from .batching import BATCH_SEP, BatchConfig, Batcher
 
 log = logging.getLogger("repro.serve")
 
@@ -72,6 +72,13 @@ class ServeConfig:
     # replica's first compile deserializes instead of re-lowering.
     # (env equivalent: REPRO_COMPILATION_CACHE_DIR)
     compilation_cache_dir: str | None = None
+    # Persistent plan store directory (repro.store): replicas pointed at
+    # the same path share *solved plans* across processes, so a fresh
+    # replica's register_function loads a fingerprint-keyed plan instead
+    # of running the solver sweep.  A plan priced for an older hardware
+    # profile (calibration drift) is still served immediately and
+    # re-solved in the background.  (env: REPRO_PLAN_STORE_DIR)
+    plan_store_dir: str | None = None
     # Bound of the process-wide compiled-program LRU cache; None keeps the
     # current global setting.  (env equivalent: REPRO_PROGRAM_CACHE_SIZE)
     program_cache_size: int | None = None
@@ -262,6 +269,9 @@ class PlanEngine:
         self.sc = sc or ServeConfig()
         if self.sc.compilation_cache_dir:
             enable_persistent_cache(self.sc.compilation_cache_dir)
+        if self.sc.plan_store_dir:
+            from ..store import set_default_dir
+            set_default_dir(self.sc.plan_store_dir)
         if self.sc.program_cache_size is not None:
             set_program_cache_size(self.sc.program_cache_size)
         self._lock = threading.RLock()
@@ -294,6 +304,11 @@ class PlanEngine:
             if self.sc.max_inflight else None)
         self._stop = threading.Event()
         self._clock = time.monotonic
+        # background plan-refresh / bucket-presolve threads (stale store
+        # hits, register-time bucket pre-solving) — joined in shutdown()
+        self._bg_threads: list[threading.Thread] = []
+        self.plan_refreshes = 0       # stale plans re-solved in background
+        self.buckets_presolved = 0    # batch buckets pre-solved at register
         # lazy: the batcher thread only starts on first submit_async()
         self._batcher: Batcher | None = None
         self._batcher_lock = threading.Lock()
@@ -342,7 +357,10 @@ class PlanEngine:
                 raise ValueError(
                     f"{name}: function lowered to an empty graph (pure "
                     "passthrough) — nothing to serve")
-            plan = tf.solve(hw=hw, opts=solver_opts)
+            # allow_stale: with a plan store configured, a plan priced for
+            # an older hardware profile is accepted here (cold solve off
+            # the registration path) and re-solved in the background below
+            plan = tf.solve(hw=hw, opts=solver_opts, allow_stale=True)
         except Exception as exc:
             if not self.sc.fallback:
                 raise
@@ -370,7 +388,74 @@ class PlanEngine:
             self._reg_meta[name] = {
                 "fn": fn, "example_inputs": tuple(example_inputs),
                 "solver_opts": solver_opts, "hw": hw}
+        if plan is not None and getattr(plan, "stale_hw", False):
+            # serve the drifted plan now; re-solve + store update happen
+            # off the request path
+            self._start_plan_refresh(name)
+        bc = self.sc.batching
+        if bc is not None and bc.presolve and BATCH_SEP not in name:
+            self._start_bucket_presolve(name)
         return tf
+
+    def _start_plan_refresh(self, name: str) -> None:
+        """Background re-solve for a stale-hardware store hit: solve fresh
+        (bypassing the store read, updating the store write), recompile,
+        revalidate, and atomically swap the entry — requests keep being
+        served by the stale plan until the fresh one is proven."""
+        impl = self._current_impl()
+
+        def _loop():
+            from ..ft.serve import BackoffPolicy
+            policy = BackoffPolicy(
+                base_s=self.sc.resolve_backoff_s,
+                mult=self.sc.resolve_backoff_mult,
+                max_s=self.sc.resolve_backoff_max_s,
+                retries=self.sc.resolve_max_retries)
+            for delay in policy.delays():
+                if self._stop.wait(delay):
+                    return
+                with self._lock:
+                    if name not in self._registry:
+                        return          # unregistered while refreshing
+                try:
+                    chaos = self.sc.chaos
+                    if chaos is not None:
+                        chaos.on_refresh(name)
+                    self._rebuild(name, impl)
+                except Exception as exc:
+                    log.info("%s: stale-plan refresh attempt failed (%s)",
+                             name, exc)
+                    continue
+                with self._lock:
+                    self.plan_refreshes += 1
+                log.info("%s: stale plan refreshed in background", name)
+                return
+
+        t = threading.Thread(target=_loop, daemon=True,
+                             name=f"repro-plan-refresh-{name}")
+        with self._lock:
+            self._bg_threads.append(t)
+        t.start()
+
+    def _start_bucket_presolve(self, name: str) -> None:
+        """Pre-solve the continuous-batching bucket ladder for ``name`` at
+        registration time, so the first coalesced flush pays no trace or
+        solve (with a warm plan store it pays neither even cold)."""
+
+        def _loop():
+            try:
+                n = self.batcher().presolve(name, stop=self._stop)
+            except Exception as exc:
+                log.info("%s: bucket presolve failed (%s)", name, exc)
+                return
+            with self._lock:
+                self.buckets_presolved += n
+
+        t = threading.Thread(target=_loop, daemon=True,
+                             name=f"repro-presolve-{name}")
+        with self._lock:
+            self._bg_threads.append(t)
+        t.start()
 
     def unregister(self, name: str) -> None:
         with self._lock:
@@ -406,6 +491,7 @@ class PlanEngine:
         with self._lock:
             threads = [h.recovery_thread for h in self._health.values()
                        if h.recovery_thread is not None]
+            threads += self._bg_threads
         for t in threads:
             t.join(timeout)
 
@@ -858,11 +944,16 @@ class PlanEngine:
             graph = tf.graph
         elif tf is not None:
             # quarantined traced entry: re-solve fresh (calibration may
-            # have drifted; the old plan produced the failure)
+            # have drifted; the old plan produced the failure).  refresh
+            # bypasses the plan-store read — a stored plan is exactly what
+            # must not be trusted here — but still writes the result back,
+            # so the store converges to the re-solved plan for every
+            # replica
             from ..core.solver import SolverOptions, solve
             opts = (meta or {}).get("solver_opts") \
                 or SolverOptions(time_budget_s=20.0)
-            plan = solve(graph, (meta or {}).get("hw"), opts)
+            plan = solve(graph, (meta or {}).get("hw"), opts,
+                         refresh=True)
         # graph-only entries keep their externally supplied plan: the
         # rebuild recompiles and revalidates the program
         prog = compiled_program(graph, plan, impl,
@@ -920,6 +1011,11 @@ class PlanEngine:
                 has_plan=self._registry.get(name, (None, None))[1]
                 is not None)
                 for name, h in self._health.items()}
+            plan_store = {
+                "dir": self.sc.plan_store_dir,
+                "refreshes": self.plan_refreshes,
+                "buckets_presolved": self.buckets_presolved,
+            }
             resilience = {
                 "rejected": self.rejected,
                 "deadline_rejected": self.deadline_rejected,
@@ -954,5 +1050,6 @@ class PlanEngine:
                 "pools": pools,
                 "persistent_cache_dir": persistent_cache_dir(),
                 "trace_cache": trace_cache_stats(),
+                "plan_store": plan_store,
                 "resilience": resilience,
                 **s}

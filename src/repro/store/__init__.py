@@ -1,0 +1,13 @@
+"""Persistent plan store — fingerprint-keyed, checksummed solved plans.
+
+``solve(..., store="auto")`` consults :func:`default_store` (the
+``REPRO_PLAN_STORE_DIR`` env var or the process override set by
+``ServeConfig.plan_store_dir``); with no directory configured the store
+is disabled and solving behaves exactly as before this subsystem
+existed.
+"""
+from .planstore import (DEFAULT_MAX_ENTRIES, PlanStore, default_store,
+                        set_default_dir)
+
+__all__ = ["DEFAULT_MAX_ENTRIES", "PlanStore", "default_store",
+           "set_default_dir"]

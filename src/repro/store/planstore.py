@@ -1,0 +1,182 @@
+"""Persistent plan store: solved plans keyed by content fingerprints.
+
+The solving analogue of the AOT compilation cache (PR 3): a solve is a
+pure function of ``(graph, hardware rates, solver options)``, so its
+result — the :class:`ExecutionPlan` — can be serialized once and reused
+by every replica and restart that asks the same question.  Keys are the
+triple of content fingerprints
+
+    <graph_fp>-<hw_fp>-<opts_fp>.json
+
+(:mod:`repro.core.fingerprint`), so a changed kernel, a recalibrated
+host, or different solver options each miss cleanly instead of serving a
+wrong plan.  Files are written atomically with embedded checksums via
+:mod:`repro.ft.artifacts`; a corrupt entry is quarantined (renamed to
+``*.corrupt``) and treated as a miss, never an error.  The store is
+bounded on disk (oldest-mtime eviction past ``max_entries``).
+
+This module is deliberately JAX-free: a serving replica can answer "do I
+already know this plan?" before paying any runtime import.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import time
+
+from ..core.fingerprint import graph_fingerprint, solver_options_fingerprint
+from ..core.plan import ExecutionPlan
+from ..ft.artifacts import (ArtifactError, atomic_write_json, load_json,
+                            quarantine_file)
+
+SCHEMA_VERSION = 1
+
+#: Default on-disk bound (entries, not bytes — plans are a few KiB each).
+DEFAULT_MAX_ENTRIES = 512
+
+# Process-level default-directory override (set by ServeConfig); the
+# REPRO_PLAN_STORE_DIR environment variable is the ambient fallback.
+_DIR_OVERRIDE: str | None = None
+
+
+def set_default_dir(path: str | None) -> None:
+    """Set (or clear, with ``None``) the process-wide default store
+    directory — ``ServeConfig.plan_store_dir`` routes here so one engine
+    config enables the store for every ``solve(store="auto")`` in the
+    process, batcher bucket solves included."""
+    global _DIR_OVERRIDE
+    _DIR_OVERRIDE = path
+
+
+def default_store() -> "PlanStore | None":
+    """The env-configured store (``REPRO_PLAN_STORE_DIR``), or the
+    process override, or ``None`` — plan persistence is strictly opt-in,
+    so the default solver behavior is byte-identical to a storeless one.
+    """
+    root = _DIR_OVERRIDE or os.environ.get("REPRO_PLAN_STORE_DIR")
+    if not root:
+        return None
+    return PlanStore(root)
+
+
+def _max_entries_from_env() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_PLAN_STORE_SIZE", "")))
+    except ValueError:
+        return DEFAULT_MAX_ENTRIES
+
+
+class PlanStore:
+    """One directory of fingerprint-keyed, checksummed plan files."""
+
+    def __init__(self, root: str, max_entries: int | None = None):
+        self.root = root
+        self.max_entries = max_entries if max_entries is not None \
+            else _max_entries_from_env()
+        self.hits = 0
+        self.stale_hits = 0
+        self.misses = 0
+        self.writes = 0
+        self.corrupt = 0
+
+    # -- keys -------------------------------------------------------------
+    @staticmethod
+    def key(graph, hw, opts) -> tuple[str, str, str]:
+        return (graph_fingerprint(graph), hw.fingerprint(),
+                solver_options_fingerprint(opts))
+
+    def _path(self, gfp: str, hfp: str, ofp: str) -> str:
+        return os.path.join(self.root, f"{gfp}-{hfp}-{ofp}.json")
+
+    # -- load -------------------------------------------------------------
+    def load(self, graph, hw, opts, *,
+             allow_stale: bool = False) -> ExecutionPlan | None:
+        """The stored plan for this exact key, or ``None``.
+
+        With ``allow_stale=True`` a miss additionally scans for the same
+        ``(graph, opts)`` under any *other* hardware fingerprint — the
+        calibration-drift case — and returns the freshest such plan with
+        ``stale_hw=True`` so the caller can serve it now and re-solve in
+        the background instead of blocking.
+        """
+        gfp, hfp, ofp = self.key(graph, hw, opts)
+        plan = self._read(self._path(gfp, hfp, ofp))
+        if plan is not None:
+            self.hits += 1
+            return plan
+        if allow_stale:
+            pattern = os.path.join(self.root, f"{gfp}-*-{ofp}.json")
+            stale = sorted(glob.glob(pattern),
+                           key=lambda p: os.path.getmtime(p), reverse=True)
+            for path in stale:
+                plan = self._read(path)
+                if plan is not None:
+                    plan.stale_hw = True
+                    self.stale_hits += 1
+                    return plan
+        self.misses += 1
+        return None
+
+    def _read(self, path: str) -> ExecutionPlan | None:
+        if not os.path.exists(path):
+            return None
+        try:
+            payload = load_json(path, require_checksum=True)
+            if payload.get("schema") != SCHEMA_VERSION:
+                raise ArtifactError(f"plan store schema "
+                                    f"{payload.get('schema')!r} != "
+                                    f"{SCHEMA_VERSION}")
+            plan = ExecutionPlan.from_jsonable(payload["plan"])
+        except (ArtifactError, KeyError, TypeError, ValueError) as exc:
+            # torn write, bit rot, stale schema, hand-edited file: move it
+            # aside (-> *.corrupt) so the caller re-solves and overwrites
+            self.corrupt += 1
+            quarantine_file(path, reason=repr(exc))
+            return None
+        plan.store_hit = True
+        # a hit performs no sweep: evaluations are a property of *this*
+        # solve call, and this call did none
+        plan.n_evaluated = 0
+        return plan
+
+    # -- save -------------------------------------------------------------
+    def save(self, graph, hw, opts, plan: ExecutionPlan) -> str | None:
+        """Persist atomically (tmp + rename, checksummed); returns the
+        path, or ``None`` for plans not worth keeping (no configs)."""
+        if not plan.configs:
+            return None
+        gfp, hfp, ofp = self.key(graph, hw, opts)
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "graph_fp": gfp, "hw_fp": hfp, "opts_fp": ofp,
+            "created_s": time.time(),
+            "plan": plan.to_jsonable(),
+        }
+        os.makedirs(self.root, exist_ok=True)
+        path = atomic_write_json(self._path(gfp, hfp, ofp), payload,
+                                 checksum=True)
+        self.writes += 1
+        self._evict()
+        return path
+
+    def _evict(self) -> None:
+        entries = glob.glob(os.path.join(self.root, "*.json"))
+        if len(entries) <= self.max_entries:
+            return
+        entries.sort(key=lambda p: os.path.getmtime(p))
+        for path in entries[:len(entries) - self.max_entries]:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+
+    # -- introspection ----------------------------------------------------
+    def __len__(self) -> int:
+        return len(glob.glob(os.path.join(self.root, "*.json")))
+
+    def stats(self) -> dict:
+        return {"root": self.root, "entries": len(self),
+                "hits": self.hits, "stale_hits": self.stale_hits,
+                "misses": self.misses, "writes": self.writes,
+                "corrupt": self.corrupt,
+                "max_entries": self.max_entries}
