@@ -1,0 +1,311 @@
+"""BENCH_obs.json emitter: what observability costs, and that it works.
+
+Three sections, matching the CI gate (``bench_compare.py --obs-fresh``):
+
+* ``overhead`` — steady-state per-call seconds of the ``PlanEngine``
+  submit path with observability ON (span tracing enabled + drift
+  sampling at its default cadence) vs OFF (tracing disabled, drift
+  disabled), sampled in ALTERNATING windows like ``bench_frontend`` so
+  host drift cancels out of the ratio.  ``overhead_ratio`` is the median
+  of per-window-pair on/off ratios; the gate holds it ≤ 1.03 (3% p50
+  budget, retryable — it is a perf number on a shared runner).
+* ``drift`` — a deliberately miscalibrated profile: the entry's
+  predicted latency is forced absurdly low via the
+  ``note_predicted_latency`` seam, so the observed EMA must cross the
+  ratio threshold, fire a drift trigger, and drive the existing
+  background re-solve + plan-store refresh path to completion.
+  Correctness-tagged in the gate: drift that cannot fire means the
+  feedback loop is dead.
+* ``export`` — the Prometheus text exposition and the Chrome-trace
+  export both validate structurally (every sample line parses, ``le``
+  buckets are cumulative and end at ``+Inf == _count``, every trace
+  event is a complete event with µs timestamps).  Also
+  correctness-tagged.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_obs --out BENCH_obs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+# ---------------------------------------------------------------------------
+# Export validators (shared with scripts/obs_dump.py)
+# ---------------------------------------------------------------------------
+def validate_exposition(text: str) -> list[str]:
+    """Structural check of Prometheus text-format output; [] when valid."""
+    problems: list[str] = []
+    typed: dict[str, str] = {}
+    samples: dict[str, float] = {}
+    for ln in text.strip().split("\n"):
+        if not ln:
+            problems.append("blank line in exposition")
+            continue
+        if ln.startswith("# TYPE "):
+            _, _, rest = ln.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            if kind not in ("counter", "gauge", "histogram", "untyped"):
+                problems.append(f"unknown TYPE {kind!r} for {name}")
+            typed[name] = kind
+            continue
+        if ln.startswith("#"):
+            continue
+        try:
+            key, value = ln.rsplit(" ", 1)
+            samples[key] = float(value)
+        except ValueError:
+            problems.append(f"unparseable sample line {ln!r}")
+            continue
+    if not typed:
+        problems.append("no TYPE lines")
+    if not samples:
+        problems.append("no sample lines")
+    for name, kind in typed.items():
+        if kind != "histogram":
+            continue
+        # cumulative buckets: the +Inf bucket must equal _count
+        for key, v in samples.items():
+            if key.startswith(f"{name}_bucket") and 'le="+Inf"' in key:
+                count_key = _strip_le(key, name)
+                if samples.get(count_key) != v:
+                    problems.append(
+                        f"{name}: +Inf bucket {v} != _count "
+                        f"{samples.get(count_key)}")
+    return problems
+
+
+def _strip_le(bucket_key: str, name: str) -> str:
+    """``name_bucket{a="b",le="+Inf"}`` -> the matching ``name_count`` key."""
+    labels = bucket_key[len(name) + len("_bucket"):]
+    if labels.startswith("{"):
+        pairs = [p for p in labels[1:-1].split(",")
+                 if not p.startswith("le=")]
+        labels = "{" + ",".join(pairs) + "}" if pairs else ""
+    return f"{name}_count{labels}"
+
+
+def validate_chrome_trace(doc: dict) -> list[str]:
+    """Structural check of a Chrome-trace JSON object; [] when valid."""
+    problems: list[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    for ev in events:
+        if ev.get("ph") != "X":
+            problems.append(f"non-complete event ph={ev.get('ph')!r}")
+        for field in ("name", "cat", "ts", "dur", "pid", "tid"):
+            if field not in ev:
+                problems.append(f"event missing {field!r}: {ev}")
+                break
+        if ev.get("ts", -1) < 0 or ev.get("dur", -1) < 0:
+            problems.append(f"negative ts/dur: {ev}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Sections
+# ---------------------------------------------------------------------------
+def _workload(seed: int = 0):
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.standard_normal((128, 256)).astype(np.float32) * .05)
+    w2 = jnp.asarray(rng.standard_normal((256, 128)).astype(np.float32) * .05)
+    x = jnp.asarray(rng.standard_normal((32, 128)).astype(np.float32))
+
+    def mlp(v, a, b):
+        return jnp.maximum(v @ a, 0.0) @ b
+
+    return mlp, (x, w1, w2)
+
+
+def bench_overhead(*, budget: float, batch: int, samples: int,
+                   seed: int) -> dict:
+    import jax
+
+    from repro.core.solver import SolverOptions
+    from repro.obs import DriftConfig
+    from repro.obs import configure as configure_tracing
+    from repro.obs import tracer
+    from repro.serve import PlanEngine, ServeConfig
+
+    fn, args = _workload(seed)
+    opts = SolverOptions(time_budget_s=budget)
+    # One engine, one compiled program.  Drift sampling is disabled: a
+    # drift-sampled call syncs the device to measure wall time — a
+    # by-design 1-in-16 cost priced by the ``drift`` section, not
+    # hot-path overhead.  This section prices exactly what the gate
+    # budgets — span tracing + the registry-backed counters, on vs off —
+    # by alternating the tracer toggle CALL BY CALL, so host-contention
+    # drift hits adjacent off/on calls alike and the median per-pair
+    # ratio isolates the obs cost from runner noise.
+    eng = PlanEngine(sc=ServeConfig(drift=DriftConfig(enabled=False)))
+    assert eng.register_function("w", fn, args, solver_opts=opts)
+
+    def timed_submit(enabled: bool) -> float:
+        configure_tracing(enabled=enabled)
+        t0 = time.perf_counter()
+        out = eng.submit("w", args)
+        dt = time.perf_counter() - t0
+        jax.block_until_ready(list(out.values()) if isinstance(out, dict)
+                              else out)
+        return dt
+
+    n = batch * samples
+    for _ in range(20):                 # compile + warm both toggles
+        timed_submit(False)
+        timed_submit(True)
+    off_t: list[float] = []
+    on_t: list[float] = []
+    for _ in range(n):
+        off_t.append(timed_submit(False))
+        on_t.append(timed_submit(True))
+    configure_tracing(enabled=False)
+    pair_ratios = sorted(o / f for o, f in zip(on_t, off_t))
+    ratio = pair_ratios[len(pair_ratios) // 2]
+    spans = tracer().stats()
+    eng.shutdown()
+    off_s, on_s = sorted(off_t), sorted(on_t)
+    return {
+        "off_p50_s": off_s[len(off_s) // 2],
+        "on_p50_s": on_s[len(on_s) // 2],
+        "overhead_ratio": round(ratio, 4),
+        "pair_ratio_p10": round(pair_ratios[len(pair_ratios) // 10], 4),
+        "pair_ratio_p90": round(pair_ratios[9 * len(pair_ratios) // 10], 4),
+        "pairs": n,
+        "spans_recorded": spans["recorded"],
+    }
+
+
+def bench_drift(*, budget: float, seed: int, timeout_s: float = 120.0) -> dict:
+    from repro.core.solver import SolverOptions
+    from repro.obs import DriftConfig
+    from repro.serve import PlanEngine, ServeConfig
+
+    fn, args = _workload(seed)
+    sc = ServeConfig(drift=DriftConfig(sample_every=1, min_samples=3,
+                                       ratio_threshold=2.0,
+                                       cooldown_s=3600.0))
+    eng = PlanEngine(sc=sc)
+    assert eng.register_function(
+        "w", fn, args, solver_opts=SolverOptions(time_budget_s=budget))
+    predicted = eng.stats()["drift"]["entries"]["w"]["predicted_s"]
+    # the deliberately miscalibrated profile: a prediction no real
+    # dispatch can meet, so the observed EMA must cross the band
+    eng.note_predicted_latency("w", 1e-12)
+    for _ in range(8):
+        eng.submit("w", args)
+    st = eng.stats()["drift"]
+    triggered = st["triggers"] >= 1
+    # snapshot the entry BEFORE the background refresh lands: a completed
+    # refresh re-notes the fresh plan's prediction, resetting the EMA
+    entry = st["entries"]["w"]
+    refreshed = False
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if eng.plan_refreshes >= 1:
+            refreshed = True
+            break
+        time.sleep(0.05)
+    invariant_failures = eng.check_invariants()
+    eng.shutdown()
+    return {
+        "solver_predicted_s": predicted,
+        "seeded_predicted_s": 1e-12,
+        "observed_ema_s": entry["observed_ema_s"],
+        "ratio": entry["ratio"],
+        "triggered": triggered,
+        "refresh_completed": refreshed,
+        "triggers": st["triggers"],
+        "invariant_failures": invariant_failures,
+    }
+
+
+def bench_export(*, budget: float, seed: int) -> dict:
+    from repro.core.solver import SolverOptions
+    from repro.obs import chrome_trace
+    from repro.obs import configure as configure_tracing
+    from repro.obs import tracer
+    from repro.serve import PlanEngine, ServeConfig
+
+    fn, args = _workload(seed)
+    tracer().clear()
+    configure_tracing(enabled=True)
+    try:
+        eng = PlanEngine(sc=ServeConfig())
+        assert eng.register_function(
+            "w", fn, args, solver_opts=SolverOptions(time_budget_s=budget))
+        for _ in range(4):
+            eng.submit("w", args)
+        spans = tracer().snapshot()
+        doc = json.loads(json.dumps(chrome_trace(spans)))
+        trace_problems = validate_chrome_trace(doc)
+        text = eng.metrics.expose()
+        expo_problems = validate_exposition(text)
+        cats = sorted({f"{s.cat}/{s.name.split('/')[0]}" for s in spans})
+        eng.shutdown()
+    finally:
+        configure_tracing(enabled=False)
+    return {
+        "n_spans": len(spans),
+        "span_categories": cats,
+        "trace_valid": not trace_problems,
+        "trace_problems": trace_problems,
+        "exposition_valid": not expo_problems,
+        "exposition_problems": expo_problems,
+        "exposition_lines": len(text.strip().split("\n")),
+    }
+
+
+def bench(*, budget: float = 2.0, batch: int = 30, samples: int = 9,
+          seed: int = 0) -> dict:
+    import jax
+    return {
+        "benchmark": "obs",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "overhead": bench_overhead(budget=budget, batch=batch,
+                                   samples=samples, seed=seed),
+        "drift": bench_drift(budget=budget, seed=seed),
+        "export": bench_export(budget=budget, seed=seed),
+    }
+
+
+def emit(path: str, **kw) -> dict:
+    result = bench(**kw)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--budget", type=float, default=2.0)
+    ap.add_argument("--batch", type=int, default=30)
+    ap.add_argument("--samples", type=int, default=9)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args()
+    result = emit(args.out, budget=args.budget, batch=args.batch,
+                  samples=args.samples)
+    ov, dr, ex = result["overhead"], result["drift"], result["export"]
+    print(f"overhead: off={ov['off_p50_s'] * 1e6:8.1f}us "
+          f"on={ov['on_p50_s'] * 1e6:8.1f}us "
+          f"ratio={ov['overhead_ratio']:.4f} "
+          f"(spans recorded: {ov['spans_recorded']})")
+    print(f"drift:    triggered={dr['triggered']} "
+          f"refresh_completed={dr['refresh_completed']} "
+          f"ratio={dr['ratio'] or 0:.3g}")
+    print(f"export:   spans={ex['n_spans']} "
+          f"trace_valid={ex['trace_valid']} "
+          f"exposition_valid={ex['exposition_valid']} "
+          f"({ex['exposition_lines']} lines)")
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,21 @@ absolute floors, no baseline):
 * a warm engine ``register_function`` against the same store must also
   hit with zero evaluations (correctness-tagged).
 
+Observability gate (BENCH_obs.json, via ``--obs-fresh`` —
+fresh-run-only, absolute floors, no baseline):
+
+* the hot-path overhead of span tracing + registry-backed metrics
+  (``overhead.overhead_ratio``, a per-call-paired same-run median,
+  robust to runner speed) must stay at or below
+  ``--obs-overhead-ceiling`` (default 1.03, the 3% p50 budget) —
+  a perf number on a shared runner, so retryable;
+* the drift detector must have fired on the deliberately miscalibrated
+  profile AND driven the background plan refresh to completion, with no
+  accounting invariant violated (correctness-tagged — a dead feedback
+  loop or broken closure is never retried);
+* the Prometheus text exposition and the Chrome-trace export must both
+  validate structurally (correctness-tagged).
+
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \
         --max-kernel-regress 0.10 --max-gmean-regress 0.15 \
@@ -154,6 +169,17 @@ def load_solver(path: str) -> dict:
     if data.get("benchmark") != "solver_parallel_store":
         raise SystemExit(
             f"{path}: not a BENCH_solver.json "
+            f"(benchmark={data.get('benchmark')!r})"
+        )
+    return data
+
+
+def load_obs(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("benchmark") != "obs":
+        raise SystemExit(
+            f"{path}: not a BENCH_obs.json "
             f"(benchmark={data.get('benchmark')!r})"
         )
     return data
@@ -595,6 +621,54 @@ def compare_chaos(
     return failures
 
 
+def compare_obs(fresh: dict, *, overhead_ceiling: float) -> list[str]:
+    """Absolute gates on a fresh BENCH_obs.json (no baseline file)."""
+    failures: list[str] = []
+    ov = fresh.get("overhead", {})
+    ratio = float(ov.get("overhead_ratio", float("inf")))
+    if ratio > overhead_ceiling:
+        failures.append(
+            f"obs/overhead: tracing+metrics on costs {ratio:.4f}x vs off, "
+            f"over the {overhead_ceiling:.2f} ceiling "
+            f"(p50 off={ov.get('off_p50_s', 0) * 1e6:.1f}us "
+            f"on={ov.get('on_p50_s', 0) * 1e6:.1f}us)"
+        )
+    if not ov.get("spans_recorded", 0):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/overhead: no spans were recorded in "
+            f"the 'on' windows — the bench measured nothing"
+        )
+    dr = fresh.get("drift", {})
+    if not dr.get("triggered", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/drift: the deliberately miscalibrated "
+            f"profile did not fire the drift detector "
+            f"(ratio={dr.get('ratio')})"
+        )
+    if not dr.get("refresh_completed", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/drift: drift fired but the background "
+            f"plan refresh never completed"
+        )
+    if dr.get("invariant_failures"):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/drift: accounting invariants violated "
+            f"under drift-triggered refresh: {dr['invariant_failures']}"
+        )
+    ex = fresh.get("export", {})
+    if not ex.get("exposition_valid", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/export: Prometheus exposition invalid "
+            f"({ex.get('exposition_problems', ['missing section'])[:3]})"
+        )
+    if not ex.get("trace_valid", False):
+        failures.append(
+            f"{CORRECTNESS_TAG} obs/export: Chrome-trace export invalid "
+            f"({ex.get('trace_problems', ['missing section'])[:3]})"
+        )
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -661,6 +735,13 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--solver-speedup-floor", type=float, default=1.43)
     ap.add_argument("--solver-warm-ms", type=float, default=50.0)
+    ap.add_argument(
+        "--obs-fresh",
+        default=None,
+        help="freshly measured BENCH_obs.json (absolute floors, "
+        "no baseline)",
+    )
+    ap.add_argument("--obs-overhead-ceiling", type=float, default=1.03)
     args = ap.parse_args(argv)
 
     if (args.baseline is None) != (args.fresh is None):
@@ -682,12 +763,14 @@ def main(argv: list[str] | None = None) -> int:
         and args.chaos_fresh is None
         and args.batching_fresh is None
         and args.solver_fresh is None
+        and args.obs_fresh is None
     ):
         ap.error(
             "nothing to compare: give BASELINE FRESH and/or "
             "--concurrent-baseline/--concurrent-fresh and/or "
             "--frontend-baseline/--frontend-fresh and/or --chaos-fresh "
-            "and/or --batching-fresh and/or --solver-fresh"
+            "and/or --batching-fresh and/or --solver-fresh and/or "
+            "--obs-fresh"
         )
 
     failures: list[str] = []
@@ -817,6 +900,34 @@ def main(argv: list[str] | None = None) -> int:
         print(f"chaos/artifacts {chaos.get('artifact_recovery')}")
         failures += compare_chaos(
             chaos, availability_floor=args.chaos_availability_floor
+        )
+
+    if args.obs_fresh is not None:
+        obs = load_obs(args.obs_fresh)
+        ov = obs.get("overhead", {})
+        dr = obs.get("drift", {})
+        ex = obs.get("export", {})
+        print(
+            f"obs/overhead ratio={ov.get('overhead_ratio', 0):.4f} "
+            f"off_p50={ov.get('off_p50_s', 0) * 1e6:.1f}us "
+            f"on_p50={ov.get('on_p50_s', 0) * 1e6:.1f}us "
+            f"pairs={ov.get('pairs')} "
+            f"spans={ov.get('spans_recorded')}"
+        )
+        print(
+            f"obs/drift    triggered={dr.get('triggered')} "
+            f"refresh_completed={dr.get('refresh_completed')} "
+            f"triggers={dr.get('triggers')} "
+            f"ratio={dr.get('ratio') or 0:.3g}"
+        )
+        print(
+            f"obs/export   exposition_valid={ex.get('exposition_valid')} "
+            f"trace_valid={ex.get('trace_valid')} "
+            f"spans={ex.get('n_spans')} "
+            f"lines={ex.get('exposition_lines')}"
+        )
+        failures += compare_obs(
+            obs, overhead_ceiling=args.obs_overhead_ceiling
         )
 
     if failures:

@@ -39,6 +39,7 @@ import random
 import sys
 import time
 
+from ..obs import tracer as _obs_tracer
 from .costmodel import (_access_of, footprint_elems, n_transfers,
                         plan_latency, task_report)
 from .fusion import FusedGraph, FusedTask, fuse
@@ -637,16 +638,19 @@ def _parallel_argmin(pool: "_SweepPool", tid, base: dict, assign,
     budget = max(deadline - time.monotonic(), 0.25)
     chunk = max(8, -(-len(cands) // (pool.workers * 2)))
     try:
-        futs = [pool.submit(_w_eval_chunk,
-                            (tid, base, assign, cands[s:s + chunk], bound,
-                             budget))
-                for s in range(0, len(cands), chunk)]
-        best_lat, best_idx, n_eval = float("inf"), -1, 0
-        for f in futs:
-            lat, idx, ne = f.result()
-            n_eval += ne
-            if lat < best_lat:
-                best_lat, best_idx = lat, idx
+        with _obs_tracer().span("chunk_merge", "solver", task=tid,
+                                candidates=len(cands), chunk=chunk) as sp:
+            futs = [pool.submit(_w_eval_chunk,
+                                (tid, base, assign, cands[s:s + chunk], bound,
+                                 budget))
+                    for s in range(0, len(cands), chunk)]
+            best_lat, best_idx, n_eval = float("inf"), -1, 0
+            for f in futs:
+                lat, idx, ne = f.result()
+                n_eval += ne
+                if lat < best_lat:
+                    best_lat, best_idx = lat, idx
+            sp.set(chunks=len(futs), n_evaluated=n_eval)
     except (concurrent.futures.process.BrokenProcessPool, OSError):
         pool.alive = False
         return None
@@ -814,16 +818,23 @@ def solve(graph: TaskGraph, hw: Hardware | None = None,
             return hit
 
     stats = SolveStats()
-    fg = fuse(graph)
+    tr = _obs_tracer()
+    with tr.span("fuse", "solver", statements=len(graph.statements)) as sp:
+        fg = fuse(graph)
+        sp.set(fused_tasks=len(fg.tasks))
     pool = None
     if opts.effective_workers > 1 and \
             _sweep_units(fg, opts) >= opts.min_parallel_units:
         pool = _pool_for(fg, hw, opts)
     try:
-        if caps.joint_search:
-            plan = _solve_joint(fg, hw, opts, stats, deadline, pool)
-        else:
-            plan = _solve_decomposed(fg, hw, opts, stats, deadline, pool)
+        with tr.span("enumerate", "solver", mode=opts.mode,
+                     joint=caps.joint_search,
+                     workers=0 if pool is None else pool.workers) as sp:
+            if caps.joint_search:
+                plan = _solve_joint(fg, hw, opts, stats, deadline, pool)
+            else:
+                plan = _solve_decomposed(fg, hw, opts, stats, deadline, pool)
+            sp.set(n_evaluated=stats.n_evaluated, timed_out=stats.timed_out)
     finally:
         if pool is not None:
             pool.shutdown()

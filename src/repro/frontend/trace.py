@@ -30,6 +30,7 @@ from collections import OrderedDict
 import jax
 import jax.numpy as jnp
 
+from ..obs import tracer as _obs_tracer
 from .executable import TracedFunction
 from .lowering import (LoweredJaxpr, fingerprint_jaxpr, flatten_jaxpr,
                        graph_name_of, lower_flat)
@@ -207,17 +208,22 @@ def trace(fn, *example_args, name: str | None = None) -> TracedFunction:
         trees.append(out_tree)
         return flat_out
 
-    closed = jax.make_jaxpr(flat_fn)(*flat)
-    out_tree = trees[-1]
-    flat_eqns, resolved_outs, sub_consts = flatten_jaxpr(closed.jaxpr)
-    fp = fingerprint_jaxpr(closed, sub_consts)
-    rec = _CACHE.get(fp)
-    if rec is None:
-        # put_if_absent: if a concurrent trace of the same structure wins
-        # the race, keep ITS record so the shared plan cache stays shared
-        rec = _CACHE.put_if_absent(
-            fp, lower_flat(closed, flat_eqns, resolved_outs, sub_consts,
-                           fp))
+    with _obs_tracer().span("trace", "frontend",
+                            fn=getattr(fn, "__name__", "fn")) as sp:
+        closed = jax.make_jaxpr(flat_fn)(*flat)
+        out_tree = trees[-1]
+        flat_eqns, resolved_outs, sub_consts = flatten_jaxpr(closed.jaxpr)
+        fp = fingerprint_jaxpr(closed, sub_consts)
+        rec = _CACHE.get(fp)
+        cached = rec is not None
+        if rec is None:
+            # put_if_absent: if a concurrent trace of the same structure
+            # wins the race, keep ITS record so the shared plan cache
+            # stays shared
+            rec = _CACHE.put_if_absent(
+                fp, lower_flat(closed, flat_eqns, resolved_outs, sub_consts,
+                               fp))
+        sp.set(cached=cached, eqns=len(flat_eqns))
     assert rec.graph.name == graph_name_of(fp)
     return TracedFunction(
         fn=fn, record=rec, const_values=tuple(closed.consts),

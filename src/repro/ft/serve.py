@@ -231,7 +231,8 @@ class CircuitBreaker:
     """
 
     def __init__(self, threshold: int = 3, reset_s: float = 30.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 on_transition: Callable[[str], None] | None = None):
         self.threshold = max(1, threshold)
         self.reset_s = reset_s
         self.clock = clock
@@ -241,6 +242,10 @@ class CircuitBreaker:
         self._opened_at = 0.0
         self._probing = False
         self.transitions: list[str] = []
+        # observability seam: the engine hangs a metrics-registry counter
+        # here (repro_breaker_transitions_total{entry,state}) so breaker
+        # flips are scrapeable, not only visible in stats()
+        self._on_transition = on_transition
 
     @property
     def state(self) -> BreakerState:
@@ -251,6 +256,8 @@ class CircuitBreaker:
         if state != self._state:
             self._state = state
             self.transitions.append(state.value)
+            if self._on_transition is not None:
+                self._on_transition(state.value)
 
     def allow(self) -> bool:
         """May this request try the optimized path?"""

@@ -1,0 +1,172 @@
+"""Cost-model drift detection.
+
+The solver annotates every :class:`ExecutionPlan` with its predicted
+steady-state latency (``plan.latency_s``).  The serving layer samples
+observed per-entry latency on the optimized path and folds it into an
+EMA; when the observed/predicted ratio leaves the configured band for
+long enough, the entry is declared *drifted* and the engine triggers
+the existing background re-solve + plan-store refresh path (PR 7/9) so
+the plan is re-priced against reality.
+
+Pure stdlib; the clock is injectable so tests can drive cooldown logic
+deterministically.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+__all__ = ["DriftConfig", "DriftEvent", "DriftDetector"]
+
+
+@dataclass(frozen=True)
+class DriftConfig:
+    """Knobs for the drift detector.
+
+    ``sample_every``: observe one in N optimized requests (sampling keeps
+    the device sync needed for wall-time off the common path).
+    ``ratio_threshold``: drift fires when ``ema/predicted`` falls outside
+    ``[1/ratio_threshold, ratio_threshold]``.
+    ``min_samples``: EMA must have at least this many observations first.
+    ``cooldown_s``: min seconds between triggers per entry, so one noisy
+    profile cannot spam background re-solves.
+    """
+
+    enabled: bool = True
+    sample_every: int = 16
+    alpha: float = 0.2
+    ratio_threshold: float = 8.0
+    min_samples: int = 12
+    cooldown_s: float = 300.0
+
+
+@dataclass
+class DriftEvent:
+    name: str
+    predicted_s: float
+    observed_ema_s: float
+    ratio: float
+    samples: int
+
+
+@dataclass
+class _EntryDrift:
+    predicted_s: float = 0.0
+    ema_s: float = 0.0
+    samples: int = 0
+    triggers: int = 0
+    last_trigger_at: float = float("-inf")
+    calls: int = 0  # sampling counter
+
+
+class DriftDetector:
+    """Per-entry EMA of observed latency vs. the solver's prediction."""
+
+    def __init__(self, config: DriftConfig | None = None, clock=time.monotonic):
+        self.config = config or DriftConfig()
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._entries: dict[str, _EntryDrift] = {}
+
+    def _entry(self, name: str) -> _EntryDrift:
+        e = self._entries.get(name)
+        if e is None:
+            e = self._entries[name] = _EntryDrift()
+        return e
+
+    # -- feeding --------------------------------------------------------
+    def note_predicted(self, name: str, latency_s: float) -> None:
+        """Record the cost model's prediction for an entry's plan.
+        Re-noting (after a re-solve) resets the EMA so fresh plans are
+        judged on fresh observations."""
+        with self._lock:
+            e = self._entry(name)
+            if e.predicted_s != latency_s:
+                e.predicted_s = float(latency_s)
+                e.ema_s = 0.0
+                e.samples = 0
+
+    def should_sample(self, name: str) -> bool:
+        """Cheap per-request check: True one in ``sample_every`` calls."""
+        cfg = self.config
+        if not cfg.enabled:
+            return False
+        every = max(1, int(cfg.sample_every))
+        with self._lock:
+            e = self._entry(name)
+            e.calls += 1
+            return e.calls % every == 0
+
+    def observe(self, name: str, observed_s: float) -> DriftEvent | None:
+        """Fold one observed latency in; return a DriftEvent when the
+        entry just crossed the drift threshold (and cooldown allows)."""
+        cfg = self.config
+        if not cfg.enabled or observed_s <= 0.0:
+            return None
+        now = self._clock()
+        with self._lock:
+            e = self._entry(name)
+            if e.samples == 0:
+                e.ema_s = float(observed_s)
+            else:
+                e.ema_s += cfg.alpha * (observed_s - e.ema_s)
+            e.samples += 1
+            if e.predicted_s <= 0.0 or e.samples < cfg.min_samples:
+                return None
+            ratio = e.ema_s / e.predicted_s
+            thr = cfg.ratio_threshold
+            if 1.0 / thr <= ratio <= thr:
+                return None
+            if now - e.last_trigger_at < cfg.cooldown_s:
+                return None
+            e.last_trigger_at = now
+            e.triggers += 1
+            return DriftEvent(
+                name=name,
+                predicted_s=e.predicted_s,
+                observed_ema_s=e.ema_s,
+                ratio=ratio,
+                samples=e.samples,
+            )
+
+    def forget(self, name: str) -> None:
+        """Drop an entry's state (engine ``unregister``)."""
+        with self._lock:
+            self._entries.pop(name, None)
+
+    # -- reading --------------------------------------------------------
+    def stats(self) -> dict:
+        """Plain-dict snapshot (only the detector's own lock)."""
+        cfg = self.config
+        with self._lock:
+            entries = {
+                name: {
+                    "predicted_s": e.predicted_s,
+                    "observed_ema_s": e.ema_s,
+                    "ratio": (e.ema_s / e.predicted_s) if e.predicted_s > 0 else None,
+                    "samples": e.samples,
+                    "drifted": bool(
+                        e.predicted_s > 0
+                        and e.samples >= cfg.min_samples
+                        and not (
+                            1.0 / cfg.ratio_threshold
+                            <= e.ema_s / e.predicted_s
+                            <= cfg.ratio_threshold
+                        )
+                    ),
+                    "triggers": e.triggers,
+                }
+                for name, e in self._entries.items()
+            }
+        return {
+            "enabled": cfg.enabled,
+            "alpha": cfg.alpha,
+            "sample_every": cfg.sample_every,
+            "ratio_threshold": cfg.ratio_threshold,
+            "min_samples": cfg.min_samples,
+            "cooldown_s": cfg.cooldown_s,
+            "triggers": sum(e["triggers"] for e in entries.values()),
+            "entries": entries,
+        }

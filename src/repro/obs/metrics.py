@@ -1,0 +1,363 @@
+"""Counters, gauges, and histograms with Prometheus text exposition.
+
+One :class:`MetricsRegistry` per engine (plus a process-wide default) is
+the single source of truth for serving counters: ``PlanEngine.stats()``
+and ``Batcher.stats()`` read their numbers out of the registry instead
+of hand-rolled dicts, and ``expose()`` renders the same numbers in the
+Prometheus text format for scraping.
+
+Design constraints:
+
+* stdlib only — importable without jax (the solver and tests use it).
+* lock-cheap — one short ``Lock`` per metric family, never held while
+  calling into another subsystem.  ``MetricsRegistry.snapshot()`` takes
+  each family lock in turn and returns plain dicts, so ``stats()`` can
+  assemble its nested output without nested lock acquisition.
+* one definition per counter — re-requesting a name returns the same
+  family; requesting it with a different type raises.
+"""
+
+from __future__ import annotations
+
+import threading
+from bisect import bisect_right
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "default_registry",
+]
+
+# Prometheus-ish latency buckets, in seconds.  Tuned for this stack:
+# steady-state optimized dispatches are O(100us), batch flushes O(10ms),
+# cold solves O(1s).
+DEFAULT_BUCKETS = (
+    100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3,
+    25e-3, 50e-3, 100e-3, 250e-3, 500e-3, 1.0, 2.5, 5.0,
+)
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v) if isinstance(v, float) else str(v)
+
+
+def _escape(v) -> str:
+    return str(v).replace("\\", "\\\\").replace('"', '\\"')
+
+
+def _label_str(names: tuple[str, ...], values: tuple[str, ...]) -> str:
+    if not names:
+        return ""
+    pairs = ",".join(f'{n}="{_escape(v)}"' for n, v in zip(names, values))
+    return "{" + pairs + "}"
+
+
+class _Family:
+    """Base: a named metric with optional labels and per-family lock."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "", labelnames: tuple[str, ...] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._lock = threading.Lock()
+        self._children: dict[tuple[str, ...], object] = {}
+
+    def labels(self, *values) -> "_Family":
+        if len(values) != len(self.labelnames):
+            raise ValueError(
+                f"{self.name}: expected {len(self.labelnames)} label values, "
+                f"got {len(values)}"
+            )
+        key = tuple(str(v) for v in values)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._make_child(key)
+                self._children[key] = child
+            return child
+
+    def _make_child(self, key):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def remove(self, *values) -> None:
+        """Drop a labeled child (e.g. engine ``unregister``)."""
+        key = tuple(str(v) for v in values)
+        with self._lock:
+            self._children.pop(key, None)
+
+    def _snapshot_children(self) -> dict[tuple[str, ...], object]:
+        with self._lock:
+            return dict(self._children)
+
+
+class Counter(_Family):
+    """Monotonic counter.  Unlabeled families are their own child."""
+
+    kind = "counter"
+
+    def __init__(self, name, help="", labelnames=()):
+        super().__init__(name, help, labelnames)
+        self._value = 0
+
+    def _make_child(self, key):
+        return Counter(self.name)
+
+    def inc(self, n: int | float = 1):
+        """Increment and return the new value (atomic fetch-and-add, so
+        cadence logic like canary sampling needs no outer lock)."""
+        with self._lock:
+            self._value += n
+            return self._value
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+    def snapshot(self) -> dict:
+        if self.labelnames:
+            return {k: c.value for k, c in self._snapshot_children().items()}
+        return {(): self.value}
+
+
+class Gauge(_Family):
+    """Last-value gauge; supports set/inc/dec and callable backing."""
+
+    kind = "gauge"
+
+    def __init__(self, name, help="", labelnames=(), fn=None):
+        super().__init__(name, help, labelnames)
+        self._value = 0
+        self._fn = fn
+
+    def _make_child(self, key):
+        return Gauge(self.name)
+
+    def set(self, v) -> None:
+        with self._lock:
+            self._value = v
+
+    def inc(self, n=1) -> None:
+        with self._lock:
+            self._value += n
+
+    def dec(self, n=1) -> None:
+        with self._lock:
+            self._value -= n
+
+    @property
+    def value(self):
+        if self._fn is not None:
+            return self._fn()
+        with self._lock:
+            return self._value
+
+    def snapshot(self) -> dict:
+        if self.labelnames:
+            return {k: g.value for k, g in self._snapshot_children().items()}
+        return {(): self.value}
+
+
+class Histogram(_Family):
+    """Cumulative-bucket histogram (Prometheus semantics) + percentiles.
+
+    Keeps per-bucket counts, sum, and count; ``quantile()`` interpolates
+    from the bucket counts (good enough for p50/p99 reporting without
+    retaining raw samples).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name, help="", labelnames=(), buckets=DEFAULT_BUCKETS):
+        super().__init__(name, help, labelnames)
+        self.buckets = tuple(sorted(buckets))
+        self._counts = [0] * (len(self.buckets) + 1)  # +inf tail
+        self._sum = 0.0
+        self._count = 0
+
+    def _make_child(self, key):
+        return Histogram(self.name, buckets=self.buckets)
+
+    def observe(self, v: float) -> None:
+        i = bisect_right(self.buckets, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile from bucket counts (upper-bound interp)."""
+        with self._lock:
+            total = self._count
+            counts = list(self._counts)
+        if total == 0:
+            return 0.0
+        target = q * total
+        acc = 0
+        for i, c in enumerate(counts):
+            acc += c
+            if acc >= target:
+                return self.buckets[i] if i < len(self.buckets) else self.buckets[-1]
+        return self.buckets[-1]
+
+    def snapshot(self) -> dict:
+        if self.labelnames:
+            return {
+                k: h.snapshot()[()] for k, h in self._snapshot_children().items()
+            }
+        with self._lock:
+            return {
+                (): {
+                    "count": self._count,
+                    "sum": self._sum,
+                    "counts": list(self._counts),
+                }
+            }
+
+
+class MetricsRegistry:
+    """Named metric families + invariant assertions + text exposition."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._families: dict[str, _Family] = {}
+        self._invariants: list[tuple[str, object]] = []
+
+    # -- registration (get-or-create; one definition per name) ---------
+    def _get_or_create(self, cls, name, help, labelnames, **kw):
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is not None:
+                if not isinstance(fam, cls):
+                    raise TypeError(
+                        f"metric {name!r} already registered as {fam.kind}"
+                    )
+                return fam
+            fam = cls(name, help, tuple(labelnames), **kw)
+            self._families[name] = fam
+            return fam
+
+    def counter(self, name, help="", labelnames=()) -> Counter:
+        return self._get_or_create(Counter, name, help, labelnames)
+
+    def gauge(self, name, help="", labelnames=(), fn=None) -> Gauge:
+        if fn is not None:
+            with self._lock:
+                fam = self._families.get(name)
+                if fam is None:
+                    fam = Gauge(name, help, tuple(labelnames), fn=fn)
+                    self._families[name] = fam
+                return fam
+        return self._get_or_create(Gauge, name, help, labelnames)
+
+    def histogram(self, name, help="", labelnames=(), buckets=DEFAULT_BUCKETS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labelnames, buckets=buckets)
+
+    # -- invariants -----------------------------------------------------
+    def register_invariant(self, description: str, fn) -> None:
+        """``fn`` returns True when the invariant holds.  Checked from a
+        consistent snapshot by ``check_invariants()`` — the one place the
+        serving accounting closures (``ok+fallbacks == completed`` etc.)
+        are asserted."""
+        with self._lock:
+            self._invariants.append((description, fn))
+
+    def check_invariants(self) -> list[str]:
+        with self._lock:
+            invs = list(self._invariants)
+        return [desc for desc, fn in invs if not fn()]
+
+    # -- reading --------------------------------------------------------
+    def families(self) -> list[_Family]:
+        with self._lock:
+            return list(self._families.values())
+
+    def get(self, name: str) -> _Family | None:
+        with self._lock:
+            return self._families.get(name)
+
+    def value(self, name: str, *labels):
+        """Convenience scalar read; 0 for a never-touched labeled child."""
+        fam = self.get(name)
+        if fam is None:
+            return 0
+        if labels:
+            key = tuple(str(v) for v in labels)
+            with fam._lock:
+                child = fam._children.get(key)
+            return child.value if child is not None else 0
+        return fam.value
+
+    def snapshot(self) -> dict:
+        """Plain-dict snapshot of every family.
+
+        Takes only registry/family locks (no engine, breaker, or batcher
+        locks) so callers can assemble composite ``stats()`` output
+        without nested lock acquisition.
+        """
+        out = {}
+        for fam in self.families():
+            out[fam.name] = {
+                "kind": fam.kind,
+                "labelnames": fam.labelnames,
+                "values": fam.snapshot(),
+            }
+        return out
+
+    # -- Prometheus text exposition ------------------------------------
+    def expose(self) -> str:
+        """Render every family in the Prometheus text format v0.0.4."""
+        lines: list[str] = []
+        for fam in self.families():
+            if fam.help:
+                lines.append(f"# HELP {fam.name} {fam.help}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            if isinstance(fam, Histogram):
+                snaps = (
+                    fam.snapshot()
+                    if fam.labelnames
+                    else {(): fam.snapshot()[()]}
+                )
+                for key, snap in snaps.items():
+                    base = list(zip(fam.labelnames, key))
+                    acc = 0
+                    for i, ub in enumerate(list(fam.buckets) + ["+Inf"]):
+                        acc += snap["counts"][i]
+                        le = "+Inf" if ub == "+Inf" else _fmt_value(float(ub))
+                        ls = _label_str(
+                            tuple(n for n, _ in base) + ("le",),
+                            tuple(str(v) for _, v in base) + (le,),
+                        )
+                        lines.append(f"{fam.name}_bucket{ls} {acc}")
+                    ls = _label_str(fam.labelnames, key)
+                    lines.append(f"{fam.name}_sum{ls} {_fmt_value(snap['sum'])}")
+                    lines.append(f"{fam.name}_count{ls} {snap['count']}")
+            else:
+                for key, v in fam.snapshot().items():
+                    ls = _label_str(fam.labelnames, key)
+                    lines.append(f"{fam.name}{ls} {_fmt_value(v)}")
+        return "\n".join(lines) + "\n"
+
+
+_default = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """Process-wide registry (solver/store/frontend metrics land here)."""
+    return _default

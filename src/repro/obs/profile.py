@@ -1,0 +1,120 @@
+"""Opt-in sampled per-segment timing for ``PlanProgram`` execution.
+
+``REPRO_OBS_SAMPLE=N`` profiles one in every N program calls (0 or unset
+disables).  On a sampled call the program runs segment-by-segment with a
+device sync after each, so the host-side clock brackets real execution —
+which is why it is sampled, not always-on: the sync defeats the async
+dispatch pipelining the steady-state path relies on.
+
+Each sampled segment is recorded here (count / total / min / max seconds,
+plus the wave composition of the segment) and emitted as a
+``profile/segment`` span into the shared tracer, so the overlap and
+materialization decisions from the segment splitter are inspectable in
+Perfetto next to the request spans.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+from .trace import tracer
+
+__all__ = ["ProgramProfiler", "profiler", "configure_sampling"]
+
+ENV_SAMPLE = "REPRO_OBS_SAMPLE"
+
+
+def _env_sample_every() -> int:
+    try:
+        return max(0, int(os.environ.get(ENV_SAMPLE, "0")))
+    except ValueError:
+        return 0
+
+
+class ProgramProfiler:
+    """Aggregates sampled per-segment timings keyed by (program, impl)."""
+
+    def __init__(self, sample_every: int | None = None):
+        self.sample_every = (
+            _env_sample_every() if sample_every is None else max(0, int(sample_every))
+        )
+        self._lock = threading.Lock()
+        self._calls: dict[str, int] = {}
+        self._segments: dict[tuple[str, str, int], dict] = {}
+        self._sampled_calls = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.sample_every > 0
+
+    def should_sample(self, key: str) -> bool:
+        """One in ``sample_every`` calls per program key."""
+        if self.sample_every <= 0:
+            return False
+        with self._lock:
+            n = self._calls.get(key, 0) + 1
+            self._calls[key] = n
+            if n % self.sample_every:
+                return False
+            self._sampled_calls += 1
+            return True
+
+    def record_segment(self, program: str, impl: str, seg_index: int,
+                       seconds: float, *, n_tasks: int = 0,
+                       waves: tuple[int, ...] = ()) -> None:
+        key = (program, impl, seg_index)
+        with self._lock:
+            agg = self._segments.get(key)
+            if agg is None:
+                agg = self._segments[key] = {
+                    "count": 0, "total_s": 0.0,
+                    "min_s": float("inf"), "max_s": 0.0,
+                    "n_tasks": n_tasks, "waves": tuple(waves),
+                }
+            agg["count"] += 1
+            agg["total_s"] += seconds
+            agg["min_s"] = min(agg["min_s"], seconds)
+            agg["max_s"] = max(agg["max_s"], seconds)
+        tracer().record(
+            f"{program}/seg{seg_index}", "profile",
+            time.perf_counter() - seconds, seconds,
+            {"impl": impl, "n_tasks": n_tasks, "waves": list(waves)},
+        )
+
+    def stats(self) -> dict:
+        with self._lock:
+            segs = {}
+            for (program, impl, idx), agg in self._segments.items():
+                segs.setdefault(program, {}).setdefault(impl, {})[idx] = {
+                    "count": agg["count"],
+                    "mean_s": agg["total_s"] / agg["count"] if agg["count"] else 0.0,
+                    "min_s": 0.0 if agg["min_s"] == float("inf") else agg["min_s"],
+                    "max_s": agg["max_s"],
+                    "n_tasks": agg["n_tasks"],
+                    "waves": list(agg["waves"]),
+                }
+            return {
+                "sample_every": self.sample_every,
+                "sampled_calls": self._sampled_calls,
+                "programs": segs,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._calls.clear()
+            self._segments.clear()
+            self._sampled_calls = 0
+
+
+_profiler = ProgramProfiler()
+
+
+def profiler() -> ProgramProfiler:
+    return _profiler
+
+
+def configure_sampling(sample_every: int) -> ProgramProfiler:
+    _profiler.sample_every = max(0, int(sample_every))
+    return _profiler

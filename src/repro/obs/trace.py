@@ -1,0 +1,201 @@
+"""Per-request span tracing into a bounded ring buffer.
+
+Spans cover the whole request path (admission → queue wait → batch
+coalesce → execute → fallback/canary) plus solver phases (fusion,
+enumeration, chunk-merge) and sampled program segments.  Recording is
+lock-cheap: one short lock around a ``deque(maxlen=...)`` append, and a
+single ``enabled`` check on the fast path when tracing is off.
+
+Export is Chrome-trace JSON (``chrome_trace()``), which Perfetto and
+``chrome://tracing`` both load directly; ``scripts/obs_dump.py`` writes
+it to disk.
+
+Span taxonomy (category / name):
+
+* ``request/admission``   — semaphore wait + deadline check in ``submit``
+* ``request/queue_wait``  — batcher enqueue → flush pick-up
+* ``request/batch_coalesce`` — stacking + batched submit of one bucket
+* ``request/execute``     — optimized program run (one clone dispatch)
+* ``request/fallback``    — plain-jit fallback run
+* ``request/canary``      — canary validation of a rebuilt program
+* ``solver/fuse``, ``solver/enumerate``, ``solver/chunk_merge``
+* ``store/load``, ``store/save``
+* ``frontend/trace``      — jaxpr capture + lowering
+* ``profile/segment``     — sampled per-segment timing (obs/profile.py)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+__all__ = ["Span", "Tracer", "tracer", "configure", "chrome_trace"]
+
+DEFAULT_CAPACITY = 4096
+
+
+def _env_truthy(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in {"1", "true", "on", "yes"}
+
+
+@dataclass
+class Span:
+    name: str
+    cat: str
+    start_s: float          # time.perf_counter() at span start
+    dur_s: float            # duration in seconds
+    tid: int                # recording thread id
+    args: dict = field(default_factory=dict)
+
+
+class _NullSpan:
+    """No-op context manager returned when tracing is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **kw):
+        return self
+
+
+_NULL = _NullSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("_tracer", "name", "cat", "args", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: dict):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, etype, exc, tb):
+        t1 = time.perf_counter()
+        if etype is not None:
+            self.args.setdefault("error", etype.__name__)
+        self._tracer.record(self.name, self.cat, self._t0, t1 - self._t0, self.args)
+        return False
+
+    def set(self, **kw):
+        self.args.update(kw)
+        return self
+
+
+class Tracer:
+    """Bounded span recorder.  ``enabled`` flips the whole thing off at
+    the cost of one attribute read per span site."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, enabled: bool | None = None):
+        if enabled is None:
+            enabled = _env_truthy("REPRO_OBS_TRACE")
+        self.enabled = bool(enabled)
+        self._lock = threading.Lock()
+        self._buf: deque[Span] = deque(maxlen=max(1, int(capacity)))
+        self._dropped = 0
+        self._recorded = 0
+
+    # -- recording ------------------------------------------------------
+    def span(self, name: str, cat: str = "request", **args):
+        """Context manager timing a block; no-op when disabled."""
+        if not self.enabled:
+            return _NULL
+        return _LiveSpan(self, name, cat, args)
+
+    def record(self, name: str, cat: str, start_s: float, dur_s: float,
+               args: dict | None = None) -> None:
+        """Record a completed span (used for queue waits measured after
+        the fact, where a context manager can't straddle threads)."""
+        if not self.enabled:
+            return
+        sp = Span(name, cat, start_s, dur_s, threading.get_ident(),
+                  args or {})
+        with self._lock:
+            if len(self._buf) == self._buf.maxlen:
+                self._dropped += 1
+            self._buf.append(sp)
+            self._recorded += 1
+
+    # -- reading --------------------------------------------------------
+    def snapshot(self) -> list[Span]:
+        with self._lock:
+            return list(self._buf)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+            self._dropped = 0
+            self._recorded = 0
+
+    def resize(self, capacity: int) -> None:
+        with self._lock:
+            self._buf = deque(self._buf, maxlen=max(1, int(capacity)))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "enabled": self.enabled,
+                "capacity": self._buf.maxlen,
+                "buffered": len(self._buf),
+                "recorded": self._recorded,
+                "dropped": self._dropped,
+            }
+
+
+def chrome_trace(spans: list[Span]) -> dict:
+    """Render spans as a Chrome-trace / Perfetto-loadable JSON object.
+
+    Complete events (``ph: "X"``) with microsecond timestamps relative
+    to the earliest span, one virtual thread row per recording thread.
+    """
+    base = min((s.start_s for s in spans), default=0.0)
+    pid = os.getpid()
+    events = []
+    tids: dict[int, int] = {}
+    for s in spans:
+        tid = tids.setdefault(s.tid, len(tids))
+        events.append({
+            "name": s.name,
+            "cat": s.cat,
+            "ph": "X",
+            "ts": (s.start_s - base) * 1e6,
+            "dur": s.dur_s * 1e6,
+            "pid": pid,
+            "tid": tid,
+            "args": s.args,
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def dump_chrome_trace(spans: list[Span], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(spans), f)
+
+
+_tracer = Tracer()
+
+
+def tracer() -> Tracer:
+    """Process-wide tracer shared by every layer."""
+    return _tracer
+
+
+def configure(enabled: bool | None = None, capacity: int | None = None) -> Tracer:
+    if enabled is not None:
+        _tracer.enabled = bool(enabled)
+    if capacity is not None:
+        _tracer.resize(capacity)
+    return _tracer

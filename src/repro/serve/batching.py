@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from ..ft.serve import DeadlineExceeded, EngineOverloaded
+from ..obs import tracer as _obs_tracer
 
 log = logging.getLogger("repro.serve.batching")
 
@@ -166,18 +167,49 @@ class Batcher:
         self._bucket_entries: dict[tuple[str, int], str] = {}
         self._stackers: dict[int, Any] = {}
         self._splitters: dict[int, Any] = {}
-        # -- counters (under self._cond's lock) ---------------------------
-        self.enqueued = 0
-        self.completed = 0
-        self.ok = 0                 # served by a batched/solo optimized path
-        self.fallbacks = 0          # served by the engine's plain-jit path
-        self.expired = 0            # deadline passed before execution
-        self.rejected = 0           # queue-depth admission rejections
-        self.errors = 0             # futures resolved with an exception
-        self.batch_failures = 0     # whole-batch failures (chaos/evicted)
-        self.resubmitted = 0        # requests re-run singly after a failure
-        self.flushes: dict[int, int] = {}        # bucket -> flush count
-        self.batched_requests: dict[int, int] = {}  # bucket -> live reqs
+        # -- counters (engine's MetricsRegistry: one definition each, the
+        # same numbers behind stats() and the Prometheus exposition; the
+        # legacy attribute names stay readable as properties) ------------
+        m = engine.metrics
+        self._tr = _obs_tracer()
+        self._c_enqueued = m.counter(
+            "repro_batch_enqueued_total", "requests accepted into the queue")
+        self._c_completed = m.counter(
+            "repro_batch_completed_total", "futures resolved with a result")
+        self._c_ok = m.counter(
+            "repro_batch_ok_total",
+            "served by a batched/solo optimized path")
+        self._c_fallbacks = m.counter(
+            "repro_batch_fallbacks_total",
+            "served by the engine's plain-jit path")
+        self._c_expired = m.counter(
+            "repro_batch_expired_total", "deadline passed before execution")
+        self._c_rejected = m.counter(
+            "repro_batch_rejected_total", "queue-depth admission rejections")
+        self._c_errors = m.counter(
+            "repro_batch_errors_total", "futures resolved with an exception")
+        self._c_batch_failures = m.counter(
+            "repro_batch_failures_total",
+            "whole-batch failures (chaos/evicted)")
+        self._c_resubmitted = m.counter(
+            "repro_batch_resubmitted_total",
+            "requests re-run singly after a batch failure")
+        self._c_flushes = m.counter(
+            "repro_batch_flushes_total", "bucket flushes", ("bucket",))
+        self._c_batched_requests = m.counter(
+            "repro_batch_batched_requests_total",
+            "live requests served batched", ("bucket",))
+        self._h_queue_latency = m.histogram(
+            "repro_batch_queue_seconds", "enqueue-to-result latency")
+        # the batching accounting closures, asserted in the registry like
+        # the engine's (meaningful once the queue drains)
+        m.register_invariant(
+            "batching: ok+fallbacks==completed",
+            lambda: self.ok + self.fallbacks == self.completed)
+        m.register_invariant(
+            "batching: completed+expired+errors==enqueued (at quiescence)",
+            lambda: self.completed + self.expired + self.errors
+            == self.enqueued)
         self._lat = deque(maxlen=cfg.stats_window)
         self._t_first: float | None = None
         self._t_last: float | None = None
@@ -185,6 +217,57 @@ class Batcher:
             target=self._loop, daemon=True,
             name=f"repro-batcher-{id(engine):x}")
         self._thread.start()
+
+    # -- legacy counter shims (registry-backed, read-only) -----------------
+    @property
+    def enqueued(self) -> int:
+        return self._c_enqueued.value
+
+    @property
+    def completed(self) -> int:
+        return self._c_completed.value
+
+    @property
+    def ok(self) -> int:
+        return self._c_ok.value
+
+    @property
+    def fallbacks(self) -> int:
+        return self._c_fallbacks.value
+
+    @property
+    def expired(self) -> int:
+        return self._c_expired.value
+
+    @property
+    def rejected(self) -> int:
+        return self._c_rejected.value
+
+    @property
+    def errors(self) -> int:
+        return self._c_errors.value
+
+    @property
+    def batch_failures(self) -> int:
+        return self._c_batch_failures.value
+
+    @property
+    def resubmitted(self) -> int:
+        return self._c_resubmitted.value
+
+    @property
+    def flushes(self) -> dict[int, int]:
+        return {int(k[0]): v for k, v in self._c_flushes.snapshot().items()}
+
+    @property
+    def batched_requests(self) -> dict[int, int]:
+        return {int(k[0]): v
+                for k, v in self._c_batched_requests.snapshot().items()}
+
+    def check_invariants(self) -> list[str]:
+        """Violated accounting closures (empty when all hold); meaningful
+        once the queue has drained."""
+        return self._engine.metrics.check_invariants()
 
     # -- submission (caller threads) --------------------------------------
     def submit(self, name: str, inputs, *,
@@ -224,7 +307,7 @@ class Batcher:
                        None if deadline is None else now + deadline)
         with self._cond:
             if self._depth >= self.cfg.max_queue:
-                self.rejected += 1
+                self._c_rejected.inc()
                 raise EngineOverloaded(
                     f"{name}: batching queue full "
                     f"({self._depth}/{self.cfg.max_queue} pending)")
@@ -232,7 +315,7 @@ class Batcher:
                 self._t_first = now
             self._pending.setdefault(name, []).append(req)
             self._depth += 1
-            self.enqueued += 1
+            self._c_enqueued.inc()
             self._cond.notify()
         return req.future
 
@@ -262,8 +345,7 @@ class Batcher:
                         if not r.future.done():
                             r.future.set_exception(exc)
                             failed += 1
-                    with self._cond:
-                        self.errors += failed
+                    self._c_errors.inc(failed)
                     log.exception("%s: batch flush failed", name)
             with self._cond:
                 if self._stop and self._depth == 0 \
@@ -309,10 +391,16 @@ class Batcher:
                 r.future.set_exception(DeadlineExceeded(
                     f"{name}: deadline expired after "
                     f"{now - r.t_enqueue:.3f}s in the batching queue"))
-                with self._cond:
-                    self.expired += 1
+                self._c_expired.inc()
             else:
                 live.append(r)
+        if self._tr.enabled:
+            # queue-wait spans: enqueue -> flush pick-up, one per request
+            base = time.perf_counter()
+            for r in live:
+                wait = now - r.t_enqueue
+                self._tr.record("queue_wait", "request", base - wait, wait,
+                                {"entry": name})
         if not live:
             return
         if live[0].flat is None:
@@ -331,14 +419,16 @@ class Batcher:
             chaos = eng.sc.chaos
             if chaos is not None:
                 chaos.on_batch(bname)
-            out = self._run_batched(bname, live, bucket)
+            with self._tr.span("batch_coalesce", "request", entry=name,
+                               bucket=bucket, live=n):
+                out = self._run_batched(bname, live, bucket)
         except Exception as exc:
             # the batch itself failed (injected chaos, evicted bucket
             # entry, fallback=False engine): every batchmate goes back
             # through submit() alone so one poisoned request can only
             # fail itself — the per-request breaker path
+            self._c_batch_failures.inc()
             with self._cond:
-                self.batch_failures += 1
                 if (name, bucket) in self._bucket_entries \
                         and isinstance(exc, KeyError):
                     del self._bucket_entries[(name, bucket)]
@@ -347,10 +437,8 @@ class Batcher:
             self._run_singly(name, live, resubmit=True)
             return
         done = time.monotonic()
-        with self._cond:
-            self.flushes[bucket] = self.flushes.get(bucket, 0) + 1
-            self.batched_requests[bucket] = \
-                self.batched_requests.get(bucket, 0) + n
+        self._c_flushes.labels(bucket).inc()
+        self._c_batched_requests.labels(bucket).inc(n)
         for j, r in enumerate(live):
             r.future.set_result(out[j])
             self._finish(r, out.path, done)
@@ -402,8 +490,7 @@ class Batcher:
         uncoalesced (but still resilient) path."""
         eng = self._engine
         if resubmit:
-            with self._cond:
-                self.resubmitted += len(live)
+            self._c_resubmitted.inc(len(live))
         for r in live:
             budget = None if r.deadline_at is None \
                 else max(r.deadline_at - time.monotonic(), 0.001)
@@ -413,23 +500,23 @@ class Batcher:
                                  _info=info)
             except Exception as exc:
                 r.future.set_exception(exc)
-                with self._cond:
-                    if isinstance(exc, DeadlineExceeded):
-                        self.expired += 1
-                    else:
-                        self.errors += 1
+                if isinstance(exc, DeadlineExceeded):
+                    self._c_expired.inc()
+                else:
+                    self._c_errors.inc()
             else:
                 r.future.set_result(out)
                 self._finish(r, info.get("path", "optimized"),
                              time.monotonic())
 
     def _finish(self, r: _Request, path: str, now: float) -> None:
+        self._c_completed.inc()
+        if path == "fallback":
+            self._c_fallbacks.inc()
+        else:
+            self._c_ok.inc()
+        self._h_queue_latency.observe(now - r.t_enqueue)
         with self._cond:
-            self.completed += 1
-            if path == "fallback":
-                self.fallbacks += 1
-            else:
-                self.ok += 1
             self._lat.append(now - r.t_enqueue)
             self._t_last = now
 
@@ -541,40 +628,51 @@ class Batcher:
         """The ``stats()["batching"]`` block: queue depth, accounting
         counters, p50/p99 queue-to-result latency, throughput over the
         busy window, and per-bucket occupancy (how full flushed buckets
-        actually were)."""
+        actually were).
+
+        Lock discipline mirrors ``PlanEngine.stats()``: registry counters
+        are snapshotted first (family locks only), then ``self._cond``
+        covers only the batcher's own plain state."""
+        flushes = self.flushes
+        batched = self.batched_requests
+        completed = self.completed
+        counters = {
+            "enqueued": self.enqueued,
+            "completed": completed,
+            "ok": self.ok,
+            "fallbacks": self.fallbacks,
+            "expired": self.expired,
+            "rejected": self.rejected,
+            "errors": self.errors,
+            "batch_failures": self.batch_failures,
+            "resubmitted": self.resubmitted,
+        }
+        buckets = {}
+        for b in self.buckets:
+            f = flushes.get(b, 0)
+            r = batched.get(b, 0)
+            if f:
+                buckets[str(b)] = {
+                    "flushes": f, "requests": r,
+                    "occupancy": round(r / (f * b), 4)}
         with self._cond:
             lat = sorted(self._lat)
-            buckets = {}
-            for b in self.buckets:
-                f = self.flushes.get(b, 0)
-                r = self.batched_requests.get(b, 0)
-                if f:
-                    buckets[str(b)] = {
-                        "flushes": f, "requests": r,
-                        "occupancy": round(r / (f * b), 4)}
+            depth = self._depth
             span = None
             if self._t_first is not None and self._t_last is not None:
                 span = max(self._t_last - self._t_first, 1e-9)
-            return {
-                "max_batch": self.buckets[-1],
-                "max_wait_ms": self.cfg.max_wait_s * 1e3,
-                "queue_depth": self._depth,
-                "max_queue": self.cfg.max_queue,
-                "enqueued": self.enqueued,
-                "completed": self.completed,
-                "ok": self.ok,
-                "fallbacks": self.fallbacks,
-                "expired": self.expired,
-                "rejected": self.rejected,
-                "errors": self.errors,
-                "batch_failures": self.batch_failures,
-                "resubmitted": self.resubmitted,
-                "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
-                "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
-                "throughput_rps": round(self.completed / span, 3)
-                if span else 0.0,
-                "buckets": buckets,
-            }
+        return {
+            "max_batch": self.buckets[-1],
+            "max_wait_ms": self.cfg.max_wait_s * 1e3,
+            "queue_depth": depth,
+            "max_queue": self.cfg.max_queue,
+            **counters,
+            "p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+            "p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+            "throughput_rps": round(completed / span, 3)
+            if span else 0.0,
+            "buckets": buckets,
+        }
 
 
 def _percentile(sorted_vals, q: float) -> float:

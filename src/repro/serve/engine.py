@@ -55,6 +55,9 @@ from ..ft.serve import (BreakerState, ChaosPlan, CircuitBreaker,
                         DeadlineExceeded, EngineOverloaded, MiscompileError)
 from ..ft.straggler import StragglerConfig, StragglerMonitor
 from ..models import model as M
+from ..obs import (Counter, DriftConfig, DriftDetector, MetricsRegistry,
+                   configure_logging)
+from ..obs import tracer as _obs_tracer
 from .batching import BATCH_SEP, BatchConfig, Batcher
 
 log = logging.getLogger("repro.serve")
@@ -134,6 +137,13 @@ class ServeConfig:
     # power-of-two buckets served by batched re-traces.  None keeps
     # submit_async() as a thin synchronous wrapper.
     batching: BatchConfig | None = None
+    # Cost-model drift detection (repro.obs.drift): one in
+    # ``drift.sample_every`` optimized requests is timed (device sync)
+    # and folded into a per-entry EMA; when observed/predicted latency
+    # leaves the threshold band the entry's plan is re-solved through
+    # the background plan-refresh path.  None uses DriftConfig()
+    # defaults; DriftConfig(enabled=False) turns it off.
+    drift: DriftConfig | None = None
 
 
 class Engine:
@@ -189,25 +199,51 @@ def _rtol_for(dtype) -> float:
     return 2e-2 if np.dtype(dtype).itemsize <= 2 else 2e-4
 
 
+# Per-entry counter families: one definition each, labeled by entry name.
+# The engine's MetricsRegistry owns them; _EntryHealth holds the labeled
+# children so the hot path increments without any engine lock.
+_ENTRY_COUNTERS = (
+    ("ok", "repro_entry_ok_total", "optimized-path successes"),
+    ("failures", "repro_entry_failures_total",
+     "optimized-path failures (any site)"),
+    ("fallbacks", "repro_entry_fallbacks_total",
+     "requests served by the plain-jit path"),
+    ("attempts", "repro_entry_attempts_total",
+     "optimized-path tries (canary cadence)"),
+    ("canaries", "repro_entry_canaries_total", "canary validations run"),
+    ("canary_failures", "repro_entry_canary_failures_total",
+     "canary validation mismatches"),
+    ("deadline_misses", "repro_entry_deadline_misses_total",
+     "admitted requests finished past budget"),
+    ("resolve_attempts", "repro_entry_resolve_attempts_total",
+     "background re-solve tries"),
+    ("recovered", "repro_entry_recovered_total",
+     "successful background recoveries"),
+)
+
+
 @dataclasses.dataclass
 class _EntryHealth:
     """Per-entry resilience state: breaker, counters, recovery plumbing.
 
     Counter conservation contract (the accounting tests pin it down):
     ``ok + fallbacks == per_name[name]`` — every admitted request ends in
-    exactly one bucket, whatever failed along the way.
+    exactly one bucket, whatever failed along the way.  The counters are
+    labeled children of the engine's :class:`MetricsRegistry` families
+    (``repro_entry_*_total{entry=...}``), so the same numbers back both
+    ``stats()`` and the Prometheus exposition.
     """
 
     breaker: CircuitBreaker
-    ok: int = 0                     # optimized-path successes
-    failures: int = 0               # optimized-path failures (any site)
-    fallbacks: int = 0              # requests served by the plain-jit path
-    attempts: int = 0               # optimized-path tries (canary cadence)
-    canaries: int = 0
-    canary_failures: int = 0
-    deadline_misses: int = 0
-    resolve_attempts: int = 0       # background re-solve tries
-    recovered: int = 0              # successful background recoveries
+    ok: Counter
+    failures: Counter
+    fallbacks: Counter
+    attempts: Counter
+    canaries: Counter
+    canary_failures: Counter
+    deadline_misses: Counter
+    resolve_attempts: Counter
+    recovered: Counter
     recovering: bool = False
     rotated: tuple[int, ...] = ()   # pool clones rotated out (straggler)
     straggler: StragglerMonitor | None = None
@@ -225,13 +261,13 @@ class _EntryHealth:
 
     def stats(self, has_plan: bool = True) -> dict:
         return {"state": self.state(has_plan),
-                "ok": self.ok, "failures": self.failures,
-                "fallbacks": self.fallbacks,
-                "canaries": self.canaries,
-                "canary_failures": self.canary_failures,
-                "deadline_misses": self.deadline_misses,
-                "resolve_attempts": self.resolve_attempts,
-                "recovered": self.recovered,
+                "ok": self.ok.value, "failures": self.failures.value,
+                "fallbacks": self.fallbacks.value,
+                "canaries": self.canaries.value,
+                "canary_failures": self.canary_failures.value,
+                "deadline_misses": self.deadline_misses.value,
+                "resolve_attempts": self.resolve_attempts.value,
+                "recovered": self.recovered.value,
                 "recovering": self.recovering,
                 "rotated_clones": list(self.rotated),
                 "breaker": self.breaker.stats(),
@@ -283,8 +319,54 @@ class PlanEngine:
         # names registered through register_function: the TracedFunction
         # binds positional args to graph arrays and rebuilds result pytrees
         self._functions: dict[str, Any] = {}
-        self.requests = 0
-        self.per_name: dict[str, int] = {}
+        # -- observability -------------------------------------------------
+        # One registry per engine: the single source of truth behind both
+        # stats() and the Prometheus exposition (metrics.expose()).  The
+        # legacy int attributes (requests, rejected, ...) are read-only
+        # property shims over these counters.
+        configure_logging()
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._tr = _obs_tracer()
+        self._c_requests = m.counter(
+            "repro_requests_total", "admitted requests")
+        self._c_per_name = m.counter(
+            "repro_entry_requests_total", "admitted requests per entry",
+            ("entry",))
+        self._c_rejected = m.counter(
+            "repro_rejected_total", "admission (overload) rejections")
+        self._c_deadline_rejected = m.counter(
+            "repro_deadline_rejected_total",
+            "deadline expired before admission")
+        self._c_deadline_misses = m.counter(
+            "repro_deadline_misses_total",
+            "admitted requests finished past budget")
+        self._c_plan_refreshes = m.counter(
+            "repro_plan_refreshes_total",
+            "stale plans re-solved in background")
+        self._c_buckets_presolved = m.counter(
+            "repro_buckets_presolved_total",
+            "batch buckets pre-solved at register time")
+        self._c_drift_triggers = m.counter(
+            "repro_drift_triggers_total",
+            "cost-model drift events that triggered a plan refresh")
+        self._g_inflight = m.gauge(
+            "repro_inflight", "requests currently admitted")
+        self._h_latency = m.histogram(
+            "repro_request_seconds", "submit wall time by serving path",
+            ("path",))
+        self._entry_families = {
+            attr: m.counter(mname, help, ("entry",))
+            for attr, mname, help in _ENTRY_COUNTERS
+        }
+        self._c_breaker_transitions = m.counter(
+            "repro_breaker_transitions_total",
+            "circuit-breaker state transitions", ("entry", "state"))
+        m.register_invariant(
+            "ok+fallbacks==requests per entry (at quiescence)",
+            self._accounting_closed)
+        self._drift = DriftDetector(self.sc.drift or DriftConfig(),
+                                    clock=time.monotonic)
         # -- resilience state ---------------------------------------------
         self._health: dict[str, _EntryHealth] = {}
         # entries whose trace/solve failed at registration: served by the
@@ -295,10 +377,6 @@ class PlanEngine:
         # register_function provenance so background re-solve can retry
         # with the caller's solver budget/hardware
         self._reg_meta: dict[str, dict] = {}
-        self.rejected = 0             # admission (overload) rejections
-        self.deadline_rejected = 0    # deadline expired before admission
-        self.deadline_misses = 0      # admitted but finished past budget
-        self._inflight_now = 0
         self._inflight_sem = (
             threading.BoundedSemaphore(self.sc.max_inflight)
             if self.sc.max_inflight else None)
@@ -307,11 +385,62 @@ class PlanEngine:
         # background plan-refresh / bucket-presolve threads (stale store
         # hits, register-time bucket pre-solving) — joined in shutdown()
         self._bg_threads: list[threading.Thread] = []
-        self.plan_refreshes = 0       # stale plans re-solved in background
-        self.buckets_presolved = 0    # batch buckets pre-solved at register
+        self._refreshing: set[str] = set()   # names with a refresh in flight
         # lazy: the batcher thread only starts on first submit_async()
         self._batcher: Batcher | None = None
         self._batcher_lock = threading.Lock()
+
+    # -- legacy counter shims (registry-backed, read-only) -----------------
+    @property
+    def requests(self) -> int:
+        return self._c_requests.value
+
+    @property
+    def per_name(self) -> dict[str, int]:
+        return {k[0]: v for k, v in self._c_per_name.snapshot().items()}
+
+    @property
+    def rejected(self) -> int:
+        return self._c_rejected.value
+
+    @property
+    def deadline_rejected(self) -> int:
+        return self._c_deadline_rejected.value
+
+    @property
+    def deadline_misses(self) -> int:
+        return self._c_deadline_misses.value
+
+    @property
+    def plan_refreshes(self) -> int:
+        return self._c_plan_refreshes.value
+
+    @property
+    def buckets_presolved(self) -> int:
+        return self._c_buckets_presolved.value
+
+    def _accounting_closed(self) -> bool:
+        """The per-entry conservation closure, asserted in one place:
+        every admitted request ends in exactly one of ok/fallbacks.
+        Holds at quiescence (no requests in flight)."""
+        per_name = self.per_name
+        with self._lock:
+            health = dict(self._health)
+        return all(
+            h.ok.value + h.fallbacks.value == per_name.get(name, 0)
+            for name, h in health.items())
+
+    def check_invariants(self) -> list[str]:
+        """Violated accounting invariants (empty when all closures hold).
+        The batcher registers its closures in the same registry, so this
+        covers both tiers.  Meaningful at quiescence; in-flight requests
+        legitimately sit between the 'admitted' and 'resolved' counters."""
+        return self.metrics.check_invariants()
+
+    def note_predicted_latency(self, name: str, latency_s: float) -> None:
+        """Seed/override the drift detector's predicted latency for an
+        entry (benches use this to simulate a miscalibrated cost model)."""
+        self._drift.note_predicted(name, latency_s)
 
     # -- registration -----------------------------------------------------
     def register(self, name: str, graph, plan) -> None:
@@ -329,9 +458,19 @@ class PlanEngine:
             self._keys = {k: v for k, v in self._keys.items()  # traced glue
                           if k[0] != name}
             self._health.pop(name, None)      # fresh entry, fresh health
+            for fam in self._entry_families.values():
+                fam.remove(name)              # ... fresh labeled counters
+            for st in BreakerState:
+                self._c_breaker_transitions.remove(name, st.value)
             self._fallback_only.pop(name, None)
             self._fallback_fns.pop(name, None)
             self._reference_fns.pop(name, None)
+        # fresh plan, fresh drift baseline (resets the observed EMA)
+        predicted = getattr(plan, "latency_s", 0.0) if plan is not None else 0.0
+        if predicted > 0.0:
+            self._drift.note_predicted(name, predicted)
+        else:
+            self._drift.forget(name)
 
     def register_function(self, name: str, fn, example_inputs,
                           *, solver_opts=None, hw=None):
@@ -403,6 +542,10 @@ class PlanEngine:
         revalidate, and atomically swap the entry — requests keep being
         served by the stale plan until the fresh one is proven."""
         impl = self._current_impl()
+        with self._lock:
+            if name in self._refreshing:
+                return                  # one refresh in flight per entry
+            self._refreshing.add(name)
 
         def _loop():
             from ..ft.serve import BackoffPolicy
@@ -411,25 +554,34 @@ class PlanEngine:
                 mult=self.sc.resolve_backoff_mult,
                 max_s=self.sc.resolve_backoff_max_s,
                 retries=self.sc.resolve_max_retries)
-            for delay in policy.delays():
-                if self._stop.wait(delay):
+            try:
+                for attempt, delay in enumerate(policy.delays(), start=1):
+                    if self._stop.wait(delay):
+                        return
+                    with self._lock:
+                        if name not in self._registry:
+                            return      # unregistered while refreshing
+                    try:
+                        chaos = self.sc.chaos
+                        if chaos is not None:
+                            chaos.on_refresh(name)
+                        self._rebuild(name, impl)
+                    except Exception as exc:
+                        log.info(
+                            "plan-refresh entry=%s attempt=%d "
+                            "backoff_s=%.3f failed: %s",
+                            name, attempt, delay, exc)
+                        continue
+                    self._c_plan_refreshes.inc()
+                    log.info(
+                        "plan-refresh entry=%s attempt=%d succeeded: "
+                        "stale plan refreshed in background", name, attempt)
                     return
+                log.warning("plan-refresh entry=%s gave up after %d "
+                            "attempts", name, self.sc.resolve_max_retries)
+            finally:
                 with self._lock:
-                    if name not in self._registry:
-                        return          # unregistered while refreshing
-                try:
-                    chaos = self.sc.chaos
-                    if chaos is not None:
-                        chaos.on_refresh(name)
-                    self._rebuild(name, impl)
-                except Exception as exc:
-                    log.info("%s: stale-plan refresh attempt failed (%s)",
-                             name, exc)
-                    continue
-                with self._lock:
-                    self.plan_refreshes += 1
-                log.info("%s: stale plan refreshed in background", name)
-                return
+                    self._refreshing.discard(name)
 
         t = threading.Thread(target=_loop, daemon=True,
                              name=f"repro-plan-refresh-{name}")
@@ -446,10 +598,10 @@ class PlanEngine:
             try:
                 n = self.batcher().presolve(name, stop=self._stop)
             except Exception as exc:
-                log.info("%s: bucket presolve failed (%s)", name, exc)
+                log.info("bucket-presolve entry=%s failed: %s", name, exc)
                 return
-            with self._lock:
-                self.buckets_presolved += n
+            self._c_buckets_presolved.inc(n)
+            log.info("bucket-presolve entry=%s buckets=%d done", name, n)
 
         t = threading.Thread(target=_loop, daemon=True,
                              name=f"repro-presolve-{name}")
@@ -458,10 +610,15 @@ class PlanEngine:
         t.start()
 
     def unregister(self, name: str) -> None:
+        self._c_per_name.remove(name)
+        for fam in self._entry_families.values():
+            fam.remove(name)
+        for st in BreakerState:
+            self._c_breaker_transitions.remove(name, st.value)
+        self._drift.forget(name)
         with self._lock:
             self._registry.pop(name, None)
             self._last_use.pop(name, None)
-            self.per_name.pop(name, None)
             self._functions.pop(name, None)
             self._keys = {k: v for k, v in self._keys.items()
                           if k[0] != name}
@@ -539,10 +696,15 @@ class PlanEngine:
         with self._lock:
             health = self._health.get(name)
             if health is None:
+                trans = self._c_breaker_transitions
                 health = self._health[name] = _EntryHealth(
-                    breaker=CircuitBreaker(self.sc.breaker_threshold,
-                                           self.sc.breaker_reset_s,
-                                           clock=self._clock))
+                    breaker=CircuitBreaker(
+                        self.sc.breaker_threshold,
+                        self.sc.breaker_reset_s, clock=self._clock,
+                        on_transition=lambda state, _n=name:
+                            trans.labels(_n, state).inc()),
+                    **{attr: fam.labels(name)
+                       for attr, fam in self._entry_families.items()})
             return health
 
     def _resolve(self, name: str, impl: str):
@@ -635,28 +797,26 @@ class PlanEngine:
             timeout = self.sc.admission_timeout_s
             if deadline is not None:
                 timeout = min(timeout, deadline)
-            if not sem.acquire(timeout=max(0.0, timeout)):
+            with self._tr.span("admission", "request", entry=name):
+                admitted = sem.acquire(timeout=max(0.0, timeout))
+            if not admitted:
                 if deadline is not None \
                         and time.monotonic() - t0 >= deadline:
-                    with self._lock:
-                        self.deadline_rejected += 1
+                    self._c_deadline_rejected.inc()
                     raise DeadlineExceeded(
                         f"{name}: deadline {deadline:.3f}s expired before "
                         "admission (engine at max_inflight="
                         f"{self.sc.max_inflight})")
-                with self._lock:
-                    self.rejected += 1
+                self._c_rejected.inc()
                 raise EngineOverloaded(
                     f"{name}: {self.sc.max_inflight} requests in flight; "
                     f"none drained within {timeout:.3f}s")
         try:
-            with self._lock:
-                self._inflight_now += 1
+            self._g_inflight.inc()
             return self._submit_admitted(name, inputs, t0, deadline,
                                          _info)
         finally:
-            with self._lock:
-                self._inflight_now -= 1
+            self._g_inflight.dec()
             if sem is not None:
                 sem.release()
 
@@ -676,9 +836,9 @@ class PlanEngine:
             # bugs: they raise before the request is counted and never
             # touch the breaker
             env = tf.bind_args(tuple(inputs))
+        self._c_requests.inc()
+        self._c_per_name.labels(name).inc()
         with self._lock:
-            self.requests += 1
-            self.per_name[name] = self.per_name.get(name, 0) + 1
             self._last_use[name] = time.monotonic()
         if has_plan and health.breaker.allow():
             try:
@@ -690,17 +850,20 @@ class PlanEngine:
                 if not self.sc.fallback:
                     raise
             else:
-                with self._lock:
-                    health.ok += 1
+                health.ok.inc()
                 health.breaker.record_success()
                 self._note_deadline(t0, deadline, health)
+                self._h_latency.labels("optimized").observe(
+                    time.monotonic() - t0)
                 if _info is not None:
                     _info["path"] = "optimized"
                 if env is not None:
                     return tf.unbind(out, env)
                 return out
-        out = self._run_fallback(name, tf, env, inputs, health)
+        with self._tr.span("fallback", "request", entry=name):
+            out = self._run_fallback(name, tf, env, inputs, health)
         self._note_deadline(t0, deadline, health)
+        self._h_latency.labels("fallback").observe(time.monotonic() - t0)
         if _info is not None:
             _info["path"] = "fallback"
         return out
@@ -715,36 +878,58 @@ class PlanEngine:
         prog = self._resolve(name, impl)
         if chaos is not None:
             chaos.on_execute(name)
-        with self._lock:
-            attempt = health.attempts
-            health.attempts += 1
+        attempt = health.attempts.inc() - 1
         canary = self.sc.canary_every > 0 \
             and attempt % self.sc.canary_every == 0
+        # one in drift.sample_every optimized runs is timed (device sync)
+        # to feed the cost-model drift EMA; sampling keeps the sync off
+        # the steady-state path
+        drift_sample = self._drift.config.enabled \
+            and self._drift.should_sample(name)
         timed = canary or (self.sc.straggler is not None
                            and prog.pool_size > 1) \
-            or self.sc.nan_guard == "always"
+            or self.sc.nan_guard == "always" or drift_sample
         t_run = time.monotonic()
-        out, clone = prog.run(env)
-        if chaos is not None:
-            delay = chaos.execute_delay(name, clone)
-            if delay > 0.0:
-                time.sleep(delay)
-            out = chaos.corrupt_outputs(name, out)
-        if timed:
-            jax.block_until_ready(list(out.values()))
+        with self._tr.span("execute", "request", entry=name) as sp:
+            out, clone = prog.run(env)
+            if chaos is not None:
+                delay = chaos.execute_delay(name, clone)
+                if delay > 0.0:
+                    time.sleep(delay)
+                out = chaos.corrupt_outputs(name, out)
+            if timed:
+                jax.block_until_ready(list(out.values()))
+            sp.set(clone=clone, timed=timed)
         elapsed = time.monotonic() - t_run
+        if drift_sample:
+            self._note_drift(name, elapsed)
         if self.sc.straggler is not None and prog.pool_size > 1:
             self._observe_clone(name, health, prog, clone, elapsed)
         guard_nan = self.sc.nan_guard == "always" \
             or (canary and self.sc.nan_guard == "canary")
         if canary:
-            with self._lock:
-                health.canaries += 1
+            health.canaries.inc()
         if guard_nan:
             self._guard_finite(name, out)
         if canary:
-            self._validate_canary(name, tf, env, out, health)
+            with self._tr.span("canary", "request", entry=name):
+                self._validate_canary(name, tf, env, out, health)
         return out
+
+    def _note_drift(self, name: str, elapsed: float) -> None:
+        """Fold one observed optimized-path latency into the drift EMA;
+        a threshold crossing re-prices the plan through the background
+        refresh path (the cost model drifted from reality)."""
+        ev = self._drift.observe(name, elapsed)
+        if ev is None:
+            return
+        self._c_drift_triggers.inc()
+        log.warning(
+            "drift entry=%s predicted_s=%.3g observed_ema_s=%.3g "
+            "ratio=%.2f samples=%d — re-solving in background",
+            ev.name, ev.predicted_s, ev.observed_ema_s, ev.ratio,
+            ev.samples)
+        self._start_plan_refresh(name)
 
     def _guard_finite(self, name: str, out: dict) -> None:
         for k, v in out.items():
@@ -784,8 +969,7 @@ class PlanEngine:
             raise MiscompileError(
                 f"{name}: canary oracle execution failed: {exc}") from exc
         if bad:
-            with self._lock:
-                health.canary_failures += 1
+            health.canary_failures.inc()
             raise MiscompileError(
                 f"{name}: canary validation mismatch vs the plain-jit "
                 "oracle — corrupted kernel output")
@@ -811,8 +995,8 @@ class PlanEngine:
         """Serve the request on the plain-jit path (guaranteed-correct
         baseline): ``jax.jit(fn)`` for function entries, the statement
         reference oracle for graph registrations."""
+        health.fallbacks.inc()
         with self._lock:
-            health.fallbacks += 1
             fb = self._fallback_only.get(name)
         if fb is not None:
             return fb(*tuple(inputs))
@@ -828,9 +1012,8 @@ class PlanEngine:
     def _note_deadline(self, t0: float, deadline: float | None,
                        health: _EntryHealth) -> None:
         if deadline is not None and time.monotonic() - t0 > deadline:
-            with self._lock:
-                self.deadline_misses += 1
-                health.deadline_misses += 1
+            self._c_deadline_misses.inc()
+            health.deadline_misses.inc()
 
     def _observe_clone(self, name: str, health: _EntryHealth, prog,
                        clone: int, elapsed: float) -> None:
@@ -853,8 +1036,8 @@ class PlanEngine:
     # -- quarantine + background re-solve ---------------------------------
     def _note_failure(self, name: str, impl: str, health: _EntryHealth,
                       exc: Exception) -> None:
+        health.failures.inc()
         with self._lock:
-            health.failures += 1
             health.last_error = f"{type(exc).__name__}: {exc}"
         if isinstance(exc, MiscompileError):
             # wrong values are never a transient: quarantine immediately
@@ -897,29 +1080,34 @@ class PlanEngine:
             mult=self.sc.resolve_backoff_mult,
             max_s=self.sc.resolve_backoff_max_s,
             retries=self.sc.resolve_max_retries)
-        for delay in policy.delays():
+        for attempt, delay in enumerate(policy.delays(), start=1):
             if self._stop.wait(delay):
                 break
             with self._lock:
                 if name not in self._registry:
                     break               # unregistered while quarantined
-                health.resolve_attempts += 1
+            health.resolve_attempts.inc()
             try:
                 self._rebuild(name, impl)
             except Exception as exc:
                 with self._lock:
                     health.last_error = f"{type(exc).__name__}: {exc}"
-                log.info("%s: background re-solve attempt failed (%s)",
-                         name, exc)
+                log.info(
+                    "re-solve entry=%s attempt=%d backoff_s=%.3f "
+                    "failed: %s", name, attempt, delay, exc)
                 continue
             health.breaker.record_success()     # closes: next submit is
-            with self._lock:                    # optimized again
-                health.recovered += 1
+            health.recovered.inc()              # optimized again
+            with self._lock:
                 health.recovering = False
             health.recovered_event.set()
-            log.info("%s: background re-solve succeeded; breaker closed",
-                     name)
+            log.info("re-solve entry=%s attempt=%d succeeded; breaker "
+                     "closed", name, attempt)
             return
+        else:
+            log.warning("re-solve entry=%s gave up after %d attempts; "
+                        "entry stays on the fallback path",
+                        name, self.sc.resolve_max_retries)
         with self._lock:
             health.recovering = False
 
@@ -988,6 +1176,10 @@ class PlanEngine:
                 self._functions[name] = tf
                 self._fallback_only.pop(name, None)
             self._reference_fns.pop(name, None)
+        # the re-solved plan is the new drift baseline (EMA resets)
+        predicted = getattr(plan, "latency_s", 0.0) if plan is not None else 0.0
+        if predicted > 0.0:
+            self._drift.note_predicted(name, predicted)
 
     # -- statistics -------------------------------------------------------
     def stats(self) -> dict:
@@ -995,35 +1187,50 @@ class PlanEngine:
         cache (size/capacity, hits/misses/evictions, per-entry detail),
         per-pool occupancy of every program this engine serves, the
         frontend trace cache (hits, size, per-entry coverage) feeding
-        ``register_function`` entries, and the ``resilience`` block —
+        ``register_function`` entries, the ``resilience`` block —
         admission rejections, deadline accounting, and per-entry health
-        (breaker state, fallbacks, canary results, recovery progress)."""
+        (breaker state, fallbacks, canary results, recovery progress) —
+        and the ``drift`` block (cost-model predicted vs. observed
+        latency per entry).
+
+        Lock discipline: the metrics-registry and drift snapshots come
+        first (their own locks only), then the engine lock covers a
+        plain-data copy; every sub-object that takes its own lock
+        (breakers, batcher, program cache, trace cache) is consulted
+        with NO engine lock held — ``stats()`` can never deadlock
+        against a concurrent ``submit`` storm."""
         from ..codegen import cache_stats, persistent_cache_dir, program_cache
         from ..frontend import trace_cache_stats
         cache = program_cache()
+        # 1) registry-backed counters + drift: no engine lock, no nesting
+        requests = self._c_requests.value
+        per_name = self.per_name
+        drift = self._drift.stats()
+        plan_store = {
+            "dir": self.sc.plan_store_dir,
+            "refreshes": self._c_plan_refreshes.value,
+            "buckets_presolved": self._c_buckets_presolved.value,
+        }
+        # 2) engine lock: copy plain data only — no sub-object calls
         with self._lock:
             keys = dict(self._keys)
-            requests = self.requests
             registered = len(self._registry)
-            per_name = dict(self.per_name)
             functions = sorted(self._functions)
-            health = {name: h.stats(
-                has_plan=self._registry.get(name, (None, None))[1]
-                is not None)
+            health_refs = {
+                name: (h, self._registry.get(name, (None, None))[1]
+                       is not None)
                 for name, h in self._health.items()}
-            plan_store = {
-                "dir": self.sc.plan_store_dir,
-                "refreshes": self.plan_refreshes,
-                "buckets_presolved": self.buckets_presolved,
-            }
-            resilience = {
-                "rejected": self.rejected,
-                "deadline_rejected": self.deadline_rejected,
-                "deadline_misses": self.deadline_misses,
-                "inflight": self._inflight_now,
-                "max_inflight": self.sc.max_inflight,
-                "entries": health,
-            }
+        # 3) sub-objects with their own locks, engine lock released
+        health = {name: h.stats(has_plan)
+                  for name, (h, has_plan) in health_refs.items()}
+        resilience = {
+            "rejected": self._c_rejected.value,
+            "deadline_rejected": self._c_deadline_rejected.value,
+            "deadline_misses": self._c_deadline_misses.value,
+            "inflight": self._g_inflight.value,
+            "max_inflight": self.sc.max_inflight,
+            "entries": health,
+        }
         pools = {}
         for (name, impl), key in keys.items():
             entry = cache.entry(key)
@@ -1052,4 +1259,5 @@ class PlanEngine:
                 "trace_cache": trace_cache_stats(),
                 "plan_store": plan_store,
                 "resilience": resilience,
+                "drift": drift,
                 **s}

@@ -26,6 +26,7 @@ import time
 
 from ..core.fingerprint import graph_fingerprint, solver_options_fingerprint
 from ..core.plan import ExecutionPlan
+from ..obs import tracer as _obs_tracer
 from ..ft.artifacts import (ArtifactError, atomic_write_json, load_json,
                             quarantine_file)
 
@@ -99,23 +100,29 @@ class PlanStore:
         ``stale_hw=True`` so the caller can serve it now and re-solve in
         the background instead of blocking.
         """
-        gfp, hfp, ofp = self.key(graph, hw, opts)
-        plan = self._read(self._path(gfp, hfp, ofp))
-        if plan is not None:
-            self.hits += 1
-            return plan
-        if allow_stale:
-            pattern = os.path.join(self.root, f"{gfp}-*-{ofp}.json")
-            stale = sorted(glob.glob(pattern),
-                           key=lambda p: os.path.getmtime(p), reverse=True)
-            for path in stale:
-                plan = self._read(path)
-                if plan is not None:
-                    plan.stale_hw = True
-                    self.stale_hits += 1
-                    return plan
-        self.misses += 1
-        return None
+        with _obs_tracer().span("load", "store",
+                                allow_stale=allow_stale) as sp:
+            gfp, hfp, ofp = self.key(graph, hw, opts)
+            plan = self._read(self._path(gfp, hfp, ofp))
+            if plan is not None:
+                self.hits += 1
+                sp.set(outcome="hit")
+                return plan
+            if allow_stale:
+                pattern = os.path.join(self.root, f"{gfp}-*-{ofp}.json")
+                stale = sorted(glob.glob(pattern),
+                               key=lambda p: os.path.getmtime(p),
+                               reverse=True)
+                for path in stale:
+                    plan = self._read(path)
+                    if plan is not None:
+                        plan.stale_hw = True
+                        self.stale_hits += 1
+                        sp.set(outcome="stale_hit")
+                        return plan
+            self.misses += 1
+            sp.set(outcome="miss")
+            return None
 
     def _read(self, path: str) -> ExecutionPlan | None:
         if not os.path.exists(path):
@@ -145,19 +152,20 @@ class PlanStore:
         path, or ``None`` for plans not worth keeping (no configs)."""
         if not plan.configs:
             return None
-        gfp, hfp, ofp = self.key(graph, hw, opts)
-        payload = {
-            "schema": SCHEMA_VERSION,
-            "graph_fp": gfp, "hw_fp": hfp, "opts_fp": ofp,
-            "created_s": time.time(),
-            "plan": plan.to_jsonable(),
-        }
-        os.makedirs(self.root, exist_ok=True)
-        path = atomic_write_json(self._path(gfp, hfp, ofp), payload,
-                                 checksum=True)
-        self.writes += 1
-        self._evict()
-        return path
+        with _obs_tracer().span("save", "store"):
+            gfp, hfp, ofp = self.key(graph, hw, opts)
+            payload = {
+                "schema": SCHEMA_VERSION,
+                "graph_fp": gfp, "hw_fp": hfp, "opts_fp": ofp,
+                "created_s": time.time(),
+                "plan": plan.to_jsonable(),
+            }
+            os.makedirs(self.root, exist_ok=True)
+            path = atomic_write_json(self._path(gfp, hfp, ofp), payload,
+                                     checksum=True)
+            self.writes += 1
+            self._evict()
+            return path
 
     def _evict(self) -> None:
         entries = glob.glob(os.path.join(self.root, "*.json"))
